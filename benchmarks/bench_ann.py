@@ -1,0 +1,148 @@
+"""ANN benchmarks — one per paper figure (§5.1).
+
+  fig5  — sketch memory vs stream size N for eta 0.2..0.8 (sublinearity)
+  fig6/7— S-ANN vs JL: approximate recall@50 + (c,r)-accuracy vs compression
+          over the epsilon grid (c = 1 + eps)
+  fig8  — recall + query throughput (QPS): JL k-sweep vs S-ANN eta-sweep
+
+Emits ``name,us_per_call,derived`` CSV rows (benchmarks.run contract).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import jl, sann, theory
+from .common import sift_like, syn_ppp, timeit, true_topk
+
+N_STORE = 12_000
+N_QUERY = 128
+
+
+def _build_sann(data, eta, r, c, seed=0, L=12, k=6, bucket_cap=32):
+    cfg = sann.SANNConfig(dim=data.shape[1], n_max=len(data), eta=eta, r=r,
+                          c=c, w=2.0 * r, L=L, k=k, bucket_cap=bucket_cap)
+    cfg, params, state = sann.sann_init(cfg, jax.random.PRNGKey(seed))
+    state = sann.sann_insert_stream(state, params, jnp.asarray(data),
+                                    jax.random.PRNGKey(seed + 1), cfg)
+    return cfg, params, state
+
+
+def _r_for_eta(data, queries, eta: float) -> float:
+    """r sized so an r-ball holds ~3·n^eta points — the paper's Poisson
+    regime m >= C·n^eta (Thm 3.1), under which sampling at rate n^-eta
+    leaves the query ball non-empty w.h.p."""
+    n = len(data)
+    frac = min(0.5, 3.0 * n**eta / n)
+    sub = queries[:32]
+    qn = (sub ** 2).sum(1)[:, None]
+    dn = (data ** 2).sum(1)[None, :]
+    d2 = np.maximum(qn + dn - 2 * sub @ data.T, 0)
+    return float(np.quantile(np.sqrt(d2), frac)) + 1e-3
+
+
+def _approx_recall(ids, dists, gt_d50, eps):
+    """ann-benchmarks 'approximate recall@50': retrieved points within
+    (1+eps) * distance-of-true-50th-NN count as hits."""
+    ok = (ids >= 0) & (dists <= (1.0 + eps) * gt_d50[:, None] + 1e-9)
+    return float(ok.sum(1).mean() / ids.shape[1])
+
+
+def fig5_memory_scaling(rows):
+    for N in (1_000, 10_000, 40_000, 160_000):
+        dense_bytes = N * 128 * 4
+        for eta in (0.2, 0.5, 0.8):
+            cfg = sann.SANNConfig(dim=128, n_max=N, eta=eta, r=0.5, c=1.5,
+                                  L=12, k=6).resolved()
+            b = sann.sann_bytes(cfg)
+            rows.append((f"ann.fig5.bytes.N{N}.eta{eta}", 0.0,
+                         f"{b};compression={b/dense_bytes:.4f}"))
+
+
+def fig6_7_recall_accuracy(rows):
+    for name, data_fn in (("syn32", lambda: syn_ppp(N_STORE, 32, 1)),
+                          ("siftlike", lambda: sift_like(N_STORE, 2))):
+        data = data_fn()
+        rng = np.random.default_rng(3)
+        queries = data[rng.choice(len(data), N_QUERY, replace=False)] \
+            + 0.01 * rng.standard_normal((N_QUERY, data.shape[1])).astype(np.float32)
+        gt50 = true_topk(data, queries, 50)
+        gt_d50 = np.sqrt(((queries - data[gt50[:, -1]]) ** 2).sum(1))
+        for eps in (0.5, 0.8):
+            c = 1.0 + eps
+            for eta in (0.3, 0.5, 0.7):
+                r = _r_for_eta(data, queries, eta)
+                cfg, params, state = _build_sann(data, eta, r, c)
+                t0 = time.perf_counter()
+                ids, dists = jax.block_until_ready(sann.sann_query_topk_batch(
+                    state, params, jnp.asarray(queries), cfg, 50))
+                dt = (time.perf_counter() - t0) * 1e6 / N_QUERY
+                recall = _approx_recall(np.asarray(ids), np.asarray(dists),
+                                        gt_d50, eps)
+                # (c,r)-accuracy: a point within c*r returned when the true
+                # NN is within r (Problem 1.1 contract)
+                res = sann.sann_query_batch(state, params,
+                                            jnp.asarray(queries), cfg)
+                nn_dist = np.sqrt(((queries - data[gt50[:, 0]]) ** 2).sum(1))
+                applicable = nn_dist <= r
+                okq = np.asarray(res.distance) <= c * r + 1e-6
+                acc = float((okq & applicable).sum()) / max(applicable.sum(), 1)
+                comp = sann.sann_bytes(cfg) / (len(data) * data.shape[1] * 4)
+                rows.append((f"ann.fig7.sann.{name}.eps{eps}.eta{eta}", dt,
+                             f"recall50={recall:.3f};cr_acc={acc:.3f};"
+                             f"compression={comp:.3f};r={r:.3f}"))
+            # JL baseline at matched compression rates
+            r_jl = _r_for_eta(data, queries, 0.5)
+            for kproj in (8, 16, 32):
+                jcfg = jl.JLConfig(dim=data.shape[1], k=kproj,
+                                   capacity=len(data))
+                st = jl.jl_init(jcfg, jax.random.PRNGKey(9))
+                st = jl.jl_insert_stream(st, jnp.asarray(data), jcfg)
+                t0 = time.perf_counter()
+                idx, _ = jax.block_until_ready(
+                    jl.jl_query_batch(st, jnp.asarray(queries), jcfg, topk=50))
+                dt = (time.perf_counter() - t0) * 1e6 / N_QUERY
+                idx = np.asarray(idx)
+                true_d = np.sqrt(((queries[:, None] - data[idx]) ** 2).sum(-1))
+                recall = _approx_recall(idx, true_d, gt_d50, eps)
+                near = true_d[:, 0]
+                nn_dist = np.sqrt(((queries - data[gt50[:, 0]]) ** 2).sum(1))
+                applicable = nn_dist <= r_jl
+                acc = float(((near <= c * r_jl) & applicable).sum()) \
+                    / max(applicable.sum(), 1)
+                comp = jl.jl_bytes(jcfg) / (len(data) * data.shape[1] * 4)
+                rows.append((f"ann.fig7.jl.{name}.eps{eps}.k{kproj}", dt,
+                             f"recall50={recall:.3f};cr_acc={acc:.3f};"
+                             f"compression={comp:.3f}"))
+
+
+def fig8_throughput(rows):
+    data = syn_ppp(8_000, 32, 5)
+    rng = np.random.default_rng(6)
+    queries = jnp.asarray(
+        data[rng.choice(len(data), 100, replace=False)]
+        + 0.01 * rng.standard_normal((100, 32)).astype(np.float32))
+    for eta in (0.2, 0.5, 0.8):
+        r = _r_for_eta(data, np.asarray(queries), eta)
+        cfg, params, state = _build_sann(data, eta, r, 2.0)
+        q = jax.jit(lambda s, qs: sann.sann_query_batch(s, params, qs, cfg))
+        us = timeit(q, state, queries)
+        res = q(state, queries)
+        rows.append((f"ann.fig8.sann.eta{eta}", us / 100,
+                     f"qps={1e8/us:.0f};found={float(res.found.mean()):.3f}"))
+    for kproj in (8, 16, 32):
+        jcfg = jl.JLConfig(dim=32, k=kproj, capacity=len(data))
+        st = jl.jl_init(jcfg, jax.random.PRNGKey(11))
+        st = jl.jl_insert_stream(st, jnp.asarray(data), jcfg)
+        q = jax.jit(lambda s, qs: jl.jl_query_batch(s, qs, jcfg, topk=1))
+        us = timeit(q, st, queries)
+        rows.append((f"ann.fig8.jl.k{kproj}", us / 100, f"qps={1e8/us:.0f}"))
+
+
+def run(rows):
+    fig5_memory_scaling(rows)
+    fig6_7_recall_accuracy(rows)
+    fig8_throughput(rows)

@@ -1,0 +1,51 @@
+"""Pallas kernel microbenches (interpret-mode correctness + jnp-oracle
+timing on CPU; the kernels target TPU — see DESIGN.md §5)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+from .common import timeit
+
+
+def run(rows):
+    key = jax.random.PRNGKey(0)
+    # srp_hash oracle throughput
+    x = jax.random.normal(key, (4096, 128))
+    proj = jax.random.normal(key, (128, 64))
+    mix = (jax.random.randint(key, (16, 4), 1, 2**30).astype(jnp.uint32) | 1)
+    f = jax.jit(lambda x: ref.srp_hash_ref(x, proj, mix, 1024))
+    us = timeit(f, x)
+    rows.append(("kernel.srp_hash.4096x128", us,
+                 f"hashes_per_s={4096e6/us:.0f}"))
+
+    # race histogram
+    codes = jax.random.randint(key, (4096, 16), 0, 512, jnp.int32)
+    f = jax.jit(lambda c: ref.race_update_ref(jnp.zeros((16, 512), jnp.int32), c))
+    us = timeit(f, codes)
+    rows.append(("kernel.race_hist.4096x16", us,
+                 f"updates_per_s={4096e6/us:.0f}"))
+
+    # candidate scoring
+    q = jax.random.normal(key, (128,))
+    c = jax.random.normal(key, (1024, 128))
+    f = jax.jit(lambda q, c: ref.cand_score_ref(q, c))
+    us = timeit(f, q, c)
+    rows.append(("kernel.cand_score.1024x128", us,
+                 f"scores_per_s={1024e6/us:.0f}"))
+
+    # sketch decode attention: pruned vs full block visit count
+    S, bs, Hkv, G, dh = 8192, 512, 2, 4, 64
+    k = jax.random.normal(key, (S, Hkv, dh))
+    v = jax.random.normal(key, (S, Hkv, dh))
+    qq = jax.random.normal(key, (Hkv, G, dh))
+    nb = S // bs
+    for frac, tag in ((1.0, "full"), (0.25, "pruned4x")):
+        live = jnp.arange(nb) < max(1, int(nb * frac))
+        f = jax.jit(lambda q, k, v, live: ref.sketch_decode_attn_ref(
+            q, k, v, live, jnp.int32(S), bs))
+        us = timeit(f, qq, k, v, live)
+        rows.append((f"kernel.sketch_decode.{tag}.S{S}", us,
+                     f"visited_blocks={int(live.sum())}/{nb}"))

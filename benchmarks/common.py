@@ -1,0 +1,95 @@
+"""Shared benchmark infrastructure: synthetic datasets + timing.
+
+Dataset note (DESIGN.md §7): sift1m / fashion-mnist / news-headlines /
+ROSIS are not available offline; these are dimension-matched synthetic
+surrogates following the paper's own syn-32 protocol (PPP) and its
+Monte-Carlo Gaussian-mixture protocol for KDE.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def timeit(fn, *args, repeats: int = 3, warmup: int = 1):
+    """Median wall time (µs) of fn(*args) with block_until_ready."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(ts))
+
+
+def syn_ppp(n: int, d: int, seed: int = 0) -> np.ndarray:
+    """The paper's syn-32 protocol: uniform samples from a Poisson point
+    process over a box (ball counts ~ Poisson)."""
+    rng = np.random.default_rng(seed)
+    return rng.uniform(0.0, 1.0, size=(n, d)).astype(np.float32)
+
+
+def sift_like(n: int, seed: int = 0) -> np.ndarray:
+    """128-d clustered vectors (SIFT-like local-descriptor statistics)."""
+    rng = np.random.default_rng(seed)
+    n_clusters = 64
+    centers = rng.normal(0, 1.0, size=(n_clusters, 128))
+    which = rng.integers(0, n_clusters, n)
+    return (centers[which] + 0.35 * rng.normal(size=(n, 128))).astype(np.float32)
+
+
+def fashion_like(n: int, seed: int = 0) -> np.ndarray:
+    """784-d low-rank 'image-like' vectors (10 classes, smooth structure)."""
+    rng = np.random.default_rng(seed)
+    basis = rng.normal(0, 1.0, size=(10, 32, 784))
+    cls = rng.integers(0, 10, n)
+    codes = rng.normal(0, 1.0, size=(n, 32))
+    out = np.einsum("nk,nkd->nd", codes,
+                    basis[cls]) / np.sqrt(32)
+    return (out + 0.1 * rng.normal(size=(n, 784))).astype(np.float32)
+
+
+def text_like(n: int, seed: int = 0) -> np.ndarray:
+    """384-d normalised mixture embeddings (news-headline-like)."""
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(0, 1.0, size=(20, 384))
+    which = rng.integers(0, 20, n)
+    x = centers[which] + 0.5 * rng.normal(size=(n, 384))
+    return (x / np.linalg.norm(x, axis=1, keepdims=True)).astype(np.float32)
+
+
+def hyperspectral_like(n: int, seed: int = 0) -> np.ndarray:
+    """103-d smooth positive spectra (ROSIS-like pixels)."""
+    rng = np.random.default_rng(seed)
+    base = np.cumsum(rng.normal(0, 0.3, size=(8, 103)), axis=1)
+    which = rng.integers(0, 8, n)
+    x = base[which] + 0.15 * rng.normal(size=(n, 103))
+    return x.astype(np.float32)
+
+
+def gaussian_mixture_stream(n: int, d: int = 200, n_comp: int = 10,
+                            seed: int = 0) -> np.ndarray:
+    """The paper's Monte-Carlo protocol: every n/n_comp points switch to a
+    new multivariate Gaussian."""
+    rng = np.random.default_rng(seed)
+    per = n // n_comp
+    out = []
+    for c in range(n_comp):
+        mu = rng.normal(0, 2.0, size=d)
+        out.append(mu + rng.normal(0, 1.0, size=(per, d)))
+    return np.concatenate(out).astype(np.float32)[:n]
+
+
+def true_topk(data: np.ndarray, queries: np.ndarray, k: int) -> np.ndarray:
+    """Exact top-k neighbour indices by L2 (ground truth)."""
+    d2 = ((queries[:, None, :] - data[None, :, :]) ** 2).sum(-1) \
+        if data.shape[1] * len(queries) * len(data) < 2e9 else None
+    if d2 is None:
+        qn = (queries ** 2).sum(1)[:, None]
+        dn = (data ** 2).sum(1)[None, :]
+        d2 = qn + dn - 2 * queries @ data.T
+    return np.argsort(d2, axis=1)[:, :k]

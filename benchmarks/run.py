@@ -1,0 +1,32 @@
+"""Benchmark harness entry point: one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (assignment contract).
+Usage: PYTHONPATH=src python -m benchmarks.run [--only ann|kde|kernels]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, choices=[None, "ann", "kde", "kernels"])
+    args = ap.parse_args()
+
+    from . import bench_ann, bench_kde, bench_kernels
+    rows: list[tuple] = []
+    suites = {"ann": bench_ann.run, "kde": bench_kde.run,
+              "kernels": bench_kernels.run}
+    for name, fn in suites.items():
+        if args.only and args.only != name:
+            continue
+        print(f"# suite: {name}", file=sys.stderr, flush=True)
+        fn(rows)
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.2f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

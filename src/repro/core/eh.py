@@ -1,0 +1,178 @@
+"""Exponential Histograms [DGIM02] in fixed-shape JAX (paper §2.4).
+
+Two variants:
+
+  * ``EH``      — Basic Counting over 0/1 streams (the SW-AKDE cell, §4.1).
+                  Buckets have power-of-two sizes, so the state is a dense
+                  ring of timestamps per size-level.  This is the canonical
+                  DGIM structure with its (1+eps') guarantee.
+  * ``SumEH``   — the [DGIM02] Sum generalisation for batch updates
+                  (Corollary 4.2): increments in [0, R] per timestep; buckets
+                  carry explicit sizes and are merged oldest-first to restore
+                  Invariant 1.
+
+Hardware adaptation (DESIGN.md §5.3): DGIM's linked-list buckets become a
+dense ``ts[levels, slots]`` array — Invariant 2 bounds buckets-per-size by
+k/2+1 and sizes by log levels, so the dense layout is exact, vmap-able over
+the RACE grid and scan-able over the stream.  Expired buckets are masked at
+query time and lazily compacted at update time (within a level, timestamps
+are sorted newest-first, so expiry is a suffix).
+
+All timestamps are int32 (streams up to 2^31 steps; int64 would need jax_enable_x64).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+@dataclasses.dataclass(frozen=True)
+class EHConfig:
+    window: int          # N — sliding-window length (timesteps)
+    k: int               # ceil(1/eps'): max k/2+1 buckets per level
+    levels: int          # number of size levels (2^0 .. 2^{levels-1})
+    slots: int           # per-level ring capacity = k//2 + 2
+
+    @staticmethod
+    def create(window: int, eps: float) -> "EHConfig":
+        import math
+        k = max(2, math.ceil(1.0 / eps))
+        levels = math.ceil(math.log2(max(window, 2))) + 2
+        return EHConfig(window=window, k=k, levels=levels, slots=k // 2 + 2)
+
+    @property
+    def max_buckets_per_level(self) -> int:
+        return self.k // 2 + 1
+
+
+class EHState(NamedTuple):
+    ts: jax.Array    # (levels, slots) int64 — bucket timestamps, newest-first
+    num: jax.Array   # (levels,) int32 — live buckets per level
+
+
+def eh_init(cfg: EHConfig) -> EHState:
+    return EHState(
+        ts=jnp.full((cfg.levels, cfg.slots), -1, dtype=jnp.int32),
+        num=jnp.zeros((cfg.levels,), dtype=jnp.int32),
+    )
+
+
+def _expire(state: EHState, t: jax.Array, cfg: EHConfig) -> EHState:
+    """Drop buckets whose timestamp left the window (suffix per level)."""
+    idx = jnp.arange(cfg.slots)[None, :]
+    live = (idx < state.num[:, None]) & (state.ts > t - cfg.window)
+    return EHState(ts=state.ts, num=live.sum(axis=1).astype(jnp.int32))
+
+
+def eh_add(state: EHState, t: jax.Array, cfg: EHConfig) -> EHState:
+    """Record a 1 at time ``t``; cascade merges to maintain DGIM invariants."""
+    state = _expire(state, t, cfg)
+    ts, num = state
+    # Insert a size-1 bucket at the front of level 0.
+    ts = ts.at[0].set(jnp.roll(ts[0], 1).at[0].set(t))
+    num = num.at[0].add(1)
+
+    def body(level, carry):
+        ts, num = carry
+        overflow = num[level] > cfg.max_buckets_per_level
+        # Two oldest buckets at this level live at indices num-1 (oldest) and
+        # num-2.  The merged bucket keeps the *newer* timestamp (DGIM: a
+        # bucket's timestamp is its most recent 1).
+        merged_ts = ts[level, jnp.maximum(num[level] - 2, 0)]
+        new_num_l = jnp.where(overflow, num[level] - 2, num[level])
+        pushed = jnp.roll(ts[level + 1], 1).at[0].set(merged_ts)
+        ts = ts.at[level + 1].set(jnp.where(overflow, pushed, ts[level + 1]))
+        num = num.at[level].set(new_num_l)
+        num = num.at[level + 1].add(jnp.where(overflow, 1, 0))
+        return ts, num
+
+    ts, num = lax.fori_loop(0, cfg.levels - 1, body, (ts, num))
+    return EHState(ts=ts, num=num)
+
+
+def eh_step(state: EHState, t: jax.Array, bit: jax.Array, cfg: EHConfig) -> EHState:
+    """Add ``bit`` (0 or 1) at time t — the scan-friendly entry point."""
+    added = eh_add(state, t, cfg)
+    keep = bit.astype(bool)
+    return jax.tree.map(lambda a, b: jnp.where(keep, a, b), added, _expire(state, t, cfg))
+
+
+def eh_query(state: EHState, t: jax.Array, cfg: EHConfig) -> jax.Array:
+    """DGIM estimate of #1s in (t - window, t]:  TOTAL - LAST/2.
+
+    (Paper §2.4 states the formula once as TOTAL-LAST/2 and once as
+    (TOTAL-LAST)/2; the former is DGIM's and is what we use.)
+    """
+    idx = jnp.arange(cfg.slots)[None, :]
+    live = (idx < state.num[:, None]) & (state.ts > t - cfg.window)
+    sizes = (jnp.int32(1) << jnp.arange(cfg.levels, dtype=jnp.int32))[:, None]
+    total = jnp.sum(jnp.where(live, sizes, 0))
+    # Oldest live bucket = the live bucket at the highest level (sizes are
+    # age-monotone), i.e. the largest level with any live bucket.
+    has = live.any(axis=1)
+    lvl = jnp.arange(cfg.levels)
+    last_level = jnp.max(jnp.where(has, lvl, -1))
+    last = jnp.where(last_level >= 0, jnp.int32(1) << last_level.astype(jnp.int32), 0)
+    est = total - last // 2
+    return jnp.maximum(est, 0).astype(jnp.float32)
+
+
+def eh_exact_upper(cfg: EHConfig) -> int:
+    """Worst-case live buckets — the paper's space bound (k/2+1)(log(2N/k)+1)+1."""
+    import math
+    return (cfg.k // 2 + 1) * (int(math.log2(max(2 * cfg.window / cfg.k, 2))) + 2)
+
+
+# ---------------------------------------------------------------------------
+# SumEH — batch updates (Corollary 4.2): per-step increments in [0, R]
+#
+# [DGIM02 §Sum]: arrival of value v at time t is *exactly* the arrival of v
+# unit elements sharing timestamp t.  We therefore reuse the provably-correct
+# binary EH cascade, applied v times (v <= batch_max, a small constant), with
+# levels sized for window*batch_max total mass.  This keeps the (1+eps')
+# guarantee verbatim — no bespoke canonical-form merge logic to get wrong.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SumEHConfig:
+    base: EHConfig
+    batch_max: int    # R — max increment per timestep
+
+    @staticmethod
+    def create(window: int, eps: float, batch_max: int) -> "SumEHConfig":
+        import math
+        k = max(2, math.ceil(1.0 / eps))
+        levels = math.ceil(math.log2(max(window * batch_max, 2))) + 2
+        base = EHConfig(window=window, k=k, levels=levels, slots=k // 2 + 2)
+        return SumEHConfig(base=base, batch_max=batch_max)
+
+    @property
+    def max_buckets(self) -> int:
+        return self.base.levels * self.base.slots
+
+
+SumEHState = EHState  # identical dense layout
+
+
+def sum_eh_init(cfg: SumEHConfig) -> SumEHState:
+    return eh_init(cfg.base)
+
+
+def sum_eh_add(state: SumEHState, t, value, cfg: SumEHConfig) -> SumEHState:
+    """Add ``value`` in [0, batch_max] unit elements, all stamped ``t``."""
+
+    def body(i, s):
+        added = eh_add(s, t, cfg.base)
+        return jax.tree.map(lambda a, b: jnp.where(i < value, a, b), added, s)
+
+    state = lax.fori_loop(0, cfg.batch_max, body, state)
+    # value == 0 still advances expiry lazily (query-side masking handles it).
+    return state
+
+
+def sum_eh_query(state: SumEHState, t, cfg: SumEHConfig) -> jax.Array:
+    return eh_query(state, t, cfg.base)

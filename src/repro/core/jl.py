@@ -1,0 +1,66 @@
+"""Johnson–Lindenstrauss baseline for streaming (c,r)-ANN (paper §5.1).
+
+The paper's comparison point: project every stream point to ``k`` dims with
+a Gaussian JL map and store *all* projected points.  Compression comes from
+k < d; query is a brute-force scan in the projected space.  This is the
+"only known strict one-pass" baseline the paper measures against.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class JLConfig:
+    dim: int
+    k: int          # projected dimension
+    capacity: int   # max stream points stored
+
+
+class JLState(NamedTuple):
+    proj: jax.Array      # (dim, k) scaled Gaussian map
+    store: jax.Array     # (capacity, k) projected points
+    n: jax.Array         # () int32
+
+
+def jl_init(cfg: JLConfig, key: jax.Array) -> JLState:
+    proj = jax.random.normal(key, (cfg.dim, cfg.k), jnp.float32) / jnp.sqrt(cfg.k)
+    return JLState(
+        proj=proj,
+        store=jnp.zeros((cfg.capacity, cfg.k), jnp.float32),
+        n=jnp.zeros((), jnp.int32),
+    )
+
+
+def jl_insert(state: JLState, x: jax.Array, cfg: JLConfig) -> JLState:
+    slot = state.n % cfg.capacity
+    return state._replace(store=state.store.at[slot].set(x @ state.proj), n=state.n + 1)
+
+
+def jl_insert_stream(state: JLState, xs: jax.Array, cfg: JLConfig) -> JLState:
+    def step(s, x):
+        return jl_insert(s, x, cfg), None
+    state, _ = jax.lax.scan(step, state, xs)
+    return state
+
+
+def jl_query(state: JLState, q: jax.Array, cfg: JLConfig, topk: int = 1):
+    """Brute scan in projected space; returns (indices, projected distances)."""
+    qp = q @ state.proj
+    d2 = jnp.sum((state.store - qp) ** 2, axis=-1)
+    live = jnp.arange(cfg.capacity) < state.n
+    d2 = jnp.where(live, d2, jnp.inf)
+    dists, idx = jax.lax.top_k(-d2, topk)
+    return idx, jnp.sqrt(-dists)
+
+
+def jl_query_batch(state: JLState, qs: jax.Array, cfg: JLConfig, topk: int = 1):
+    return jax.vmap(lambda q: jl_query(state, q, cfg, topk))(qs)
+
+
+def jl_bytes(cfg: JLConfig) -> int:
+    return cfg.capacity * cfg.k * 4 + cfg.dim * cfg.k * 4

@@ -1,0 +1,72 @@
+"""RACE — Repeated Array-of-Counts Estimator [CS20] (paper §2.3).
+
+The sketch is an (L, W) integer counter grid; row i is an ACE [LS18] indexed
+by an independent LSH function h_i.  ``E[A[i, h_i(q)]] = sum_x k^p(x, q)``
+(Theorem 2.3), so averaging rows estimates the (unnormalised) KDE.
+
+Supports the turnstile model natively: deletions decrement counters.
+
+The scatter-increment hot path has a Pallas kernel
+(`repro.kernels.race_update`); this module is the pure-JAX reference and the
+pytree/state layer used by the data-pipeline drift monitor.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import lsh
+
+
+class RACEState(NamedTuple):
+    counts: jax.Array   # (L, W) int32
+    n: jax.Array        # () int64 — signed stream size (insertions - deletions)
+
+
+def race_init(L: int, W: int) -> RACEState:
+    return RACEState(counts=jnp.zeros((L, W), jnp.int32), n=jnp.zeros((), jnp.int32))
+
+
+def race_update(state: RACEState, params, x: jax.Array, sign: int = 1) -> RACEState:
+    """Insert (sign=+1) or delete (sign=-1) one point — turnstile update."""
+    codes = lsh.hash_points(params, x)                       # (L,)
+    rows = jnp.arange(codes.shape[0])
+    counts = state.counts.at[rows, codes].add(jnp.int32(sign))
+    return RACEState(counts=counts, n=state.n + sign)
+
+
+def race_update_batch(state: RACEState, params, xs: jax.Array, sign: int = 1) -> RACEState:
+    """Vectorised batch insert: xs (B, d)."""
+    codes = lsh.hash_points(params, xs)                      # (B, L)
+    L, W = state.counts.shape
+    onehot = jax.nn.one_hot(codes, W, dtype=jnp.int32)       # (B, L, W)
+    counts = state.counts + jnp.int32(sign) * onehot.sum(axis=0)
+    return RACEState(counts=counts, n=state.n + sign * xs.shape[0])
+
+
+def race_query(state: RACEState, params, q: jax.Array, median_of_means: int = 0) -> jax.Array:
+    """Unnormalised KDE estimate at q (mean over rows; optional median-of-means
+
+    with ``median_of_means`` groups, the estimator [CS20] uses to bound the
+    failure probability)."""
+    codes = lsh.hash_points(params, q)                       # (L,)
+    vals = state.counts[jnp.arange(codes.shape[-1]), codes].astype(jnp.float32)
+    if median_of_means and median_of_means > 1:
+        g = median_of_means
+        L = vals.shape[-1]
+        usable = (L // g) * g
+        means = vals[..., :usable].reshape(*vals.shape[:-1], g, usable // g).mean(-1)
+        return jnp.median(means, axis=-1)
+    return vals.mean(-1)
+
+
+def race_query_batch(state: RACEState, params, qs: jax.Array, median_of_means: int = 0):
+    return jax.vmap(lambda q: race_query(state, params, q, median_of_means))(qs)
+
+
+def race_kde(state: RACEState, params, q: jax.Array, median_of_means: int = 0) -> jax.Array:
+    """Normalised density estimate: raw count / current stream size."""
+    raw = race_query(state, params, q, median_of_means)
+    return raw / jnp.maximum(state.n.astype(jnp.float32), 1.0)

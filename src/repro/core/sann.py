@@ -1,0 +1,220 @@
+"""S-ANN — Streaming (c,r)-Approximate Near Neighbor sketch (paper §3, Alg. 1).
+
+Faithful mechanics:
+  * uniform sampling: each arriving point is **kept with probability n^-eta**
+    (Fig. 1), so only O(n^{1-eta}) points are stored;
+  * L = ceil(n^rho / p1) hash tables, each keyed by a concatenation of
+    k = ceil(log_{1/p2} n) p-stable hashes (Lemma 3.2/3.3);
+  * query (Fig. 2): union of the L colliding buckets, truncated at **3L
+    candidates** (the paper's early-exit budget), return the closest if it is
+    within c*r, else NULL;
+  * turnstile deletions (§3.4): delete-by-value tombstones;
+  * batch queries (§3.3): vmap over the query set.
+
+Hardware adaptation (DESIGN.md §5.2): pointer-chasing hash buckets become
+fixed-capacity **ring buffers** of point ids — `tables (L, n_buckets,
+bucket_cap)` — so insertion is a dense scatter and querying is a dense
+gather + one distance matmul (`repro.kernels.cand_score`).  The early-exit
+("stop at 3L") becomes a post-gather priority truncation: we score the same
+<=3L candidates the sequential algorithm would, Lemma 3.2's Markov bound is
+unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import lsh, theory
+
+
+@dataclasses.dataclass(frozen=True)
+class SANNConfig:
+    dim: int
+    n_max: int             # upper bound on stream size (paper's n)
+    eta: float             # sampling exponent: keep prob = n^-eta
+    r: float               # near radius
+    c: float               # approximation factor (far radius = c*r)
+    w: float = 4.0         # p-stable bucket width
+    L: Optional[int] = None
+    k: Optional[int] = None
+    bucket_cap: int = 16
+    capacity_slack: float = 4.0
+
+    def resolved(self) -> "SANNConfig":
+        p1 = float(theory.pstable_p(self.r, self.w))
+        p2 = float(theory.pstable_p(self.c * self.r, self.w))
+        k = self.k or max(1, math.ceil(math.log(self.n_max) / math.log(1.0 / p2)))
+        rho = math.log(1.0 / p1) / math.log(1.0 / p2)
+        L = self.L or max(1, math.ceil(self.n_max**rho / p1))
+        return dataclasses.replace(self, L=L, k=k)
+
+    @property
+    def keep_prob(self) -> float:
+        return self.n_max ** (-self.eta)
+
+    @property
+    def capacity(self) -> int:
+        """Point-store size: E[stored] = n^{1-eta}, padded by slack for
+        concentration (binomial upper tail)."""
+        expect = self.n_max ** (1.0 - self.eta)
+        return max(64, int(self.capacity_slack * expect))
+
+    @property
+    def n_buckets(self) -> int:
+        # enough buckets that far points spread out (Lemma 3.2 uses range
+        # ~n via k concatenations; after rehash we provision ~4x capacity)
+        return max(64, int(4 * self.capacity))
+
+
+class SANNState(NamedTuple):
+    points: jax.Array       # (capacity, dim) float32
+    valid: jax.Array        # (capacity,) bool
+    write_ptr: jax.Array    # () int32 cyclic slot pointer
+    n_seen: jax.Array       # () int64
+    n_stored: jax.Array     # () int64
+    tables: jax.Array       # (L, n_buckets, bucket_cap) int32 slot ids, -1 empty
+    table_ptr: jax.Array    # (L, n_buckets) int32 cyclic bucket pointers
+
+
+def sann_init(cfg: SANNConfig, key: jax.Array):
+    cfg = cfg.resolved()
+    params = lsh.init_pstable(key, cfg.dim, cfg.L, cfg.k, cfg.w, cfg.n_buckets)
+    state = SANNState(
+        points=jnp.zeros((cfg.capacity, cfg.dim), jnp.float32),
+        valid=jnp.zeros((cfg.capacity,), bool),
+        write_ptr=jnp.zeros((), jnp.int32),
+        n_seen=jnp.zeros((), jnp.int32),
+        n_stored=jnp.zeros((), jnp.int32),
+        tables=jnp.full((cfg.L, cfg.n_buckets, cfg.bucket_cap), -1, jnp.int32),
+        table_ptr=jnp.zeros((cfg.L, cfg.n_buckets), jnp.int32),
+    )
+    return cfg, params, state
+
+
+def sann_insert(state: SANNState, params, x: jax.Array, key: jax.Array,
+                cfg: SANNConfig) -> SANNState:
+    """Sample-and-store one stream point (Alg. 1 insert; Fig. 1)."""
+    keep = jax.random.bernoulli(key, cfg.keep_prob)
+    slot = state.write_ptr % cfg.capacity
+    points = state.points.at[slot].set(jnp.where(keep, x, state.points[slot]))
+    valid = state.valid.at[slot].set(jnp.where(keep, True, state.valid[slot]))
+
+    codes = lsh.hash_points(params, x)                          # (L,)
+    rows = jnp.arange(cfg.L)
+    pos = state.table_ptr[rows, codes] % cfg.bucket_cap
+    old = state.tables[rows, codes, pos]
+    tables = state.tables.at[rows, codes, pos].set(
+        jnp.where(keep, slot.astype(jnp.int32), old))
+    table_ptr = state.table_ptr.at[rows, codes].add(jnp.where(keep, 1, 0))
+
+    return SANNState(
+        points=points, valid=valid,
+        write_ptr=state.write_ptr + jnp.where(keep, 1, 0).astype(jnp.int32),
+        n_seen=state.n_seen + 1,
+        n_stored=state.n_stored + jnp.where(keep, 1, 0),
+        tables=tables, table_ptr=table_ptr,
+    )
+
+
+def sann_insert_stream(state: SANNState, params, xs: jax.Array, key: jax.Array,
+                       cfg: SANNConfig) -> SANNState:
+    keys = jax.random.split(key, xs.shape[0])
+
+    def step(s, xk):
+        x, k = xk
+        return sann_insert(s, params, x, k, cfg), None
+
+    state, _ = jax.lax.scan(step, state, (xs, keys))
+    return state
+
+
+def sann_delete(state: SANNState, params, x: jax.Array, cfg: SANNConfig,
+                tol: float = 1e-5) -> SANNState:
+    """Turnstile delete-by-value (§3.4): tombstone every stored copy of x."""
+    d2 = jnp.sum((state.points - x) ** 2, axis=-1)
+    hit = state.valid & (d2 <= tol)
+    valid = state.valid & ~hit
+    # Tombstone table entries pointing at deleted slots.
+    dead = hit[jnp.maximum(state.tables, 0)] & (state.tables >= 0)
+    tables = jnp.where(dead, -1, state.tables)
+    return state._replace(valid=valid, tables=tables,
+                          n_stored=state.n_stored - hit.sum())
+
+
+class SANNResult(NamedTuple):
+    index: jax.Array      # slot id of returned point (-1 = NULL)
+    distance: jax.Array   # distance to returned point (inf = NULL)
+    found: jax.Array      # bool — success per the (c,r) contract
+    n_candidates: jax.Array
+
+
+def sann_query(state: SANNState, params, q: jax.Array, cfg: SANNConfig) -> SANNResult:
+    """Alg. 1 query: gather L buckets, truncate to 3L candidates, score,
+    return argmin if within c*r (Fig. 2)."""
+    codes = lsh.hash_points(params, q)                          # (L,)
+    rows = jnp.arange(cfg.L)
+    cand = state.tables[rows, codes].reshape(-1)                # (L*bucket_cap,)
+    ok = (cand >= 0) & state.valid[jnp.maximum(cand, 0)]
+    # Truncate to the paper's 3L budget: stable-sort invalid entries last,
+    # keep the first 3L.
+    order = jnp.argsort(jnp.where(ok, 0, 1), stable=True)
+    budget = 3 * cfg.L
+    sel = order[:budget]
+    cand, ok = cand[sel], ok[sel]
+    vecs = state.points[jnp.maximum(cand, 0)]                   # (3L, dim)
+    from repro.kernels import ops as kernel_ops
+    d2 = kernel_ops.cand_score(q, vecs)                         # (3L,)
+    d2 = jnp.where(ok, d2, jnp.inf)
+    best = jnp.argmin(d2)
+    dist = jnp.sqrt(d2[best])
+    found = dist <= cfg.c * cfg.r
+    return SANNResult(
+        index=jnp.where(found, cand[best], -1),
+        distance=jnp.where(found, dist, jnp.inf),
+        found=found,
+        n_candidates=ok.sum(),
+    )
+
+
+def sann_query_batch(state: SANNState, params, qs: jax.Array, cfg: SANNConfig) -> SANNResult:
+    """Batch queries (§3.3 / Corollary 3.2) — embarrassingly parallel vmap."""
+    return jax.vmap(lambda q: sann_query(state, params, q, cfg))(qs)
+
+
+def sann_bytes(cfg: SANNConfig) -> int:
+    """Concrete sketch footprint for the Fig.-5 memory-scaling benchmark."""
+    cfg = cfg.resolved()
+    pts = cfg.capacity * cfg.dim * 4 + cfg.capacity  # points + valid
+    tbl = cfg.L * cfg.n_buckets * (cfg.bucket_cap + 1) * 4
+    return pts + tbl
+
+
+def sann_query_topk(state: SANNState, params, q: jax.Array, cfg: SANNConfig,
+                    topk: int = 50):
+    """Top-k variant for recall benchmarks: returns (slot ids, distances) of
+    the k closest candidates in the bucket union (−1/inf padded)."""
+    codes = lsh.hash_points(params, q)
+    rows = jnp.arange(cfg.L)
+    cand = state.tables[rows, codes].reshape(-1)
+    ok = (cand >= 0) & state.valid[jnp.maximum(cand, 0)]
+    vecs = state.points[jnp.maximum(cand, 0)]
+    from repro.kernels import ops as kernel_ops
+    d2 = jnp.where(ok, kernel_ops.cand_score(q, vecs), jnp.inf)
+    # dedup identical slots: keep first occurrence
+    sort_idx = jnp.argsort(cand)
+    sorted_c = cand[sort_idx]
+    dup = jnp.concatenate([jnp.zeros((1,), bool),
+                           sorted_c[1:] == sorted_c[:-1]])
+    dedup_mask = jnp.zeros_like(ok).at[sort_idx].set(~dup)
+    d2 = jnp.where(dedup_mask, d2, jnp.inf)
+    neg, idx = jax.lax.top_k(-d2, min(topk, d2.shape[0]))
+    ids = jnp.where(jnp.isfinite(-neg), cand[idx], -1)
+    return ids, jnp.sqrt(-neg)
+
+
+def sann_query_topk_batch(state, params, qs, cfg: SANNConfig, topk: int = 50):
+    return jax.vmap(lambda q: sann_query_topk(state, params, q, cfg, topk))(qs)

@@ -1,0 +1,169 @@
+"""SW-AKDE — Sliding-Window Approximate KDE (paper §4, Algorithm 2).
+
+A RACE grid in which **every cell is an Exponential Histogram**: cell
+(i, h_i(x)) records a 1 at the arrival timestep, and a query reads the EH
+estimate of "how many increments in the last N steps".  The estimator is the
+row *average* (the paper uses the average for SW-AKDE, not median-of-means).
+
+Guarantees (paper Thm 4.1): with EH relative error eps', the estimate is a
+(1±eps) multiplicative KDE approximation, eps = 2*eps' + eps'^2, using
+O(R*W * (1/(sqrt(1+eps)-1)) * log^2 N) space.
+
+State layout (DESIGN.md §5.3): the EH grid is a single pytree of dense
+arrays ``ts: (L, W, levels, slots)``, ``num: (L, W, levels)``; one stream
+step touches L cells (one per row) via gather → vmapped eh_add → scatter.
+Batch updates (Corollary 4.2) use SumEH cells instead.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import lsh
+from .eh import (
+    EHConfig, EHState, eh_add, eh_init, eh_query,
+    SumEHConfig, SumEHState, sum_eh_add, sum_eh_init, sum_eh_query,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class SWAKDEConfig:
+    L: int               # rows (repetitions R in the paper's space bound)
+    W: int               # LSH range (bucket count after rehash)
+    window: int          # N
+    eh_eps: float        # eps' — EH relative error
+
+    @property
+    def kde_eps(self) -> float:
+        """Paper Lemma 4.3: eps = 2*eps' + eps'^2."""
+        return 2 * self.eh_eps + self.eh_eps**2
+
+    def eh_config(self) -> EHConfig:
+        return EHConfig.create(self.window, self.eh_eps)
+
+
+class SWAKDEState(NamedTuple):
+    ts: jax.Array     # (L, W, levels, slots) int64
+    num: jax.Array    # (L, W, levels) int32
+    t: jax.Array      # () int64 current timestep
+
+
+def swakde_init(cfg: SWAKDEConfig) -> SWAKDEState:
+    eh = cfg.eh_config()
+    return SWAKDEState(
+        ts=jnp.full((cfg.L, cfg.W, eh.levels, eh.slots), -1, jnp.int32),
+        num=jnp.zeros((cfg.L, cfg.W, eh.levels), jnp.int32),
+        t=jnp.zeros((), jnp.int32),
+    )
+
+
+def swakde_update(state: SWAKDEState, params, x: jax.Array, cfg: SWAKDEConfig) -> SWAKDEState:
+    """One stream element: hash with L rows, eh_add the L hit cells."""
+    eh = cfg.eh_config()
+    codes = lsh.hash_points(params, x)                      # (L,)
+    rows = jnp.arange(cfg.L)
+    cell = EHState(ts=state.ts[rows, codes], num=state.num[rows, codes])
+    new_cell = jax.vmap(lambda s: eh_add(s, state.t, eh))(cell)
+    return SWAKDEState(
+        ts=state.ts.at[rows, codes].set(new_cell.ts),
+        num=state.num.at[rows, codes].set(new_cell.num),
+        t=state.t + 1,
+    )
+
+
+def swakde_stream(state: SWAKDEState, params, xs: jax.Array, cfg: SWAKDEConfig) -> SWAKDEState:
+    """Scan a stream of points (T, d) through the sketch."""
+
+    def step(s, x):
+        return swakde_update(s, params, x, cfg), None
+
+    state, _ = jax.lax.scan(step, state, xs)
+    return state
+
+
+def swakde_query(state: SWAKDEState, params, q: jax.Array, cfg: SWAKDEConfig) -> jax.Array:
+    """Average of the L EH estimates — the paper's SW-AKDE estimator Ŷ."""
+    eh = cfg.eh_config()
+    codes = lsh.hash_points(params, q)
+    rows = jnp.arange(cfg.L)
+    cell = EHState(ts=state.ts[rows, codes], num=state.num[rows, codes])
+    vals = jax.vmap(lambda s: eh_query(s, state.t - 1, eh))(cell)
+    return vals.mean()
+
+
+def swakde_query_batch(state: SWAKDEState, params, qs: jax.Array, cfg: SWAKDEConfig):
+    return jax.vmap(lambda q: swakde_query(state, params, q, cfg))(qs)
+
+
+def swakde_kde(state: SWAKDEState, params, q: jax.Array, cfg: SWAKDEConfig) -> jax.Array:
+    """Normalised sliding-window density: Ŷ / min(t, N)."""
+    denom = jnp.minimum(state.t, cfg.window).astype(jnp.float32)
+    return swakde_query(state, params, q, cfg) / jnp.maximum(denom, 1.0)
+
+
+def swakde_bytes(cfg: SWAKDEConfig) -> int:
+    """Concrete sketch footprint (for the §4 space-bound benchmarks)."""
+    eh = cfg.eh_config()
+    return cfg.L * cfg.W * (eh.levels * eh.slots * 8 + eh.levels * 4) + 8
+
+
+# ---------------------------------------------------------------------------
+# Batch-update variant (Corollary 4.2): window = last N *batches*
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class BatchSWAKDEConfig:
+    L: int
+    W: int
+    window: int        # N batches
+    eh_eps: float
+    batch_size: int    # R
+
+    def eh_config(self) -> SumEHConfig:
+        return SumEHConfig.create(self.window, self.eh_eps, self.batch_size)
+
+
+class BatchSWAKDEState(NamedTuple):
+    ts: jax.Array     # (L, W, levels, slots) int32
+    num: jax.Array    # (L, W, levels) int32
+    t: jax.Array      # () int32 — batch timestep
+
+
+def batch_swakde_init(cfg: BatchSWAKDEConfig) -> BatchSWAKDEState:
+    eh = cfg.eh_config().base
+    return BatchSWAKDEState(
+        ts=jnp.full((cfg.L, cfg.W, eh.levels, eh.slots), -1, jnp.int32),
+        num=jnp.zeros((cfg.L, cfg.W, eh.levels), jnp.int32),
+        t=jnp.zeros((), jnp.int32),
+    )
+
+
+def batch_swakde_update(
+    state: BatchSWAKDEState, params, batch: jax.Array, cfg: BatchSWAKDEConfig
+) -> BatchSWAKDEState:
+    """One *batch* arrives at one timestep: each cell's increment is the
+    number of batch elements hashing to it (0..R)."""
+    eh = cfg.eh_config()
+    codes = lsh.hash_points(params, batch)                # (R, L)
+    incr = jax.nn.one_hot(codes, cfg.W, dtype=jnp.int32).sum(0)  # (L, W)
+
+    def upd_cell(ts, num, v):
+        s = sum_eh_add(SumEHState(ts, num), state.t, v, eh)
+        return s.ts, s.num
+
+    ts, num = jax.vmap(jax.vmap(upd_cell))(state.ts, state.num, incr)
+    return BatchSWAKDEState(ts=ts, num=num, t=state.t + 1)
+
+
+def batch_swakde_query(
+    state: BatchSWAKDEState, params, q: jax.Array, cfg: BatchSWAKDEConfig
+) -> jax.Array:
+    eh = cfg.eh_config()
+    codes = lsh.hash_points(params, q)
+    rows = jnp.arange(cfg.L)
+    cell = SumEHState(state.ts[rows, codes], state.num[rows, codes])
+    vals = jax.vmap(lambda s: sum_eh_query(s, state.t - 1, eh))(cell)
+    return vals.mean()

@@ -1,0 +1,43 @@
+"""Pallas TPU kernel: candidate scoring for S-ANN queries.
+
+After the bucket gather, the query must be scored against <= 3L candidate
+vectors (paper Alg. 1).  This is a dense (M, d) tile workload: squared L2
+distances computed in fp32 on the VPU, one tile of candidates per grid step.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(q_ref, c_ref, o_ref):
+    q = q_ref[...].astype(jnp.float32)        # (1, d)
+    c = c_ref[...].astype(jnp.float32)        # (TM, d)
+    diff = c - q
+    o_ref[...] = jnp.sum(diff * diff, axis=-1, keepdims=True)  # (TM, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "interpret"))
+def cand_score(
+    q: jax.Array,        # (d,)
+    cands: jax.Array,    # (M, d)
+    block_m: int = 256,
+    interpret: bool = True,
+) -> jax.Array:
+    M, d = cands.shape
+    tm = min(block_m, M)
+    out = pl.pallas_call(
+        _kernel,
+        grid=(pl.cdiv(M, tm),),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+            pl.BlockSpec((tm, d), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((tm, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((M, 1), jnp.float32),
+        interpret=interpret,
+    )(q[None, :], cands)
+    return out[:, 0]

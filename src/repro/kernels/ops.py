@@ -1,0 +1,65 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+Dispatch policy:
+  * on TPU backends → compiled Pallas kernels;
+  * on CPU → the pure-jnp oracle (`ref.py`) by default, because Pallas
+    interpret mode is a Python-level emulator (correct but slow) — set
+    ``REPRO_FORCE_PALLAS=1`` to route through interpret-mode kernels
+    (this is what tests/test_kernels.py does when comparing vs ref).
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from . import cand_score as _cs
+from . import race_update as _ru
+from . import ref
+from . import sketch_decode_attn as _sda
+from . import srp_hash as _sh
+
+
+def _use_pallas() -> bool:
+    if os.environ.get("REPRO_FORCE_PALLAS") == "1":
+        return True
+    return jax.default_backend() == "tpu"
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def srp_hash(x: jax.Array, proj: jax.Array, mix: jax.Array, n_buckets: int) -> jax.Array:
+    if _use_pallas():
+        return _sh.srp_hash(x, proj, mix, n_buckets, interpret=_interpret())
+    return ref.srp_hash_ref(x, proj, mix, n_buckets)
+
+
+def race_hist(codes: jax.Array, W: int) -> jax.Array:
+    if _use_pallas():
+        return _ru.race_hist(codes, W, interpret=_interpret())
+    return ref.race_update_ref(jnp.zeros((codes.shape[1], W), jnp.int32), codes)
+
+
+def cand_score(q: jax.Array, cands: jax.Array) -> jax.Array:
+    if _use_pallas():
+        return _cs.cand_score(q, cands, interpret=_interpret())
+    return ref.cand_score_ref(q, cands)
+
+
+def sketch_decode_attn(q, k, v, block_ids, n_live, kv_len,
+                       block_size: int = 512, softcap: float = 0.0) -> jax.Array:
+    if _use_pallas():
+        return _sda.sketch_decode_attn(
+            q, k, v, block_ids, n_live, kv_len,
+            block_size=block_size, softcap=softcap, interpret=_interpret())
+    nb = (k.shape[0] + block_size - 1) // block_size
+    live = jnp.zeros((nb,), bool).at[jnp.maximum(block_ids, 0)].set(
+        block_ids >= 0)
+    return ref.sketch_decode_attn_ref(
+        q, k, v, live, kv_len[0], block_size, softcap)
+
+
+live_blocks_from_sketch = _sda.live_blocks_from_sketch

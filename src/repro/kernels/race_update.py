@@ -1,0 +1,55 @@
+"""Pallas TPU kernel: RACE histogram accumulation.
+
+Given LSH codes (B, L) the sketch update increments ``counts[l, codes[b, l]]``
+for every (b, l).  Scatter is hostile to the VPU, so the TPU-native form is a
+**one-hot compare + reduce** per row tile, accumulated in a VMEM-resident
+(1, W) output block that the sequential grid revisits across batch chunks —
+a classic TPU histogram.
+
+Grid: (L, ceil(B / CB)); the output row block is revisited for every batch
+chunk (TPU grids execute sequentially, so accumulation is safe).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(codes_ref, o_ref, *, B: int, cb: int):
+    bc = pl.program_id(1)
+
+    @pl.when(bc == 0)
+    def _():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    codes = codes_ref[...]                                   # (CB, 1) int32
+    W = o_ref.shape[1]
+    row = bc * cb + jax.lax.broadcasted_iota(jnp.int32, (cb, 1), 0)
+    valid = row < B                                          # mask batch padding
+    buckets = jax.lax.broadcasted_iota(jnp.int32, (cb, W), 1)
+    hit = (buckets == codes) & valid                         # (CB, W)
+    o_ref[...] += hit.astype(jnp.int32).sum(axis=0, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("W", "block_b", "interpret"))
+def race_hist(
+    codes: jax.Array,      # (B, L) int32
+    W: int,
+    block_b: int = 256,
+    interpret: bool = True,
+) -> jax.Array:
+    """Histogram of codes per row: out[l, w] = #{b : codes[b, l] == w}."""
+    B, L = codes.shape
+    cb = min(block_b, B)
+    grid = (L, pl.cdiv(B, cb))
+    return pl.pallas_call(
+        functools.partial(_kernel, B=B, cb=cb),
+        grid=grid,
+        in_specs=[pl.BlockSpec((cb, 1), lambda l, bc: (bc, l))],
+        out_specs=pl.BlockSpec((1, W), lambda l, bc: (l, 0)),
+        out_shape=jax.ShapeDtypeStruct((L, W), jnp.int32),
+        interpret=interpret,
+    )(codes)

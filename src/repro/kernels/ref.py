@@ -1,0 +1,61 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the *semantic definition*; kernels must match it to
+float tolerance across the shape/dtype sweeps in tests/test_kernels.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_MIX = jnp.uint32(2654435761)
+
+
+def srp_hash_ref(x: jax.Array, proj: jax.Array, mix: jax.Array, n_buckets: int) -> jax.Array:
+    """x (B, d), proj (d, L*k), mix (L, k) → codes (B, L) int32 in [0, n_buckets)."""
+    B = x.shape[0]
+    L, k = mix.shape
+    y = x.astype(jnp.float32) @ proj.astype(jnp.float32)       # (B, L*k)
+    bits = (y >= 0).astype(jnp.uint32).reshape(B, L, k)
+    acc = (bits * mix[None]).sum(axis=-1) * _MIX
+    return (acc % jnp.uint32(n_buckets)).astype(jnp.int32)
+
+
+def race_update_ref(counts: jax.Array, codes: jax.Array, sign: int = 1) -> jax.Array:
+    """counts (L, W), codes (B, L) → counts + sign * histogram."""
+    L, W = counts.shape
+    onehot = jax.nn.one_hot(codes, W, dtype=jnp.int32)         # (B, L, W)
+    return counts + jnp.int32(sign) * onehot.sum(axis=0)
+
+
+def cand_score_ref(q: jax.Array, cands: jax.Array) -> jax.Array:
+    """q (d,), cands (M, d) → squared L2 distances (M,) in fp32."""
+    q = q.astype(jnp.float32)
+    c = cands.astype(jnp.float32)
+    return jnp.sum((c - q[None, :]) ** 2, axis=-1)
+
+
+def sketch_decode_attn_ref(
+    q: jax.Array,            # (Hkv, G, dh)
+    k: jax.Array,            # (S, Hkv, dh)
+    v: jax.Array,            # (S, Hkv, dh)
+    block_live: jax.Array,   # (num_blocks,) bool — sketch-pruned block mask
+    kv_len: jax.Array,       # () int32 — #valid cache positions
+    block_size: int,
+    softcap: float = 0.0,
+) -> jax.Array:
+    """Masked decode attention: softmax over positions whose block survives
+    the sketch pruning AND lie within kv_len.  Returns (Hkv, G, dh) fp32."""
+    S = k.shape[0]
+    scale = 1.0 / jnp.sqrt(q.shape[-1]).astype(jnp.float32)
+    scores = jnp.einsum(
+        "hgd,shd->hgs", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * scale
+    if softcap and softcap > 0.0:
+        scores = softcap * jnp.tanh(scores / softcap)
+    pos = jnp.arange(S)
+    live = block_live[pos // block_size] & (pos < kv_len)
+    scores = jnp.where(live[None, None, :], scores, -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1)
+    w = jnp.where(jnp.isnan(w), 0.0, w)  # all-masked rows → zero output
+    return jnp.einsum("hgs,shd->hgd", w, v.astype(jnp.float32))

@@ -1,0 +1,138 @@
+"""Pallas TPU kernel: sketch-pruned flash-decode attention.
+
+The TPU-native adaptation of the paper's bucket probing (DESIGN.md §5.4):
+instead of gathering scattered candidate keys, the KV cache is viewed in
+``block_size``-token blocks; a per-block LSH signature (OR of SRP bits of
+the keys in the block) is compared against the query signature, yielding a
+*live block list*.  The kernel visits **only** live blocks via scalar
+prefetch (the grid's block index map reads the live-block id array), and
+runs a standard flash-decode accumulation (running max / denominator) per
+KV head with GQA group-size G queries.
+
+With all blocks live this degrades gracefully to plain flash-decode, which
+is what the non-sketch architectures use for their decode shapes.
+
+Grid: (Hkv, nb_max) — nb_max is the static live-list capacity; entries
+beyond ``n_live`` are skipped with pl.when (no DMA wasted on TPU since the
+index map clamps to block 0 and Mosaic elides revisited loads).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(
+    bids_ref, nlive_ref, kvlen_ref,            # scalar-prefetch refs
+    q_ref, k_ref, v_ref,                       # VMEM blocks
+    o_ref,
+    m_scr, l_scr, acc_scr,
+    *, block_size: int, softcap: float, nb_max: int,
+):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _():
+        m_scr[...] = jnp.full_like(m_scr, -jnp.inf)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    @pl.when(j < nlive_ref[0])
+    def _():
+        q = q_ref[0].astype(jnp.float32)               # (G, dh)
+        k = k_ref[:, 0, :].astype(jnp.float32)         # (BS, dh)
+        v = v_ref[:, 0, :].astype(jnp.float32)
+        scale = 1.0 / (q.shape[-1] ** 0.5)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # (G, BS)
+        if softcap > 0.0:
+            s = softcap * jnp.tanh(s / softcap)
+        bid = bids_ref[j]
+        pos = bid * block_size + jax.lax.broadcasted_iota(
+            jnp.int32, (1, block_size), 1)
+        s = jnp.where(pos < kvlen_ref[0], s, -jnp.inf)
+
+        m_prev = m_scr[...]                            # (G, 1)
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        alpha = jnp.where(jnp.isnan(alpha), 0.0, alpha)  # -inf - -inf guard
+        p = jnp.exp(s - m_new)
+        p = jnp.where(jnp.isnan(p), 0.0, p)
+        l_scr[...] = l_scr[...] * alpha + p.sum(axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(j == nb_max - 1)
+    def _():
+        l = l_scr[...]
+        o_ref[0] = jnp.where(l > 0.0, acc_scr[...] / jnp.maximum(l, 1e-30), 0.0)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_size", "softcap", "interpret"))
+def sketch_decode_attn(
+    q: jax.Array,           # (Hkv, G, dh)
+    k: jax.Array,           # (S, Hkv, dh)
+    v: jax.Array,           # (S, Hkv, dh)
+    block_ids: jax.Array,   # (nb_max,) int32 — live block indices, -1 padded
+    n_live: jax.Array,      # (1,) int32
+    kv_len: jax.Array,      # (1,) int32
+    block_size: int = 512,
+    softcap: float = 0.0,
+    interpret: bool = True,
+) -> jax.Array:
+    Hkv, G, dh = q.shape
+    S = k.shape[0]
+    assert S % block_size == 0, (S, block_size)
+    nb_max = block_ids.shape[0]
+    safe_bids = jnp.maximum(block_ids, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(Hkv, nb_max),
+        in_specs=[
+            pl.BlockSpec((1, G, dh), lambda h, j, bids, nl, kl: (h, 0, 0)),
+            pl.BlockSpec((block_size, 1, dh),
+                         lambda h, j, bids, nl, kl: (bids[j], h, 0)),
+            pl.BlockSpec((block_size, 1, dh),
+                         lambda h, j, bids, nl, kl: (bids[j], h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, G, dh), lambda h, j, bids, nl, kl: (h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, dh), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(
+            _kernel, block_size=block_size, softcap=softcap, nb_max=nb_max),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((Hkv, G, dh), jnp.float32),
+        interpret=interpret,
+    )(safe_bids, n_live, kv_len, q, k, v)
+
+
+def live_blocks_from_sketch(
+    q_sig: jax.Array,        # (bits,) bool — query SRP signature
+    block_sigs: jax.Array,   # (num_blocks, bits) bool — OR-reduced per block
+    kv_len: jax.Array,       # () int32
+    block_size: int,
+    min_match: int,
+) -> tuple[jax.Array, jax.Array]:
+    """Sketch pruning decision: a block is live iff >= min_match of the
+    query's set signature bits are present in the block signature AND the
+    block intersects [0, kv_len).  Returns (block_ids padded with -1, n_live).
+    """
+    nb = block_sigs.shape[0]
+    match = (block_sigs & q_sig[None, :]).sum(-1)
+    in_range = jnp.arange(nb) * block_size < kv_len
+    live = (match >= min_match) & in_range
+    # Stable compaction: live block ids first, -1 padding after.
+    order = jnp.argsort(jnp.where(live, 0, 1), stable=True)
+    ids = jnp.where(live[order], order, -1).astype(jnp.int32)
+    return ids, live.sum().astype(jnp.int32)[None]

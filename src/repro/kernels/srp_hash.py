@@ -1,0 +1,59 @@
+"""Pallas TPU kernel: SRP-LSH hashing (matmul + sign + universal fold).
+
+The sketch hot path: every stream element / query is hashed by L*k signed
+random projections.  On TPU this is one MXU matmul ``(TB, d) x (d, L*k)``
+per tile of B, followed by VPU bit extraction and the multiply-shift fold —
+all resident in VMEM.
+
+Grid: 1-D over tiles of the batch dimension.  proj/mix are small enough
+(d, L*k <= a few thousand) to pin entirely in VMEM per the BlockSpec below.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_MIX = 2654435761  # python int: materialised inside the kernel trace
+
+
+def _kernel(x_ref, proj_ref, mix_ref, o_ref, *, n_buckets: int, L: int, k: int):
+    x = x_ref[...].astype(jnp.float32)                 # (TB, d)
+    proj = proj_ref[...].astype(jnp.float32)           # (d, L*k)
+    y = jnp.dot(x, proj, preferred_element_type=jnp.float32)
+    bits = (y >= 0.0).astype(jnp.uint32)               # (TB, L*k)
+    mix = mix_ref[...].reshape(1, L * k).astype(jnp.uint32)
+    prod = bits * mix
+    acc = prod.reshape(x.shape[0], L, k).sum(axis=-1).astype(jnp.uint32)
+    acc = acc * jnp.uint32(_MIX)
+    o_ref[...] = (acc % jnp.uint32(n_buckets)).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("n_buckets", "block_b", "interpret"))
+def srp_hash(
+    x: jax.Array,            # (B, d)
+    proj: jax.Array,         # (d, L*k)
+    mix: jax.Array,          # (L, k) uint32
+    n_buckets: int,
+    block_b: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    B, d = x.shape
+    L, k = mix.shape
+    tb = min(block_b, B)
+    grid = (pl.cdiv(B, tb),)
+    out = pl.pallas_call(
+        functools.partial(_kernel, n_buckets=n_buckets, L=L, k=k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tb, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, L * k), lambda i: (0, 0)),
+            pl.BlockSpec((L, k), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tb, L), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, L), jnp.int32),
+        interpret=interpret,
+    )(x, proj, mix)
+    return out

@@ -1,0 +1,222 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks device count on first init).
+
+import argparse
+import dataclasses
+import json
+import pathlib
+import subprocess
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import registry
+from repro.configs.base import ALL_SHAPES, ModelConfig
+from repro.launch.inputs import input_specs
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as model_lib
+from repro.optim.adam import adam8bit, adamw
+from repro.parallel import param_specs
+from repro.parallel.sharding import make_ctx
+from repro.roofline import hlo_cost
+from repro.serve import kv_cache, serve_step as serve_lib
+from repro.train.train_step import make_train_step
+
+ART_DIR = pathlib.Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+SHAPES = {s.name: s for s in ALL_SHAPES}
+
+# v5e hardware constants (ROOFLINE ANALYSIS section of the assignment)
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # bytes/s / chip
+ICI_BW = 50e9              # bytes/s/link
+
+
+def _optimizer_for(cfg: ModelConfig):
+    # 671B needs 8-bit moments to fit 512 x 16GB (DESIGN.md §4)
+    if cfg.param_count() > 100e9:
+        return adam8bit(), "adam8bit"
+    return adamw(), "adamw"
+
+
+def _model_flops(cfg: ModelConfig, shape) -> float:
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n_active * shape.seq_len * shape.global_batch
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.seq_len * shape.global_batch
+    return 2.0 * n_active * shape.global_batch  # decode: one token / sequence
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             out_dir: pathlib.Path) -> dict:
+    cfg = registry.get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "kind": shape.kind, "ok": False}
+    ok_shape, why = registry.shape_applicable(cfg, shape)
+    if not ok_shape:
+        rec.update(skipped=True, reason=why, ok=True)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    t0 = time.time()
+
+    if shape.kind == "train":
+        opt, opt_name = _optimizer_for(cfg)
+        rec["optimizer"] = opt_name
+        train_step, init_state = make_train_step(cfg, opt, mesh)
+        state_shapes = jax.eval_shape(init_state, jax.ShapeDtypeStruct((2,), jnp.uint32))
+        p_sh = param_specs.param_shardings(state_shapes.params, mesh,
+                                           fsdp_over_pod=cfg.fsdp_over_pod)
+        o_sh = param_specs.opt_state_shardings(state_shapes.opt_state, p_sh, mesh)
+        state_sh = type(state_shapes)(params=p_sh, opt_state=o_sh,
+                                      step=NamedSharding(mesh, P()))
+        batch_shapes = input_specs(cfg, shape)
+        b_sh = param_specs.batch_shardings(batch_shapes, mesh)
+        metric_sh = jax.tree.map(
+            lambda _: NamedSharding(mesh, P()),
+            jax.eval_shape(train_step, state_shapes, batch_shapes)[1])
+        step = jax.jit(train_step, in_shardings=(state_sh, b_sh),
+                       out_shardings=(state_sh, metric_sh),
+                       donate_argnums=(0,))
+        lowered = step.lower(state_shapes, batch_shapes)
+    elif shape.kind == "prefill":
+        ctx = make_ctx(mesh)
+        params_shapes = jax.eval_shape(
+            lambda k: model_lib.init_model(cfg, k),
+            jax.ShapeDtypeStruct((2,), jnp.uint32))
+        p_sh = param_specs.param_shardings(params_shapes, mesh,
+                                           fsdp_over_pod=cfg.fsdp_over_pod)
+        batch_shapes = input_specs(cfg, shape)
+        b_sh = param_specs.batch_shardings(batch_shapes, mesh)
+
+        def prefill(params, batch):
+            logits, _ = model_lib.forward(params, cfg, batch, ctx)
+            return logits
+
+        lowered = jax.jit(prefill, in_shardings=(p_sh, b_sh)).lower(
+            params_shapes, batch_shapes)
+    else:  # decode
+        sketch = cfg.local_window > 0 and shape.name == "long_500k"
+        rec["sketch_attn"] = sketch
+        B, S = shape.global_batch, shape.seq_len
+        params_shapes = jax.eval_shape(
+            lambda k: model_lib.init_model(cfg, k),
+            jax.ShapeDtypeStruct((2,), jnp.uint32))
+        p_sh = param_specs.param_shardings(params_shapes, mesh,
+                                           fsdp_over_pod=cfg.fsdp_over_pod)
+        cache_shapes = jax.eval_shape(
+            lambda: kv_cache.init_cache(cfg, B, S, mesh=None, sketch=sketch))
+        c_sh = kv_cache.cache_specs(cache_shapes, cfg, B, mesh)
+        tok = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+        ba, _ = kv_cache.cache_axes(cfg, B, mesh)
+        t_sh = NamedSharding(mesh, P(ba, None))
+        step_fn = serve_lib.make_serve_step(cfg, mesh, sketch=sketch)
+        logit_sh = NamedSharding(
+            mesh, P(ba, None, "model" if cfg.vocab % mesh.shape["model"] == 0
+                    else None))
+        step = jax.jit(step_fn, in_shardings=(p_sh, c_sh, t_sh),
+                       out_shardings=(logit_sh, c_sh),
+                       donate_argnums=(1,))
+        lowered = step.lower(params_shapes, cache_shapes, tok)
+
+    rec["lower_s"] = round(time.time() - t0, 2)
+    t0 = time.time()
+    compiled = lowered.compile()
+    rec["compile_s"] = round(time.time() - t0, 2)
+
+    ma = compiled.memory_analysis()
+    rec["memory"] = {
+        "argument_bytes": int(ma.argument_size_in_bytes),
+        "output_bytes": int(ma.output_size_in_bytes),
+        "temp_bytes": int(ma.temp_size_in_bytes),
+        "alias_bytes": int(ma.alias_size_in_bytes),
+        "code_bytes": int(ma.generated_code_size_in_bytes),
+    }
+    rec["hbm_per_device_gb"] = round(
+        (ma.argument_size_in_bytes + ma.output_size_in_bytes
+         + ma.temp_size_in_bytes - ma.alias_size_in_bytes) / 2**30, 3)
+    ca = compiled.cost_analysis() or {}
+    rec["xla_cost"] = {"flops": float(ca.get("flops", 0.0)),
+                       "bytes": float(ca.get("bytes accessed", 0.0))}
+    t0 = time.time()
+    hc = hlo_cost.analyze(compiled.as_text())
+    rec["hlo_parse_s"] = round(time.time() - t0, 2)
+    rec["hlo"] = {"flops_per_device": hc["flops"],
+                  "hbm_bytes_per_device": hc["hbm_bytes"],
+                  "collectives_per_device": hc["collectives"],
+                  "collective_bytes_per_device": hc["collective_bytes"]}
+
+    # roofline terms (seconds) — single-chip rates, per-device costs
+    comp_t = hc["flops"] / PEAK_FLOPS
+    mem_t = hc["hbm_bytes"] / HBM_BW
+    coll_t = hc["collective_bytes"] / ICI_BW
+    mf = _model_flops(cfg, shape)
+    rec["roofline"] = {
+        "compute_s": comp_t, "memory_s": mem_t, "collective_s": coll_t,
+        "dominant": max((("compute", comp_t), ("memory", mem_t),
+                         ("collective", coll_t)), key=lambda kv: kv[1])[0],
+        "model_flops_global": mf,
+        "useful_flops_ratio": mf / max(hc["flops"] * n_chips, 1.0),
+    }
+    rec["n_chips"] = int(n_chips)
+    rec["ok"] = True
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=str(ART_DIR))
+    args = ap.parse_args()
+    out_dir = pathlib.Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    if args.all:
+        # each cell in a fresh subprocess (isolated XLA state / failures)
+        fails = []
+        for arch in registry.ARCH_IDS:
+            for shape in SHAPES:
+                for mp in (False, True):
+                    name = f"{arch}__{shape}__{'mp' if mp else 'sp'}"
+                    fp = out_dir / f"{name}.json"
+                    if fp.exists() and json.loads(fp.read_text()).get("ok"):
+                        print(f"[skip cached] {name}", flush=True)
+                        continue
+                    cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                           "--arch", arch, "--shape", shape, "--out", str(out_dir)]
+                    if mp:
+                        cmd.append("--multipod")
+                    print(f"[run] {name}", flush=True)
+                    r = subprocess.run(cmd, capture_output=True, text=True)
+                    if r.returncode != 0:
+                        fails.append(name)
+                        fp.write_text(json.dumps(
+                            {"arch": arch, "shape": shape,
+                             "mesh": "pod2x16x16" if mp else "pod16x16",
+                             "ok": False, "error": r.stderr[-3000:]}, indent=1))
+                        print(f"  FAILED: {r.stderr.splitlines()[-1] if r.stderr else '?'}",
+                              flush=True)
+        print("failures:", fails)
+        sys.exit(1 if fails else 0)
+
+    rec = run_cell(args.arch, args.shape, args.multipod, out_dir)
+    name = f"{args.arch}__{args.shape}__{'mp' if args.multipod else 'sp'}"
+    (out_dir / f"{name}.json").write_text(json.dumps(rec, indent=1))
+    print(json.dumps({k: rec[k] for k in rec
+                      if k not in ("hlo", "memory", "xla_cost")}, indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Model inputs: concrete batches (tests/examples) and ShapeDtypeStruct
+stand-ins (multi-pod dry-run — weak-type-correct, shardable, no allocation).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.model import VIT_DIM
+
+
+def batch_shapes(cfg: ModelConfig, batch: int, seq: int) -> dict:
+    """Logical input shapes/dtypes for one train/prefill step."""
+    shapes = {}
+    if cfg.family == "vlm":
+        text = seq - cfg.n_patches
+        assert text > 0, (seq, cfg.n_patches)
+        shapes["tokens"] = ((batch, text), jnp.int32)
+        shapes["patches"] = ((batch, cfg.n_patches, VIT_DIM), jnp.bfloat16)
+    elif cfg.family == "encdec":
+        shapes["tokens"] = ((batch, seq), jnp.int32)
+        shapes["frames"] = ((batch, cfg.enc_frames, cfg.d_model), jnp.bfloat16)
+    else:
+        shapes["tokens"] = ((batch, seq), jnp.int32)
+    return shapes
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStruct stand-ins for the dry-run (no device allocation)."""
+    return {
+        k: jax.ShapeDtypeStruct(shp, dt)
+        for k, (shp, dt) in batch_shapes(cfg, shape.global_batch, shape.seq_len).items()
+    }
+
+
+def make_batch(cfg: ModelConfig, batch: int, seq: int, key: jax.Array) -> dict:
+    """Concrete random batch (smoke tests, examples, benchmarks)."""
+    out = {}
+    for name, (shp, dt) in batch_shapes(cfg, batch, seq).items():
+        key, sub = jax.random.split(key)
+        if dt == jnp.int32:
+            out[name] = jax.random.randint(sub, shp, 0, cfg.vocab, jnp.int32)
+        else:
+            out[name] = (0.02 * jax.random.normal(sub, shp)).astype(dt)
+    return out

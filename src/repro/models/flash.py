@@ -1,0 +1,210 @@
+"""Blockwise flash attention with a custom VJP (pure JAX).
+
+Forward saves only (q, k, v, o, lse); the backward recomputes block scores
+and runs the standard two-pass FlashAttention backward (pass 1: dq over
+query blocks; pass 2: dk/dv over key blocks).  This removes the scan-carry
+residual blowup of naive AD (which stacks the (B,H,bq,dv) accumulator for
+every KV step: ~17 GB/layer at 4k for a 4B model) and is the memory-term
+baseline fix recorded in EXPERIMENTS.md §Perf.
+
+Supports GQA (Hkv <= H), dv != dqk (MLA), causal masking, static *or
+traced* sliding windows (0 = global), tanh softcap, and a q_offset for
+chunked prefill.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+
+def _pick_block(s: int, target: int) -> int:
+    b = min(target, s)
+    while s % b:
+        b -= 1
+    return b
+
+
+def _mask(qi, kj, bq, bk, causal, window, q_offset):
+    qpos = q_offset + qi * bq + lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kpos = kj * bk + lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = jnp.ones((bq, bk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    mask &= (window <= 0) | (kpos > qpos - window)
+    return mask
+
+
+def _scores(qblk, kblk, scale, softcap):
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qblk.astype(jnp.float32),
+                   kblk.astype(jnp.float32)) * scale
+    if softcap > 0.0:
+        s_raw = s
+        s = softcap * jnp.tanh(s / softcap)
+        return s, s_raw
+    return s, s
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8))
+def _flash(q, k, v, window, causal, softcap, q_offset, bq, bk):
+    o, _ = _fwd_impl(q, k, v, window, causal, softcap, q_offset, bq, bk)
+    return o
+
+
+def _fwd_impl(q, k, v, window, causal, softcap, q_offset, bq, bk):
+    B, Sq, Hkv, G, dh = q.shape
+    Sk = k.shape[1]
+    dv = v.shape[-1]
+    nq, nk = Sq // bq, Sk // bk
+    scale = dh ** -0.5
+
+    qb = q.reshape(B, nq, bq, Hkv, G, dh).transpose(1, 0, 3, 4, 2, 5)
+    kb = k.reshape(B, nk, bk, Hkv, dh).transpose(1, 0, 3, 2, 4)
+    vb = v.reshape(B, nk, bk, Hkv, dv).transpose(1, 0, 3, 2, 4)
+
+    def kv_step(carry, inp):
+        m, l, acc, qi, qblk = carry
+        kj, kblk, vblk = inp
+        s, _ = _scores(qblk, kblk, scale, softcap)
+        s = jnp.where(_mask(qi, kj, bq, bk, causal, window, q_offset), s, -jnp.inf)
+        m_new = jnp.maximum(m, s.max(axis=-1, keepdims=True))
+        alpha = jnp.exp(m - m_new)
+        alpha = jnp.where(jnp.isnan(alpha), 0.0, alpha)
+        p = jnp.exp(s - m_new)
+        p = jnp.where(jnp.isnan(p), 0.0, p)
+        l = l * alpha + p.sum(axis=-1, keepdims=True)
+        acc = acc * alpha + jnp.einsum("bhgqk,bhkd->bhgqd", p,
+                                       vblk.astype(jnp.float32))
+        return (m_new, l, acc, qi, qblk), None
+
+    def q_block(qi, qblk):
+        m0 = jnp.full((B, Hkv, G, bq, 1), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, bq, 1), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, G, bq, dv), jnp.float32)
+        (m, l, acc, _, _), _ = lax.scan(kv_step, (m0, l0, a0, qi, qblk),
+                                        (jnp.arange(nk), kb, vb))
+        o = jnp.where(l > 0, acc / jnp.maximum(l, 1e-30), 0.0)
+        lse = (m + jnp.log(jnp.maximum(l, 1e-30)))[..., 0]      # (B,Hkv,G,bq)
+        lse = jnp.where(jnp.isinf(m[..., 0]), -jnp.inf, lse)
+        return o, lse
+
+    def outer(_, inp):
+        qi, qblk = inp
+        return None, q_block(qi, qblk)
+
+    _, (ob, lseb) = lax.scan(outer, None, (jnp.arange(nq), qb))
+    o = ob.transpose(1, 0, 4, 2, 3, 5).reshape(B, Sq, Hkv, G, dv).astype(q.dtype)
+    lse = lseb.transpose(1, 0, 4, 2, 3).reshape(B, Sq, Hkv, G)
+    return o, lse
+
+
+def _flash_fwd(q, k, v, window, causal, softcap, q_offset, bq, bk):
+    o, lse = _fwd_impl(q, k, v, window, causal, softcap, q_offset, bq, bk)
+    return o, (q, k, v, window, o, lse)
+
+
+def _flash_bwd(causal, softcap, q_offset, bq, bk, res, do):
+    q, k, v, window, o, lse = res
+    B, Sq, Hkv, G, dh = q.shape
+    Sk = k.shape[1]
+    dv = v.shape[-1]
+    nq, nk = Sq // bq, Sk // bk
+    scale = dh ** -0.5
+
+    qb = q.reshape(B, nq, bq, Hkv, G, dh).transpose(1, 0, 3, 4, 2, 5)
+    kb = k.reshape(B, nk, bk, Hkv, dh).transpose(1, 0, 3, 2, 4)
+    vb = v.reshape(B, nk, bk, Hkv, dv).transpose(1, 0, 3, 2, 4)
+    dob = do.reshape(B, nq, bq, Hkv, G, dv).transpose(1, 0, 3, 4, 2, 5)
+    lseb = lse.reshape(B, nq, bq, Hkv, G).transpose(1, 0, 3, 4, 2)
+    # delta_i = rowsum(do_i * o_i)
+    delta = jnp.sum(do.astype(jnp.float32) * o.astype(jnp.float32), axis=-1)
+    deltab = delta.reshape(B, nq, bq, Hkv, G).transpose(1, 0, 3, 4, 2)
+
+    def block_ds(qi, kj, qblk, kblk, vblk, lse_q, do_q, dl_q):
+        """Recompute p and ds for one (q, k) block pair.  Returns (p, ds)."""
+        s_cap, _ = _scores(qblk, kblk, scale, softcap)
+        mask = _mask(qi, kj, bq, bk, causal, window, q_offset)
+        s_cap = jnp.where(mask, s_cap, -jnp.inf)
+        p = jnp.exp(s_cap - lse_q[..., None])
+        p = jnp.where(jnp.isnan(p) | jnp.isinf(p), 0.0, p)
+        dp = jnp.einsum("bhgqd,bhkd->bhgqk", do_q.astype(jnp.float32),
+                        vblk.astype(jnp.float32))
+        ds = p * (dp - dl_q[..., None])
+        if softcap > 0.0:
+            ds = ds * (1.0 - (jnp.where(mask, s_cap, 0.0) / softcap) ** 2)
+        ds = jnp.where(mask, ds, 0.0) * scale
+        return p, ds
+
+    # ---- pass 1: dq, scanning query blocks
+    def dq_block(_, inp):
+        qi, qblk, lse_q, do_q, dl_q = inp
+
+        def step(dq, inp2):
+            kj, kblk, vblk = inp2
+            _, ds = block_ds(qi, kj, qblk, kblk, vblk, lse_q, do_q, dl_q)
+            dq = dq + jnp.einsum("bhgqk,bhkd->bhgqd", ds,
+                                 kblk.astype(jnp.float32))
+            return dq, None
+
+        dq0 = jnp.zeros((B, Hkv, G, bq, dh), jnp.float32)
+        dq, _ = lax.scan(step, dq0, (jnp.arange(nk), kb, vb))
+        return None, dq
+
+    _, dqb = lax.scan(dq_block, None, (jnp.arange(nq), qb, lseb, dob, deltab))
+    dq = dqb.transpose(1, 0, 4, 2, 3, 5).reshape(B, Sq, Hkv, G, dh)
+
+    # ---- pass 2: dk, dv, scanning key blocks
+    def dkv_block(_, inp):
+        kj, kblk, vblk = inp
+
+        def step(carry, inp2):
+            dk, dvv = carry
+            qi, qblk, lse_q, do_q, dl_q = inp2
+            p, ds = block_ds(qi, kj, qblk, kblk, vblk, lse_q, do_q, dl_q)
+            dvv = dvv + jnp.einsum("bhgqk,bhgqd->bhkd", p,
+                                   do_q.astype(jnp.float32))
+            dk = dk + jnp.einsum("bhgqk,bhgqd->bhkd", ds,
+                                 qblk.astype(jnp.float32))
+            return (dk, dvv), None
+
+        dk0 = jnp.zeros((B, Hkv, bk, dh), jnp.float32)
+        dv0 = jnp.zeros((B, Hkv, bk, dv), jnp.float32)
+        (dk, dvv), _ = lax.scan(
+            step, (dk0, dv0), (jnp.arange(nq), qb, lseb, dob, deltab))
+        return None, (dk, dvv)
+
+    _, (dkb, dvb) = lax.scan(dkv_block, None, (jnp.arange(nk), kb, vb))
+    dk = dkb.transpose(1, 0, 3, 2, 4).reshape(B, Sk, Hkv, dh)
+    dvv = dvb.transpose(1, 0, 3, 2, 4).reshape(B, Sk, Hkv, dv)
+
+    dwin = np.zeros(window.shape, jax.dtypes.float0)
+    return (dq.astype(q.dtype), dk.astype(k.dtype), dvv.astype(v.dtype), dwin)
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def flash_attention(
+    q: jax.Array,            # (B, Sq, H, dh)
+    k: jax.Array,            # (B, Sk, Hkv, dh)
+    v: jax.Array,            # (B, Sk, Hkv, dv)
+    *,
+    causal: bool = True,
+    window=0,                # python int or traced int32 scalar; 0 = global
+    softcap: float = 0.0,
+    q_offset: int = 0,
+    block_q: int = 512,
+    block_k: int = 512,
+) -> jax.Array:
+    B, Sq, H, dh = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    bq = _pick_block(Sq, block_q)
+    bk = _pick_block(k.shape[1], block_k)
+    win = window if isinstance(window, jax.Array) else jnp.int32(window)
+    qg = q.reshape(B, Sq, Hkv, G, dh)
+    o = _flash(qg, k, v, win, causal, float(softcap), int(q_offset), bq, bk)
+    return o.reshape(B, Sq, H, v.shape[-1])

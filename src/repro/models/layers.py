@@ -1,0 +1,162 @@
+"""Shared model layers: RMSNorm, RoPE, blockwise flash attention, MLP.
+
+Attention is a pure-JAX blockwise (flash) implementation — lax.scan over
+query blocks with an inner online-softmax scan over KV blocks — so the
+32k-prefill shapes never materialise an (S, S) score tensor.  On TPU the
+decode path additionally routes through the Pallas sketch/flash-decode
+kernel (`repro.kernels.sketch_decode_attn`).
+
+All layers are functional: ``init_*(key, cfg) -> params`` and pure apply
+functions.  Layer stacks are scanned (params stacked on axis 0), which keeps
+HLO size O(1) in depth — see DESIGN.md §6.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.parallel.sharding import NULL_CTX, ShardingCtx
+
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + w.astype(jnp.float32))).astype(dt)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, dh), positions: (..., S) → rotated x."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freq        # (..., S, half)
+    cos = jnp.cos(angles)[..., None, :]                              # (..., S, 1, half)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+from .flash import flash_attention  # noqa: E402 — custom-VJP blockwise flash
+
+
+# ---------------------------------------------------------------------------
+# Attention layer (GQA + qk-norm + softcap + local/global) with KV cache
+# ---------------------------------------------------------------------------
+
+def init_attention(key, d_model: int, n_heads: int, n_kv_heads: int,
+                   head_dim: int, qk_norm: bool, dtype) -> dict:
+    ks = jax.random.split(key, 4)
+    sc = lambda fan_in: 1.0 / jnp.sqrt(fan_in)
+    p = {
+        "wq": (jax.random.normal(ks[0], (d_model, n_heads * head_dim)) * sc(d_model)).astype(dtype),
+        "wk": (jax.random.normal(ks[1], (d_model, n_kv_heads * head_dim)) * sc(d_model)).astype(dtype),
+        "wv": (jax.random.normal(ks[2], (d_model, n_kv_heads * head_dim)) * sc(d_model)).astype(dtype),
+        "wo": (jax.random.normal(ks[3], (n_heads * head_dim, d_model)) * sc(n_heads * head_dim)).astype(dtype),
+    }
+    if qk_norm:
+        p["q_norm"] = jnp.zeros((head_dim,), dtype)
+        p["k_norm"] = jnp.zeros((head_dim,), dtype)
+    return p
+
+
+def attention(
+    params: dict,
+    x: jax.Array,                 # (B, S, d)
+    positions: jax.Array,         # (B, S)
+    *,
+    n_heads: int, n_kv_heads: int, head_dim: int,
+    rope_theta: float, qk_norm: bool = False,
+    causal: bool = True, window: int = 0, softcap: float = 0.0,
+    norm_eps: float = 1e-6,
+    ctx: ShardingCtx = NULL_CTX,
+    cross_kv: Optional[tuple] = None,    # (k, v) for cross-attention
+):
+    """Full-sequence (train/prefill) attention.  Returns (out, (k, v)) — the
+    produced k/v feed KV-cache initialisation in the serve path; single-token
+    decode lives in repro.serve.serve_step."""
+    B, S, d = x.shape
+    q = (x @ params["wq"]).reshape(B, S, n_heads, head_dim)
+    if cross_kv is None:
+        k = (x @ params["wk"]).reshape(B, S, n_kv_heads, head_dim)
+        v = (x @ params["wv"]).reshape(B, S, n_kv_heads, head_dim)
+    else:
+        k, v = cross_kv
+    if qk_norm:
+        q = rms_norm(q, params["q_norm"], norm_eps)
+        k = rms_norm(k, params["k_norm"], norm_eps)
+    if cross_kv is None and rope_theta > 0:
+        q = rope(q, positions, rope_theta)
+        k = rope(k, positions, rope_theta)
+
+    q = ctx.constrain(q, "batch", None, "heads", None)
+
+    out = flash_attention(
+        q, k, v, causal=causal and cross_kv is None, window=window,
+        softcap=softcap)
+    out = out.reshape(B, S, n_heads * head_dim)
+    out = out @ params["wo"]
+    return ctx.constrain(out, "batch", None, None), (k, v)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d_model: int, d_ff: int, dtype, gated: bool = True) -> dict:
+    ks = jax.random.split(key, 3)
+    sc_in = 1.0 / jnp.sqrt(d_model)
+    sc_out = 1.0 / jnp.sqrt(d_ff)
+    p = {
+        "w_up": (jax.random.normal(ks[0], (d_model, d_ff)) * sc_in).astype(dtype),
+        "w_down": (jax.random.normal(ks[1], (d_ff, d_model)) * sc_out).astype(dtype),
+    }
+    if gated:
+        p["w_gate"] = (jax.random.normal(ks[2], (d_model, d_ff)) * sc_in).astype(dtype)
+    return p
+
+
+def mlp(params: dict, x: jax.Array, ctx: ShardingCtx = NULL_CTX,
+        act=jax.nn.silu) -> jax.Array:
+    h = x @ params["w_up"]
+    if "w_gate" in params:
+        h = act(x @ params["w_gate"]) * h
+    else:
+        h = act(h)
+    h = ctx.constrain(h, "batch", None, "ffn")
+    return (h @ params["w_down"])
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def init_embedding(key, vocab: int, d_model: int, dtype, tie: bool) -> dict:
+    ks = jax.random.split(key, 2)
+    p = {"embed": (jax.random.normal(ks[0], (vocab, d_model)) * 0.02).astype(dtype)}
+    if not tie:
+        p["unembed"] = (jax.random.normal(ks[1], (d_model, vocab))
+                        * (1.0 / jnp.sqrt(d_model))).astype(dtype)
+    return p
+
+
+def embed(params: dict, tokens: jax.Array, ctx: ShardingCtx = NULL_CTX) -> jax.Array:
+    x = params["embed"][tokens]
+    return ctx.constrain(x, "batch", None, None)
+
+
+def unembed(params: dict, x: jax.Array, ctx: ShardingCtx = NULL_CTX,
+            softcap: float = 0.0) -> jax.Array:
+    w = params.get("unembed")
+    if w is None:
+        w = params["embed"].T
+    logits = (x @ w).astype(jnp.float32)
+    if softcap > 0.0:
+        logits = softcap * jnp.tanh(logits / softcap)
+    return ctx.constrain(logits, "batch", None, "vocab")

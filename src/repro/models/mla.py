@@ -1,0 +1,90 @@
+"""Multi-head Latent Attention (deepseek-v3) [arXiv:2412.19437].
+
+KV is compressed to a d_c-dim latent (plus one shared rotary key); queries
+optionally go through their own d_cq latent.  Training materialises per-head
+k/v from the latent and reuses the blockwise flash attention; decode (in
+repro.serve) uses the *absorbed* form — scores against the latent cache
+directly — which makes the per-token cost O(S · (d_c + rope)) instead of
+O(S · H · dh): the property that makes the MLA cache practical at 32k.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import NULL_CTX, ShardingCtx
+from .layers import flash_attention, rms_norm, rope
+
+
+def init_mla(key, d_model: int, n_heads: int, head_dim: int, d_c: int,
+             d_cq: int, rope_dim: int, dtype) -> dict:
+    ks = jax.random.split(key, 8)
+    sc = lambda f: 1.0 / math.sqrt(f)
+    H, dh, r = n_heads, head_dim, rope_dim
+    p = {
+        "w_dkv": (jax.random.normal(ks[0], (d_model, d_c + r)) * sc(d_model)).astype(dtype),
+        "kv_norm": jnp.zeros((d_c,), dtype),
+        "w_uk": (jax.random.normal(ks[1], (d_c, H * dh)) * sc(d_c)).astype(dtype),
+        "w_uv": (jax.random.normal(ks[2], (d_c, H * dh)) * sc(d_c)).astype(dtype),
+        "w_o": (jax.random.normal(ks[3], (H * dh, d_model)) * sc(H * dh)).astype(dtype),
+    }
+    if d_cq:
+        p["w_dq"] = (jax.random.normal(ks[4], (d_model, d_cq)) * sc(d_model)).astype(dtype)
+        p["q_norm"] = jnp.zeros((d_cq,), dtype)
+        p["w_uq"] = (jax.random.normal(ks[5], (d_cq, H * (dh + r))) * sc(d_cq)).astype(dtype)
+    else:
+        p["w_q"] = (jax.random.normal(ks[6], (d_model, H * (dh + r))) * sc(d_model)).astype(dtype)
+    return p
+
+
+def mla_latent(params: dict, x: jax.Array, positions, *, rope_dim: int,
+               rope_theta: float, norm_eps: float = 1e-6):
+    """Compute the (latent, rotary-key) pair that the decode cache stores."""
+    d_c = params["kv_norm"].shape[0]
+    ckr = x @ params["w_dkv"]
+    c, kr = ckr[..., :d_c], ckr[..., d_c:]
+    c = rms_norm(c, params["kv_norm"], norm_eps)
+    kr = rope(kr[..., None, :], positions, rope_theta)[..., 0, :]  # shared head
+    return c, kr
+
+
+def mla_queries(params: dict, x: jax.Array, positions, *, n_heads: int,
+                head_dim: int, rope_dim: int, rope_theta: float,
+                norm_eps: float = 1e-6):
+    B, S, _ = x.shape
+    H, dh, r = n_heads, head_dim, rope_dim
+    if "w_dq" in params:
+        cq = rms_norm(x @ params["w_dq"], params["q_norm"], norm_eps)
+        q = (cq @ params["w_uq"]).reshape(B, S, H, dh + r)
+    else:
+        q = (x @ params["w_q"]).reshape(B, S, H, dh + r)
+    q_nope, q_rope = q[..., :dh], q[..., dh:]
+    q_rope = rope(q_rope, positions, rope_theta)
+    return q_nope, q_rope
+
+
+def mla_attention(params: dict, x: jax.Array, positions, *, n_heads: int,
+                  head_dim: int, rope_dim: int, rope_theta: float,
+                  norm_eps: float = 1e-6, ctx: ShardingCtx = NULL_CTX):
+    """Training/prefill path: materialise per-head k/v, flash-attend.
+
+    Returns (out, (latent c, rotary key kr)) — the cache pair."""
+    B, S, _ = x.shape
+    H, dh, r = n_heads, head_dim, rope_dim
+    c, kr = mla_latent(params, x, positions, rope_dim=r, rope_theta=rope_theta,
+                       norm_eps=norm_eps)
+    q_nope, q_rope = mla_queries(
+        params, x, positions, n_heads=H, head_dim=dh, rope_dim=r,
+        rope_theta=rope_theta, norm_eps=norm_eps)
+    k_nope = (c @ params["w_uk"]).reshape(B, S, H, dh)
+    v = (c @ params["w_uv"]).reshape(B, S, H, dh)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(kr[:, :, None, :], (B, S, H, r))],
+                        axis=-1)
+    q = ctx.constrain(q, "batch", None, "heads", None)
+    out = flash_attention(q, k, v, causal=True)      # dv = dh < dqk = dh + r
+    out = out.reshape(B, S, H * dh) @ params["w_o"]
+    return ctx.constrain(out, "batch", None, None), (c, kr)

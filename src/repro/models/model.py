@@ -1,0 +1,441 @@
+"""Model assembly: every assigned architecture behind one init/forward API.
+
+  init_model(cfg, key)                  -> params pytree
+  forward(params, cfg, batch, ctx)      -> (logits fp32, aux dict)
+
+``batch`` is a dict: "tokens" (B, S_text) int32 always; "patches"
+(B, n_patches, d_vit) for VLM; "frames" (B, enc_frames, d_model) for the
+audio enc-dec (both are stub-frontend embeddings per the assignment).
+
+Every stack is lax.scan-over-layers with stacked params (HLO depth O(1)),
+rematerialised per layer.  Heterogeneous stacks scan over *superblocks*:
+gemma local:global patterns use a per-layer traced window array; zamba2
+scans (6 mamba + shared-attn) groups; xlstm scans (mLSTM, sLSTM+FFN) pairs.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.parallel.sharding import NULL_CTX, ShardingCtx
+from . import layers, mla, moe, ssm, xlstm
+
+VIT_DIM = 1024  # stub InternViT output dim
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.param_dtype == "bfloat16" else jnp.float32
+
+
+def window_pattern(cfg: ModelConfig) -> jnp.ndarray:
+    """Per-layer sliding windows: 0 = global.  gemma2: 1:1, gemma3: 5:1."""
+    if cfg.local_global_period <= 0 or cfg.local_window <= 0:
+        return jnp.zeros((cfg.n_layers,), jnp.int32) + jnp.int32(cfg.local_window)
+    pat = []
+    for i in range(cfg.n_layers):
+        is_global = (i % cfg.local_global_period) == cfg.local_global_period - 1
+        pat.append(0 if is_global else cfg.local_window)
+    return jnp.asarray(pat, jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# dense / vlm block
+# ---------------------------------------------------------------------------
+
+def _init_dense_block(key, cfg: ModelConfig, dt):
+    ks = jax.random.split(key, 4)
+    p = {
+        "ln1": jnp.zeros((cfg.d_model,), dt),
+        "attn": layers.init_attention(
+            ks[0], cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+            cfg.resolved_head_dim, cfg.qk_norm, dt),
+        "ln2": jnp.zeros((cfg.d_model,), dt),
+        "mlp": layers.init_mlp(ks[1], cfg.d_model, cfg.d_ff, dt),
+    }
+    if cfg.sandwich_norm:  # gemma family: pre+post block norms
+        p["ln1_post"] = jnp.zeros((cfg.d_model,), dt)
+        p["ln2_post"] = jnp.zeros((cfg.d_model,), dt)
+    return p
+
+
+def _dense_block(p, x, positions, window, cfg: ModelConfig, ctx):
+    h = layers.rms_norm(x, p["ln1"], cfg.norm_eps)
+    a, _ = layers.attention(
+        p["attn"], h, positions,
+        n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+        head_dim=cfg.resolved_head_dim, rope_theta=cfg.rope_theta,
+        qk_norm=cfg.qk_norm, causal=True, window=window,
+        softcap=cfg.attn_softcap, norm_eps=cfg.norm_eps, ctx=ctx)
+    if "ln1_post" in p:
+        a = layers.rms_norm(a, p["ln1_post"], cfg.norm_eps)
+    x = x + a
+    h = layers.rms_norm(x, p["ln2"], cfg.norm_eps)
+    m = layers.mlp(p["mlp"], h, ctx,
+                   act=jax.nn.gelu if cfg.mlp_act == "gelu" else jax.nn.silu)
+    if "ln2_post" in p:
+        m = layers.rms_norm(m, p["ln2_post"], cfg.norm_eps)
+    return x + m
+
+
+def _scan_stack(block_fn, stacked, x, per_layer, remat: bool,
+                constrain_fn=None):
+    """constrain_fn shards the carried residual (e.g. Megatron-SP over seq)
+    so the per-layer saved activation is sharded, not replicated."""
+    def body(carry, inp):
+        x, aux = carry
+        if constrain_fn is not None:
+            x = constrain_fn(x)
+        p, extra = inp
+        out = block_fn(p, x, extra)
+        if isinstance(out, tuple):
+            x, a = out
+            aux = aux + a
+        else:
+            x = out
+        if constrain_fn is not None:
+            x = constrain_fn(x)
+        return (x, aux), None
+
+    f = jax.checkpoint(body, prevent_cse=False) if remat else body
+    (x, aux), _ = lax.scan(f, (x, jnp.zeros((), jnp.float32)), (stacked, per_layer))
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_model(cfg: ModelConfig, key: jax.Array) -> dict:
+    dt = _dtype(cfg)
+    keys = jax.random.split(key, 16)
+    params: dict = {
+        "embedding": layers.init_embedding(keys[0], cfg.vocab, cfg.d_model, dt,
+                                           cfg.tie_embeddings),
+        "ln_f": jnp.zeros((cfg.d_model,), dt),
+    }
+
+    if cfg.family in ("dense", "vlm"):
+        lk = jax.random.split(keys[1], cfg.n_layers)
+        params["blocks"] = jax.vmap(lambda k: _init_dense_block(k, cfg, dt))(lk)
+        if cfg.family == "vlm":
+            params["patch_proj"] = (jax.random.normal(keys[2], (VIT_DIM, cfg.d_model))
+                                    / math.sqrt(VIT_DIM)).astype(dt)
+
+    elif cfg.family == "moe":
+        nd, nm = cfg.n_dense_layers, cfg.n_layers - cfg.n_dense_layers
+        if nd:
+            lk = jax.random.split(keys[1], nd)
+            params["dense_blocks"] = jax.vmap(
+                lambda k: _init_dense_block(k, cfg, dt))(lk)
+        lk = jax.random.split(keys[2], nm)
+
+        def init_moe_block(k):
+            ks = jax.random.split(k, 3)
+            p = {
+                "ln1": jnp.zeros((cfg.d_model,), dt),
+                "ln2": jnp.zeros((cfg.d_model,), dt),
+                "moe": moe.init_moe(ks[0], cfg.d_model, cfg.n_experts,
+                                    cfg.n_shared_experts, cfg.d_ff_expert, dt),
+            }
+            if cfg.use_mla:
+                p["attn"] = mla.init_mla(
+                    ks[1], cfg.d_model, cfg.n_heads, cfg.resolved_head_dim,
+                    cfg.mla_d_c, cfg.mla_d_cq, cfg.mla_rope_dim, dt)
+            else:
+                p["attn"] = layers.init_attention(
+                    ks[1], cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                    cfg.resolved_head_dim, cfg.qk_norm, dt)
+            return p
+
+        params["moe_blocks"] = jax.vmap(init_moe_block)(lk)
+        if cfg.mtp_depth:
+            params["mtp"] = {
+                "proj": (jax.random.normal(keys[3], (2 * cfg.d_model, cfg.d_model))
+                         / math.sqrt(2 * cfg.d_model)).astype(dt),
+                "block": _init_dense_block(keys[4], cfg, dt),
+                "ln": jnp.zeros((cfg.d_model,), dt),
+            }
+
+    elif cfg.family == "hybrid":
+        assert cfg.attn_every > 0 and cfg.n_layers % cfg.attn_every == 0
+        groups = cfg.n_layers // cfg.attn_every
+        lk = jax.random.split(keys[1], cfg.n_layers)
+
+        def init_mamba_layer(k):
+            return {
+                "ln": jnp.zeros((cfg.d_model,), dt),
+                "mixer": ssm.init_mamba2(k, cfg.d_model, cfg.ssm_state,
+                                         cfg.ssm_conv, cfg.ssm_expand,
+                                         cfg.ssm_head_dim, dt),
+            }
+
+        stacked = jax.vmap(init_mamba_layer)(lk)
+        params["mamba_blocks"] = jax.tree.map(
+            lambda a: a.reshape(groups, cfg.attn_every, *a.shape[1:]), stacked)
+        params["shared_attn"] = _init_dense_block(keys[2], cfg, dt)
+
+    elif cfg.family == "ssm":   # xlstm: (mLSTM, sLSTM) pairs
+        assert cfg.n_layers % 2 == 0
+        pairs = cfg.n_layers // 2
+        mk = jax.random.split(keys[1], pairs)
+        sk = jax.random.split(keys[2], pairs)
+        fk = jax.random.split(keys[3], pairs)
+        params["mlstm_blocks"] = jax.vmap(
+            lambda k: {"ln": jnp.zeros((cfg.d_model,), dt),
+                       "mixer": xlstm.init_mlstm(k, cfg.d_model, cfg.n_heads, dt)})(mk)
+        params["slstm_blocks"] = jax.vmap(
+            lambda k, k2: {"ln": jnp.zeros((cfg.d_model,), dt),
+                           "mixer": xlstm.init_slstm(k, cfg.d_model, cfg.n_heads, dt),
+                           "ln_ffn": jnp.zeros((cfg.d_model,), dt),
+                           "ffn": layers.init_mlp(k2, cfg.d_model,
+                                                  4 * cfg.d_model // 3, dt)})(sk, fk)
+
+    elif cfg.family == "encdec":
+        ek = jax.random.split(keys[1], cfg.n_enc_layers)
+
+        def init_enc(k):
+            ks = jax.random.split(k, 2)
+            return {
+                "ln1": jnp.zeros((cfg.d_model,), dt),
+                "attn": layers.init_attention(ks[0], cfg.d_model, cfg.n_heads,
+                                              cfg.n_kv_heads, cfg.resolved_head_dim,
+                                              False, dt),
+                "ln2": jnp.zeros((cfg.d_model,), dt),
+                "mlp": layers.init_mlp(ks[1], cfg.d_model, cfg.d_ff, dt, gated=False),
+            }
+
+        params["enc_blocks"] = jax.vmap(init_enc)(ek)
+        params["enc_ln_f"] = jnp.zeros((cfg.d_model,), dt)
+        dk = jax.random.split(keys[2], cfg.n_layers)
+
+        def init_dec(k):
+            ks = jax.random.split(k, 3)
+            return {
+                "ln1": jnp.zeros((cfg.d_model,), dt),
+                "attn": layers.init_attention(ks[0], cfg.d_model, cfg.n_heads,
+                                              cfg.n_kv_heads, cfg.resolved_head_dim,
+                                              False, dt),
+                "ln_x": jnp.zeros((cfg.d_model,), dt),
+                "xattn": layers.init_attention(ks[1], cfg.d_model, cfg.n_heads,
+                                               cfg.n_kv_heads, cfg.resolved_head_dim,
+                                               False, dt),
+                "ln2": jnp.zeros((cfg.d_model,), dt),
+                "mlp": layers.init_mlp(ks[2], cfg.d_model, cfg.d_ff, dt, gated=False),
+            }
+
+        params["dec_blocks"] = jax.vmap(init_dec)(dk)
+    else:
+        raise ValueError(cfg.family)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def forward(params: dict, cfg: ModelConfig, batch: dict,
+            ctx: ShardingCtx = NULL_CTX, return_hidden: bool = False):
+    """return_hidden=True skips the unembedding and yields the final normed
+    hidden states (the train loss uses chunked unembed+CE to avoid (B,S,V)
+    fp32 materialisation)."""
+    tokens = batch["tokens"]
+    B = tokens.shape[0]
+
+    if cfg.family == "encdec":
+        return _forward_encdec(params, cfg, batch, ctx, return_hidden)
+
+    x = layers.embed(params["embedding"], tokens, ctx)
+    if cfg.scale_embeddings:   # gemma
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    if cfg.family == "vlm":
+        patches = batch["patches"] @ params["patch_proj"]
+        x = jnp.concatenate([patches.astype(x.dtype), x], axis=1)
+    S = x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    aux = jnp.zeros((), jnp.float32)
+    sp = (lambda t: ctx.constrain(t, "batch", "seq_sp", None)) \
+        if cfg.seq_parallel else None
+
+    if cfg.family in ("dense", "vlm"):
+        wins = window_pattern(cfg)
+        x, _ = _scan_stack(
+            lambda p, x, w: _dense_block(p, x, positions, w, cfg, ctx),
+            params["blocks"], x, wins, cfg.remat, constrain_fn=sp)
+
+    elif cfg.family == "moe":
+        if cfg.n_dense_layers:
+            zeros = jnp.zeros((cfg.n_dense_layers,), jnp.int32)
+            x, _ = _scan_stack(
+                lambda p, x, w: _dense_block(p, x, positions, w, cfg, ctx),
+                params["dense_blocks"], x, zeros, cfg.remat, constrain_fn=sp)
+
+        def moe_block(p, x, _):
+            h = layers.rms_norm(x, p["ln1"], cfg.norm_eps)
+            if cfg.use_mla:
+                a, _ = mla.mla_attention(
+                    p["attn"], h, positions, n_heads=cfg.n_heads,
+                    head_dim=cfg.resolved_head_dim, rope_dim=cfg.mla_rope_dim,
+                    rope_theta=cfg.rope_theta, norm_eps=cfg.norm_eps, ctx=ctx)
+            else:
+                a, _ = layers.attention(
+                    p["attn"], h, positions, n_heads=cfg.n_heads,
+                    n_kv_heads=cfg.n_kv_heads, head_dim=cfg.resolved_head_dim,
+                    rope_theta=cfg.rope_theta, qk_norm=cfg.qk_norm,
+                    causal=True, norm_eps=cfg.norm_eps, ctx=ctx)
+            x = x + a
+            h = layers.rms_norm(x, p["ln2"], cfg.norm_eps)
+            m, a_loss = moe.moe(p["moe"], h, topk=cfg.moe_topk,
+                                capacity_factor=cfg.capacity_factor, ctx=ctx,
+                                fsdp_over_pod=cfg.fsdp_over_pod)
+            return x + m, a_loss
+
+        nm = cfg.n_layers - cfg.n_dense_layers
+        x, aux = _scan_stack(moe_block, params["moe_blocks"], x,
+                             jnp.zeros((nm,), jnp.int32), cfg.remat,
+                             constrain_fn=sp)
+        aux = aux * cfg.moe_aux_coef / max(nm, 1)
+
+    elif cfg.family == "hybrid":
+        def group(ps, x, _):
+            p_mamba, = (ps,)
+
+            def one(x, p):
+                h = layers.rms_norm(x, p["ln"], cfg.norm_eps)
+                o, _ = ssm.mamba2(p["mixer"], h, state=cfg.ssm_state,
+                                  conv=cfg.ssm_conv, expand=cfg.ssm_expand,
+                                  head_dim=cfg.ssm_head_dim, chunk=cfg.ssm_chunk,
+                                  norm_eps=cfg.norm_eps, ctx=ctx)
+                return x + o, None
+
+            x, _ = lax.scan(one, x, p_mamba)
+            # shared attention block (weights shared across groups — closure)
+            return _dense_block(params["shared_attn"], x, positions,
+                                jnp.int32(0), cfg, ctx)
+
+        x, _ = _scan_stack(group, params["mamba_blocks"], x,
+                           jnp.zeros((cfg.n_layers // cfg.attn_every,), jnp.int32),
+                           cfg.remat)
+
+    elif cfg.family == "ssm":
+        def pair(ps, x, _):
+            pm, psl = ps
+            h = layers.rms_norm(x, pm["ln"], cfg.norm_eps)
+            o, _ = xlstm.mlstm(pm["mixer"], h, n_heads=cfg.n_heads,
+                               norm_eps=cfg.norm_eps, ctx=ctx)
+            x = x + o
+            h = layers.rms_norm(x, psl["ln"], cfg.norm_eps)
+            o, _ = xlstm.slstm(psl["mixer"], h, n_heads=cfg.n_heads,
+                               norm_eps=cfg.norm_eps, ctx=ctx)
+            x = x + o
+            h = layers.rms_norm(x, psl["ln_ffn"], cfg.norm_eps)
+            return x + layers.mlp(psl["ffn"], h, ctx)
+
+        pairs = cfg.n_layers // 2
+        x, _ = _scan_stack(
+            lambda ps, x, w: pair(ps, x, w),
+            (params["mlstm_blocks"], params["slstm_blocks"]), x,
+            jnp.zeros((pairs,), jnp.int32), cfg.remat)
+
+    x = layers.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    out_aux = {"moe_aux": aux}
+    mtp_hidden = None
+    if cfg.family == "moe" and cfg.mtp_depth and "mtp" in params:
+        mtp_hidden = _mtp_head(params, cfg, x, tokens, positions, ctx)
+    if cfg.family == "vlm":
+        x = x[:, batch["patches"].shape[1]:]  # text positions only
+    if return_hidden:
+        if mtp_hidden is not None:
+            out_aux["mtp_hidden"] = mtp_hidden
+        return x, out_aux
+    logits = layers.unembed(params["embedding"], x, ctx, cfg.final_softcap)
+    if mtp_hidden is not None:
+        out_aux["mtp_logits"] = layers.unembed(
+            params["embedding"], mtp_hidden, ctx, cfg.final_softcap)
+    return logits, out_aux
+
+
+def _mtp_head(params, cfg, h_final, tokens, positions, ctx):
+    """DSv3-style depth-1 MTP: combine h_t with emb(token_{t+1}), one extra
+    block → hidden states that predict token_{t+2} via the shared unembed."""
+    p = params["mtp"]
+    emb_next = layers.embed(params["embedding"], jnp.roll(tokens, -1, axis=1), ctx)
+    h = jnp.concatenate([layers.rms_norm(h_final, p["ln"], cfg.norm_eps),
+                         emb_next.astype(h_final.dtype)], axis=-1)
+    h = h @ p["proj"]
+    return _dense_block(p["block"], h, positions, jnp.int32(0), cfg, ctx)
+
+
+def _forward_encdec(params, cfg: ModelConfig, batch, ctx,
+                    return_hidden: bool = False):
+    frames = batch["frames"]             # (B, T_enc, d_model) — stub frontend
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    Te = frames.shape[1]
+    enc_pos = jnp.broadcast_to(jnp.arange(Te, dtype=jnp.int32), (B, Te))
+    dec_pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+    x = frames.astype(_dtype(cfg)) + _sinusoid(Te, cfg.d_model, _dtype(cfg))
+
+    def enc_block(p, x, _):
+        h = layers.rms_norm(x, p["ln1"], cfg.norm_eps)
+        a, _ = layers.attention(p["attn"], h, enc_pos, n_heads=cfg.n_heads,
+                                n_kv_heads=cfg.n_kv_heads,
+                                head_dim=cfg.resolved_head_dim, rope_theta=0.0,
+                                causal=False, norm_eps=cfg.norm_eps, ctx=ctx)
+        x = x + a
+        h = layers.rms_norm(x, p["ln2"], cfg.norm_eps)
+        return x + layers.mlp(p["mlp"], h, ctx, act=jax.nn.gelu)
+
+    enc, _ = _scan_stack(enc_block, params["enc_blocks"], x,
+                         jnp.zeros((cfg.n_enc_layers,), jnp.int32), cfg.remat)
+    enc = layers.rms_norm(enc, params["enc_ln_f"], cfg.norm_eps)
+
+    y = layers.embed(params["embedding"], tokens, ctx)
+    y = y + _sinusoid(S, cfg.d_model, y.dtype)
+
+    def dec_block(p, y, _):
+        h = layers.rms_norm(y, p["ln1"], cfg.norm_eps)
+        a, _ = layers.attention(p["attn"], h, dec_pos, n_heads=cfg.n_heads,
+                                n_kv_heads=cfg.n_kv_heads,
+                                head_dim=cfg.resolved_head_dim, rope_theta=0.0,
+                                causal=True, norm_eps=cfg.norm_eps, ctx=ctx)
+        y = y + a
+        h = layers.rms_norm(y, p["ln_x"], cfg.norm_eps)
+        kx = (enc @ p["xattn"]["wk"]).reshape(B, Te, cfg.n_kv_heads, cfg.resolved_head_dim)
+        vx = (enc @ p["xattn"]["wv"]).reshape(B, Te, cfg.n_kv_heads, cfg.resolved_head_dim)
+        a, _ = layers.attention(p["xattn"], h, dec_pos, n_heads=cfg.n_heads,
+                                n_kv_heads=cfg.n_kv_heads,
+                                head_dim=cfg.resolved_head_dim, rope_theta=0.0,
+                                causal=False, norm_eps=cfg.norm_eps, ctx=ctx,
+                                cross_kv=(kx, vx))
+        y = y + a
+        h = layers.rms_norm(y, p["ln2"], cfg.norm_eps)
+        return y + layers.mlp(p["mlp"], h, ctx, act=jax.nn.gelu)
+
+    y, _ = _scan_stack(dec_block, params["dec_blocks"], y,
+                       jnp.zeros((cfg.n_layers,), jnp.int32), cfg.remat)
+    y = layers.rms_norm(y, params["ln_f"], cfg.norm_eps)
+    if return_hidden:
+        return y, {"moe_aux": jnp.zeros((), jnp.float32)}
+    logits = layers.unembed(params["embedding"], y, ctx, cfg.final_softcap)
+    return logits, {"moe_aux": jnp.zeros((), jnp.float32)}
+
+
+@functools.lru_cache(maxsize=32)
+def _sinusoid_np(S: int, d: int):
+    import numpy as np
+    pos = np.arange(S)[:, None]
+    i = np.arange(d // 2)[None, :]
+    ang = pos / (10000 ** (2 * i / d))
+    out = np.concatenate([np.sin(ang), np.cos(ang)], axis=-1)
+    return out
+
+
+def _sinusoid(S: int, d: int, dtype):
+    return jnp.asarray(_sinusoid_np(S, d), dtype)[None]

@@ -1,0 +1,200 @@
+"""Mixture-of-Experts layers (deepseek-moe-16b, deepseek-v3-671b).
+
+Fine-grained MoE: ``n_shared`` always-on experts + ``n_experts`` routed
+experts with top-k softmax gating and a Switch-style load-balance aux loss.
+
+Two execution paths with identical semantics (equivalence-tested):
+  * ``dense``  — every expert computed for every token, mask-combined.
+    Exact, dropless; used on a single device (smoke tests, references).
+  * ``ep``     — expert parallelism: experts sharded over the mesh "model"
+    axis inside a shard_map.  Activations are replicated across the model
+    axis (they already are, in this framework's sharding scheme), so each
+    model shard computes only the tokens routed to ITS experts via a
+    rank-in-expert capacity dispatch (cumsum-based, no sort), and a single
+    psum over "model" combines expert outputs.
+    Baseline combine = all-reduce; the all-to-all dispatch variant is a
+    §Perf hillclimb (see EXPERIMENTS.md).
+
+Capacity: C = ceil(T_local * topk / n_experts * capacity_factor); overflow
+tokens are dropped for that expert (standard dropping implementation).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel.sharding import NULL_CTX, ShardingCtx
+from . import layers
+
+
+def init_moe(key, d_model: int, n_experts: int, n_shared: int,
+             d_ff_expert: int, dtype) -> dict:
+    ks = jax.random.split(key, 5)
+    sc_in = 1.0 / math.sqrt(d_model)
+    sc_out = 1.0 / math.sqrt(d_ff_expert)
+    p = {
+        "router": jax.random.normal(ks[0], (d_model, n_experts), jnp.float32) * sc_in,
+        "w_gate": (jax.random.normal(ks[1], (n_experts, d_model, d_ff_expert)) * sc_in).astype(dtype),
+        "w_up": (jax.random.normal(ks[2], (n_experts, d_model, d_ff_expert)) * sc_in).astype(dtype),
+        "w_down": (jax.random.normal(ks[3], (n_experts, d_ff_expert, d_model)) * sc_out).astype(dtype),
+    }
+    if n_shared:
+        p["shared"] = layers.init_mlp(ks[4], d_model, n_shared * d_ff_expert, dtype)
+    return p
+
+
+def _route(router_w, x_flat, topk: int):
+    """Returns (weights (T,k) fp32, expert ids (T,k) int32, aux loss scalar)."""
+    logits = x_flat.astype(jnp.float32) @ router_w            # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, idx = lax.top_k(probs, topk)
+    w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)
+    # Switch-style load balance: E * sum_e f_e * p_e
+    E = router_w.shape[1]
+    f = jnp.zeros((E,), jnp.float32).at[idx.reshape(-1)].add(1.0)
+    f = f / jnp.maximum(idx.size, 1)
+    pbar = probs.mean(0)
+    aux = E * jnp.sum(f * pbar)
+    return w, idx, aux
+
+
+def _expert_ffn(p, xs):
+    """xs (E_local, C, d) → (E_local, C, d), SwiGLU per expert."""
+    h = jnp.einsum("ecd,edf->ecf", xs, p["w_up"])
+    g = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xs, p["w_gate"]))
+    return jnp.einsum("ecf,efd->ecd", h * g, p["w_down"])
+
+
+def _dispatch_compute_combine(p_local, x_flat, w, idx, e_lo, E_local: int, C):
+    """Capacity dispatch for experts in [e_lo, e_lo + E_local) with local
+    weights.  ``e_lo`` may be traced (lax.axis_index under shard_map);
+    ``E_local`` is static.  Sort-based rank-in-expert (O(T k) memory — the
+    earlier cumsum-matrix variant materialised (T·k, E_local) int32 = 33 GB
+    on dsv3) and per-top-k-slot scatter/gather loops (avoids (T·k, d)
+    intermediates).  x_flat (T, d); w/idx (T, k) → y (T, d) fp32."""
+    T, d = x_flat.shape
+    k = idx.shape[1]
+    a_e = idx.reshape(-1)                       # (T*k,) global expert ids
+    local = (a_e >= e_lo) & (a_e < e_lo + E_local)
+    le = jnp.clip(a_e - e_lo, 0, E_local - 1)
+    key = jnp.where(local, le, E_local)         # non-local → overflow group
+    order = jnp.argsort(key)
+    counts = jnp.zeros((E_local + 1,), jnp.int32).at[key].add(1)
+    starts = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                              jnp.cumsum(counts)[:-1]])
+    rank_sorted = jnp.arange(T * k, dtype=jnp.int32) - starts[key[order]]
+    rank = jnp.zeros((T * k,), jnp.int32).at[order].set(rank_sorted)
+    ok = local & (rank < C)
+    pos = jnp.where(ok, le * C + rank, E_local * C)  # (T*k,) dump slot at end
+
+    pos_k = pos.reshape(T, k)
+
+    def scatter_step(buf, pos_j):
+        return buf.at[pos_j].add(x_flat), None
+
+    buf = jnp.zeros((E_local * C + 1, d), x_flat.dtype)
+    buf, _ = jax.lax.scan(jax.checkpoint(scatter_step, prevent_cse=False),
+                          buf, pos_k.T)
+    ys = _expert_ffn(p_local, buf[:-1].reshape(E_local, C, d))
+    ys = jnp.concatenate([ys.reshape(E_local * C, d),
+                          jnp.zeros((1, d), ys.dtype)])  # dump row reads 0
+
+    def combine_step(y, inp):
+        pos_j, w_j = inp
+        return y + ys[pos_j].astype(jnp.float32) * w_j[:, None], None
+
+    # scan (not an unrolled loop): XLA reuses one fp32 (T, d) accumulator
+    # instead of keeping k multiply-fusion outputs alive (~14 GB on dsv3)
+    y = jnp.zeros((T, d), jnp.float32)
+    y, _ = jax.lax.scan(jax.checkpoint(combine_step, prevent_cse=False),
+                        y, (pos_k.T, w.T))
+    return y
+
+
+def moe_dense(params, x, *, topk: int, capacity_factor: float,
+              ctx: ShardingCtx = NULL_CTX):
+    """Single-device (or auto-sharded) reference path."""
+    B, S, d = x.shape
+    E = params["router"].shape[1]
+    x_flat = x.reshape(B * S, d)
+    w, idx, aux = _route(params["router"], x_flat, topk)
+    C = max(1, math.ceil(B * S * topk / E * capacity_factor))
+    y = _dispatch_compute_combine(params, x_flat, w, idx, jnp.int32(0), E, C)
+    y = y.astype(x.dtype).reshape(B, S, d)
+    if "shared" in params:
+        y = y + layers.mlp(params["shared"], x, ctx)
+    return y, aux
+
+
+def moe_ep(params, x, *, topk: int, capacity_factor: float, ctx: ShardingCtx,
+           fsdp_over_pod: bool = False):
+    """Expert-parallel path: experts sharded on the mesh "model" axis.
+
+    In-specs MATCH the stored FSDP layout (experts also sharded over "data"
+    on their d dim) and the ZeRO-style weight all-gather happens explicitly
+    *inside*, per layer — otherwise XLA hoists a resharding all-gather of the
+    whole stacked-layer array into every scan iteration (measured 5.8 TB/dev
+    on dsv3; see EXPERIMENTS.md §Dry-run)."""
+    mesh = ctx.mesh
+    B, S, d = x.shape
+    E = params["router"].shape[1]
+    M = mesh.shape["model"]
+    assert E % M == 0, (E, M)
+    E_local = E // M
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    has_data = "data" in mesh.axis_names and mesh.shape["data"] > 1
+    fsdp_ax = ("data", "pod") if (fsdp_over_pod and "pod" in mesh.axis_names) \
+        else "data"
+    # match param_specs: w_gate/w_up are (E, d, f) → P("model", fsdp, None);
+    # w_down is (E, f, d) with FSDP on its (larger) d dim → P("model", None, fsdp)
+    wg_spec = P("model", fsdp_ax, None) if has_data else P("model", None, None)
+    wd_spec = P("model", None, fsdp_ax) if has_data else P("model", None, None)
+
+    def inner(router_w, wg, wu, wd, x_local):
+        Bl, Sl, _ = x_local.shape
+        if has_data:  # ZeRO gather of this layer's local experts
+            wg = lax.all_gather(wg, fsdp_ax, axis=1, tiled=True)
+            wu = lax.all_gather(wu, fsdp_ax, axis=1, tiled=True)
+            wd = lax.all_gather(wd, fsdp_ax, axis=2, tiled=True)
+        x_flat = x_local.reshape(Bl * Sl, d)
+        w, idx, aux = _route(router_w, x_flat, topk)
+        C = max(1, math.ceil(Bl * Sl * topk / E * capacity_factor))
+        m = lax.axis_index("model")
+        p_local = {"w_gate": wg, "w_up": wu, "w_down": wd}
+        y = _dispatch_compute_combine(
+            p_local, x_flat, w, idx, m * E_local, E_local, C)
+        # bf16 combine psum: halves the dominant per-layer all-reduce
+        # (§Perf hillclimb 2); per-token sums have <= topk+1 terms
+        y = lax.psum(y.astype(jnp.bfloat16), "model").astype(jnp.float32)
+        # per-shard load-balance estimate, averaged across the whole mesh
+        # (Switch-style; differs from the global product by O(1/shards))
+        aux = lax.pmean(aux, ("model",) + batch_axes)
+        return y.reshape(Bl, Sl, d).astype(x_local.dtype), aux
+
+    y, aux = jax.shard_map(
+        inner, mesh=mesh,
+        in_specs=(P(), wg_spec, wg_spec, wd_spec,
+                  P(batch_axes, None, None)),
+        out_specs=(P(batch_axes, None, None), P()),
+        check_vma=False,
+    )(params["router"], params["w_gate"], params["w_up"], params["w_down"], x)
+    if "shared" in params:
+        y = y + layers.mlp(params["shared"], x, ctx)
+    return y, aux
+
+
+def moe(params, x, *, topk: int, capacity_factor: float,
+        ctx: ShardingCtx = NULL_CTX, fsdp_over_pod: bool = False):
+    """Dispatching entry point: EP when a model axis exists, dense otherwise."""
+    if ctx.mesh is not None and "model" in ctx.mesh.axis_names \
+            and ctx.mesh.shape["model"] > 1 \
+            and params["router"].shape[1] % ctx.mesh.shape["model"] == 0:
+        return moe_ep(params, x, topk=topk, capacity_factor=capacity_factor,
+                      ctx=ctx, fsdp_over_pod=fsdp_over_pod)
+    return moe_dense(params, x, topk=topk, capacity_factor=capacity_factor, ctx=ctx)

@@ -1,0 +1,182 @@
+"""Mamba2 (SSD) blocks — the zamba2 hybrid backbone.
+
+Chunked SSD algorithm [arXiv:2405.21060]: within a chunk the recurrence is
+an attention-like quadratic form with a decay mask; across chunks only the
+(H, N, P) boundary state is carried by a lax.scan — so memory is
+O(S·Q + S²/Q·...per-chunk), never O(S²), and decode is an O(1) state update
+(the property that qualifies zamba2 for the long_500k shape).
+
+Single group (B/C shared across heads), per-head scalar decay A — the
+standard Mamba2 parameterisation.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.parallel.sharding import NULL_CTX, ShardingCtx
+from .layers import rms_norm
+
+
+def init_mamba2(key, d_model: int, state: int, conv: int, expand: int,
+                head_dim: int, dtype) -> dict:
+    d_in = expand * d_model
+    H = d_in // head_dim
+    ks = jax.random.split(key, 6)
+    sc = 1.0 / math.sqrt(d_model)
+    in_dim = 2 * d_in + 2 * state + H
+    return {
+        "w_in": (jax.random.normal(ks[0], (d_model, in_dim)) * sc).astype(dtype),
+        "conv_w": (jax.random.normal(ks[1], (conv, d_in + 2 * state)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((d_in + 2 * state,), dtype),
+        "A_log": jnp.zeros((H,), jnp.float32),            # A = -exp(A_log) = -1
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.full((H,), math.log(math.e - 1), jnp.float32),  # softplus->1
+        "norm_w": jnp.zeros((d_in,), dtype),
+        "w_out": (jax.random.normal(ks[2], (d_in, d_model))
+                  * (1.0 / math.sqrt(d_in))).astype(dtype),
+    }
+
+
+def _causal_conv1d(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv: x (B, S, C), w (K, C)."""
+    K = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(K):  # K is tiny (4); unrolled adds, no gather
+        out = out + pad[:, i:i + x.shape[1], :] * w[i][None, None, :]
+    return out + b
+
+
+class SSMCache(NamedTuple):
+    state: jax.Array       # (B, H, N, P) fp32 — SSD boundary state
+    conv_buf: jax.Array    # (B, K-1, C) — causal conv tail
+
+
+def _ssd_chunked(xh, Bm, Cm, dt, A, chunk: int):
+    """xh (B,S,H,P), Bm/Cm (B,S,N), dt (B,S,H) fp32, A (H,) negative.
+
+    Returns (y (B,S,H,P) fp32, final state (B,H,N,P))."""
+    Bsz, S, H, Pd = xh.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    while S % Q:
+        Q -= 1
+    nc = S // Q
+
+    xc = xh.reshape(Bsz, nc, Q, H, Pd).astype(jnp.float32)
+    Bc = Bm.reshape(Bsz, nc, Q, N).astype(jnp.float32)
+    Cc = Cm.reshape(Bsz, nc, Q, N).astype(jnp.float32)
+    dtc = dt.reshape(Bsz, nc, Q, H)
+    la = dtc * A[None, None, None, :]                  # log decay, <= 0
+    # move chunk axis first for scan
+    xc, Bc, Cc, dtc, la = (jnp.moveaxis(t, 1, 0) for t in (xc, Bc, Cc, dtc, la))
+
+    iq = lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    jq = lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    tril = iq >= jq
+
+    import os
+    naive = os.environ.get("REPRO_SSD_NAIVE") == "1"  # §Perf A/B toggle
+
+    def chunk_step(state, inp):
+        x, Bk, Ck, dtk, lak = inp                      # (B,Q,...) for one chunk
+        cum = jnp.cumsum(lak, axis=1)                  # (B,Q,H) inclusive
+        if naive:  # pre-hillclimb baseline: fp32 G + separate dt contraction
+            G = jnp.exp(cum[:, :, None, :] - cum[:, None, :, :])
+            G = jnp.where(tril[None, :, :, None], G, 0.0)
+            scores = jnp.einsum("bqn,bjn->bqj", Ck, Bk)
+            y_intra = jnp.einsum("bqj,bqjh,bjh,bjhp->bqhp", scores, G, dtk, x)
+            y_inter = jnp.einsum("bqn,bhnp,bqh->bqhp", Ck, state, jnp.exp(cum))
+            dec_end = jnp.exp(cum[:, -1:, :] - cum)
+            s_new = state * jnp.exp(cum[:, -1, :])[:, :, None, None] \
+                + jnp.einsum("bjn,bjh,bjhp->bhnp", Bk, dec_end * dtk, x)
+            return s_new, y_intra + y_inter
+        xd = x * dtk[..., None]                        # fold dt once: (B,Q,H,P)
+        # intra-chunk: one decay-weighted score tensor in bf16 — the fp32
+        # (B,Q,Q,H) G tensor dominated the zamba2 memory term (§Perf)
+        G = jnp.exp(cum[:, :, None, :] - cum[:, None, :, :])   # (B,Q,Q,H)
+        W = (jnp.where(tril[None, :, :, None], G, 0.0)
+             * jnp.einsum("bqn,bjn->bqj", Ck, Bk)[..., None]).astype(jnp.bfloat16)
+        y_intra = jnp.einsum("bqjh,bjhp->bqhp", W,
+                             xd.astype(jnp.bfloat16)).astype(jnp.float32)
+        # inter-chunk: y_t += exp(cum_t) * C_t @ S_prev
+        y_inter = jnp.einsum("bqn,bhnp,bqh->bqhp",
+                             Ck, state, jnp.exp(cum))
+        # state update: S = exp(cum_Q) S + sum_j exp(cum_Q - cum_j) dt_j B_j x_j^T
+        dec_end = jnp.exp(cum[:, -1:, :] - cum)                # (B,Q,H)
+        s_new = state * jnp.exp(cum[:, -1, :])[:, :, None, None] \
+            + jnp.einsum("bjn,bjhp->bhnp", Bk, dec_end[..., None] * xd)
+        return s_new, y_intra + y_inter
+
+    s0 = jnp.zeros((Bsz, H, N, Pd), jnp.float32)
+    step = chunk_step if naive else jax.checkpoint(chunk_step, prevent_cse=False)
+    s_final, yc = lax.scan(step, s0, (xc, Bc, Cc, dtc, la))
+    y = jnp.moveaxis(yc, 0, 1).reshape(Bsz, S, H, Pd)
+    return y, s_final
+
+
+def mamba2(params: dict, x: jax.Array, *, state: int, conv: int, expand: int,
+           head_dim: int, chunk: int, norm_eps: float = 1e-6,
+           ctx: ShardingCtx = NULL_CTX,
+           cache: Optional[SSMCache] = None):
+    """Full-sequence Mamba2 mixer.  Returns (out (B,S,d), final SSMCache)."""
+    B, S, d = x.shape
+    d_in = expand * d
+    H = d_in // head_dim
+    proj = x @ params["w_in"]
+    z, xr, Bm, Cm, dt_raw = jnp.split(
+        proj, [d_in, 2 * d_in, 2 * d_in + state, 2 * d_in + 2 * state], axis=-1)
+    xbc_raw = jnp.concatenate([xr, Bm, Cm], axis=-1)
+    xbc = jax.nn.silu(_causal_conv1d(xbc_raw, params["conv_w"], params["conv_b"]))
+    xr, Bm, Cm = jnp.split(xbc, [d_in, d_in + state], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+
+    xh = xr.reshape(B, S, H, head_dim)
+    xh = ctx.constrain(xh, "batch", None, "heads", None)
+    y, s_final = _ssd_chunked(xh, Bm, Cm, dt, A, chunk)
+    y = y + params["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(B, S, d_in).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["norm_w"], norm_eps)
+    out = y @ params["w_out"]
+    cache_out = None
+    if S >= conv - 1:
+        cache_out = SSMCache(state=s_final,
+                             conv_buf=xbc_raw[:, S - (conv - 1):, :])
+    return ctx.constrain(out, "batch", None, None), cache_out
+
+
+def mamba2_decode_step(params: dict, x: jax.Array, cache: SSMCache, *,
+                       state: int, expand: int, head_dim: int,
+                       norm_eps: float = 1e-6):
+    """Single-token decode: O(1) state update.  x (B, 1, d)."""
+    B, _, d = x.shape
+    d_in = expand * d
+    H = d_in // head_dim
+    proj = x[:, 0] @ params["w_in"]
+    z, xr, Bm, Cm, dt_raw = jnp.split(
+        proj, [d_in, 2 * d_in, 2 * d_in + state, 2 * d_in + 2 * state], axis=-1)
+    xbc_raw = jnp.concatenate([xr, Bm, Cm], axis=-1)      # (B, C) pre-conv
+    window = jnp.concatenate([cache.conv_buf, xbc_raw[:, None, :]], axis=1)  # (B,K,C)
+    conv = (window * params["conv_w"][None]).sum(axis=1) + params["conv_b"]
+    xbc = jax.nn.silu(conv)
+    xr, Bm, Cm = jnp.split(xbc, [d_in, d_in + state], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])  # (B,H)
+    A = -jnp.exp(params["A_log"])
+    a = jnp.exp(dt * A)                                   # (B,H)
+    xh = xr.reshape(B, H, head_dim).astype(jnp.float32)
+    s = cache.state * a[:, :, None, None] + jnp.einsum(
+        "bn,bhp->bhnp", Bm.astype(jnp.float32), xh * dt[..., None])
+    y = jnp.einsum("bn,bhnp->bhp", Cm.astype(jnp.float32), s)
+    y = y + params["D"][None, :, None] * xh
+    y = y.reshape(B, d_in).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["norm_w"], norm_eps)
+    out = (y @ params["w_out"])[:, None, :]
+    new_tail = jnp.concatenate(
+        [cache.conv_buf[:, 1:], xbc_raw[:, None]], axis=1)
+    return out, SSMCache(state=s, conv_buf=new_tail)

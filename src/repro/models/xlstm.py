@@ -1,0 +1,178 @@
+"""xLSTM blocks (xlstm-125m): stabilised mLSTM (matrix memory) + sLSTM.
+
+Both cells are *exact sequential* recurrences via lax.scan over time — the
+architecture's native form (the published CUDA kernels fuse the same math).
+Decode is the same cell applied to one step, so long_500k decode is O(1)
+state, which is what qualifies xlstm for that shape.
+
+mLSTM: per-head matrix memory C (Pv, Pk), normaliser n (Pk), stabiliser m.
+sLSTM: per-head scalar-memory cell with block-diagonal recurrent weights.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.parallel.sharding import NULL_CTX, ShardingCtx
+from .layers import rms_norm
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def init_mlstm(key, d_model: int, n_heads: int, dtype, expand: int = 2) -> dict:
+    d_in = expand * d_model
+    P = d_in // n_heads
+    ks = jax.random.split(key, 8)
+    sc = 1.0 / math.sqrt(d_model)
+    sci = 1.0 / math.sqrt(d_in)
+    return {
+        "w_up": (jax.random.normal(ks[0], (d_model, d_in)) * sc).astype(dtype),
+        "w_gate": (jax.random.normal(ks[1], (d_model, d_in)) * sc).astype(dtype),
+        "w_q": (jax.random.normal(ks[2], (d_in, d_in)) * sci).astype(dtype),
+        "w_k": (jax.random.normal(ks[3], (d_in, d_in)) * sci).astype(dtype),
+        "w_v": (jax.random.normal(ks[4], (d_in, d_in)) * sci).astype(dtype),
+        "w_if": (jax.random.normal(ks[5], (d_in, 2 * n_heads)) * sci).astype(dtype),
+        "b_if": jnp.concatenate([jnp.zeros((n_heads,)), 3.0 * jnp.ones((n_heads,))]).astype(jnp.float32),
+        "norm_w": jnp.zeros((d_in,), dtype),
+        "w_down": (jax.random.normal(ks[6], (d_in, d_model)) * sci).astype(dtype),
+    }
+
+
+class MLSTMState(NamedTuple):
+    C: jax.Array   # (B, H, Pv, Pk) fp32
+    n: jax.Array   # (B, H, Pk) fp32
+    m: jax.Array   # (B, H) fp32
+
+
+def mlstm_init_state(B: int, H: int, P: int) -> MLSTMState:
+    return MLSTMState(
+        C=jnp.zeros((B, H, P, P), jnp.float32),
+        n=jnp.zeros((B, H, P), jnp.float32),
+        m=jnp.full((B, H), -jnp.inf, jnp.float32),
+    )
+
+
+def _mlstm_cell(state: MLSTMState, q, k, v, i_raw, f_raw):
+    """One stabilised mLSTM step.  q/k/v (B,H,P) fp32; gates (B,H) fp32."""
+    logf = jax.nn.log_sigmoid(f_raw)
+    m_new = jnp.maximum(logf + state.m, i_raw)
+    m_new = jnp.where(jnp.isinf(state.m), i_raw, m_new)
+    i = jnp.exp(i_raw - m_new)
+    f = jnp.exp(logf + state.m - m_new)
+    f = jnp.where(jnp.isinf(state.m), 0.0, f)
+    C = f[..., None, None] * state.C + i[..., None, None] * (
+        v[..., :, None] * k[..., None, :])
+    n = f[..., None] * state.n + i[..., None] * k
+    h_num = jnp.einsum("bhvk,bhk->bhv", C, q)
+    h_den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, q)), 1.0)
+    h = h_num / h_den[..., None]
+    return MLSTMState(C=C, n=n, m=m_new), h
+
+
+def mlstm(params: dict, x: jax.Array, *, n_heads: int, expand: int = 2,
+          norm_eps: float = 1e-6, ctx: ShardingCtx = NULL_CTX,
+          state: Optional[MLSTMState] = None):
+    """Full-sequence mLSTM mixer.  x (B,S,d) → (out, final state)."""
+    B, S, d = x.shape
+    d_in = expand * d
+    H = n_heads
+    P = d_in // H
+    up = x @ params["w_up"]
+    gate = x @ params["w_gate"]
+    q = (up @ params["w_q"]).reshape(B, S, H, P).astype(jnp.float32) / math.sqrt(P)
+    k = (up @ params["w_k"]).reshape(B, S, H, P).astype(jnp.float32) / math.sqrt(P)
+    v = (up @ params["w_v"]).reshape(B, S, H, P).astype(jnp.float32)
+    ifg = (up @ params["w_if"]).astype(jnp.float32) + params["b_if"]
+    i_raw, f_raw = jnp.split(ifg.reshape(B, S, 2 * H), 2, axis=-1)
+
+    if state is None:
+        state = mlstm_init_state(B, H, P)
+
+    def step(s, inp):
+        qt, kt, vt, it, ft = inp
+        s, h = _mlstm_cell(s, qt, kt, vt, it, ft)
+        return s, h
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (q, k, v, i_raw, f_raw))
+    state, hs = lax.scan(step, state, xs)
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, S, d_in).astype(x.dtype)
+    h = rms_norm(h, params["norm_w"], norm_eps) * jax.nn.silu(gate)
+    return h @ params["w_down"], state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def init_slstm(key, d_model: int, n_heads: int, dtype) -> dict:
+    P = d_model // n_heads
+    ks = jax.random.split(key, 4)
+    sc = 1.0 / math.sqrt(d_model)
+    scp = 1.0 / math.sqrt(P)
+    return {
+        # 4 gates (i, f, z, o): input and block-diag recurrent weights
+        "w_x": (jax.random.normal(ks[0], (d_model, 4 * d_model)) * sc).astype(dtype),
+        "w_r": (jax.random.normal(ks[1], (4, n_heads, P, P)) * scp).astype(dtype),
+        "b": jnp.zeros((4, d_model), jnp.float32).at[1].set(3.0),  # forget-bias
+        "norm_w": jnp.zeros((d_model,), dtype),
+        "w_out": (jax.random.normal(ks[2], (d_model, d_model)) * sc).astype(dtype),
+    }
+
+
+class SLSTMState(NamedTuple):
+    c: jax.Array   # (B, d) fp32
+    n: jax.Array   # (B, d) fp32
+    h: jax.Array   # (B, d) fp32
+    m: jax.Array   # (B, d) fp32
+
+
+def slstm_init_state(B: int, d: int) -> SLSTMState:
+    z = jnp.zeros((B, d), jnp.float32)
+    return SLSTMState(c=z, n=z, h=z, m=jnp.full((B, d), -jnp.inf))
+
+
+def _slstm_cell(state: SLSTMState, xw, params, H: int, P: int):
+    """xw: (B, 4d) precomputed input projections for one step."""
+    B = xw.shape[0]
+    d = xw.shape[1] // 4
+    hprev = state.h.reshape(B, H, P)
+    rec = jnp.einsum("ghpq,bhq->gbhp", params["w_r"].astype(jnp.float32), hprev)
+    gates = xw.reshape(B, 4, d).transpose(1, 0, 2) + rec.reshape(4, B, d) \
+        + params["b"][:, None, :]
+    i_raw, f_raw, z_raw, o_raw = gates
+    logf = jax.nn.log_sigmoid(f_raw)
+    m_new = jnp.maximum(logf + state.m, i_raw)
+    m_new = jnp.where(jnp.isinf(state.m), i_raw, m_new)
+    i = jnp.exp(i_raw - m_new)
+    f = jnp.exp(logf + state.m - m_new)
+    f = jnp.where(jnp.isinf(state.m), 0.0, f)
+    c = f * state.c + i * jnp.tanh(z_raw)
+    n = f * state.n + i
+    h = jax.nn.sigmoid(o_raw) * c / jnp.maximum(n, 1.0)
+    return SLSTMState(c=c, n=n, h=h, m=m_new)
+
+
+def slstm(params: dict, x: jax.Array, *, n_heads: int, norm_eps: float = 1e-6,
+          ctx: ShardingCtx = NULL_CTX, state: Optional[SLSTMState] = None):
+    B, S, d = x.shape
+    P = d // n_heads
+    xw = (x @ params["w_x"]).astype(jnp.float32)           # (B,S,4d)
+    if state is None:
+        state = slstm_init_state(B, d)
+
+    def step(s, xwt):
+        s = _slstm_cell(s, xwt, params, n_heads, P)
+        return s, s.h
+
+    state, hs = lax.scan(step, state, jnp.moveaxis(xw, 1, 0))
+    h = jnp.moveaxis(hs, 0, 1).astype(x.dtype)
+    h = rms_norm(h, params["norm_w"], norm_eps)
+    out = h @ params["w_out"]
+    # the sLSTM block's 4/3-factor post-FFN is added by the block assembly
+    return out, state

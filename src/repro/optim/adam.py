@@ -1,0 +1,234 @@
+"""Optimizers: AdamW (fp32 states), Adam8bit (block-quantised moments),
+Adafactor (factored second moment) — optax-style (init/update) pure pytrees.
+
+Adam8bit is what lets deepseek-v3-671b train on 512 chips: per-64-block
+absmax-scaled int8 first/second moments cut optimizer state from 8 bytes to
+~2.06 bytes per parameter (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: callable
+    update: callable   # (grads, state, params) -> (new_params, new_state)
+
+
+
+_CHUNK_THRESHOLD = 2 ** 27  # elements; larger leaves update layer-by-layer
+
+
+def _maybe_map(upd, *leaves):
+    """Apply ``upd`` leaf-wise, scanning over the leading (layer-stack) dim
+    for very large leaves so the fp32 moment temporaries stay per-layer
+    (a 58-layer dsv3 expert leaf would otherwise materialise ~17 GB of fp32
+    m/v/u at once — EXPERIMENTS.md §Dry-run)."""
+    p = leaves[-1]
+    if p.ndim >= 2 and p.shape[0] >= 4 and p.size > _CHUNK_THRESHOLD:
+        # statically-sliced chunks: bound the fp32 temporaries without a
+        # while loop (XLA pessimises sharded dynamic-slice loops) and
+        # without full per-layer unrolling (compile-time blowup).
+        n = p.shape[0]
+        n_chunks = min(min(16, n), max(2, p.size // _CHUNK_THRESHOLD))
+        step_sz = -(-n // n_chunks)
+        outs = []
+        for i0 in range(0, n, step_sz):
+            outs.append(upd(*(l[i0:i0 + step_sz] for l in leaves)))
+        return tuple(jnp.concatenate([o[j] for o in outs])
+                     for j in range(len(outs[0])))
+    return upd(*leaves)
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+class AdamState(NamedTuple):
+    step: jax.Array
+    m: dict
+    v: dict
+
+
+def adamw(lr: float = 3e-4, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.01,
+          warmup: int = 100) -> Optimizer:
+    def schedule(step):
+        s = step.astype(jnp.float32)
+        return lr * jnp.minimum(1.0, (s + 1) / warmup)
+
+    def init(params):
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return AdamState(step=jnp.zeros((), jnp.int32), m=zeros,
+                         v=jax.tree.map(jnp.copy, zeros))
+
+    def update(grads, state, params):
+        step = state.step + 1
+        lr_t = schedule(step)
+        b1c = 1 - b1 ** step.astype(jnp.float32)
+        b2c = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            u = (m / b1c) / (jnp.sqrt(v / b2c) + eps)
+            new_p = p.astype(jnp.float32) - lr_t * (u + weight_decay * p.astype(jnp.float32))
+            return new_p.astype(p.dtype), m, v
+
+        out = jax.tree.map(lambda *ls: _maybe_map(upd, *ls),
+                           grads, state.m, state.v, params)
+        new_p = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, AdamState(step=step, m=new_m, v=new_v)
+
+    return Optimizer(init=init, update=update)
+
+
+# ---------------------------------------------------------------------------
+# Adam8bit — block-quantised moments
+# ---------------------------------------------------------------------------
+
+BLOCK = 64
+
+
+def _quantize(x: jax.Array):
+    """fp32 (..., n) → (int8 codes same shape, fp32 per-block scales
+    (..., ceil(n/B))).  Blockwise along the LAST axis, shape-preserving, so
+    quantised optimizer state inherits the parameter's sharding exactly —
+    mismatched layouts here force XLA to replicate whole expert tensors
+    (measured 12x 406 GB all-gathers on dsv3; EXPERIMENTS.md §Dry-run)."""
+    n = x.shape[-1] if x.ndim else 1
+    xr = x.reshape(x.shape or (1,))
+    pad = (-n) % BLOCK
+    xp = jnp.pad(xr, [(0, 0)] * (xr.ndim - 1) + [(0, pad)])
+    xb = xp.reshape(*xp.shape[:-1], xp.shape[-1] // BLOCK, BLOCK)
+    scale = jnp.max(jnp.abs(xb), axis=-1) / 127.0
+    codes = jnp.round(xb / jnp.maximum(scale[..., None], 1e-12)).astype(jnp.int8)
+    codes = codes.reshape(xp.shape)[..., :n].reshape(x.shape)
+    return codes, scale
+
+
+def _dequantize(codes: jax.Array, scale: jax.Array, shape, n_unused=None):
+    n = codes.shape[-1] if codes.ndim else 1
+    cr = codes.reshape(codes.shape or (1,))
+    pad = (-n) % BLOCK
+    cp = jnp.pad(cr, [(0, 0)] * (cr.ndim - 1) + [(0, pad)])
+    cb = cp.reshape(*cp.shape[:-1], cp.shape[-1] // BLOCK, BLOCK)
+    x = cb.astype(jnp.float32) * scale[..., None]
+    return x.reshape(cp.shape)[..., :n].reshape(shape)
+
+
+class Adam8bitState(NamedTuple):
+    step: jax.Array
+    m_codes: dict
+    m_scale: dict
+    v_codes: dict
+    v_scale: dict
+
+
+def adam8bit(lr: float = 3e-4, b1: float = 0.9, b2: float = 0.95,
+             eps: float = 1e-8, weight_decay: float = 0.01,
+             warmup: int = 100) -> Optimizer:
+    def schedule(step):
+        s = step.astype(jnp.float32)
+        return lr * jnp.minimum(1.0, (s + 1) / warmup)
+
+    def init(params):
+        def q(p):
+            return _quantize(jnp.zeros(p.shape, jnp.float32))
+        qs = jax.tree.map(q, params)
+        pick = lambda i: jax.tree.map(lambda t: t[i], qs,
+                                      is_leaf=lambda x: isinstance(x, tuple))
+        return Adam8bitState(step=jnp.zeros((), jnp.int32),
+                             m_codes=pick(0), m_scale=pick(1),
+                             v_codes=pick(0), v_scale=pick(1))
+
+    def update(grads, state, params):
+        step = state.step + 1
+        lr_t = schedule(step)
+        b1c = 1 - b1 ** step.astype(jnp.float32)
+        b2c = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, mc, ms, vc, vs, p):
+            g = g.astype(jnp.float32)
+            m = _dequantize(mc, ms, g.shape)
+            v = _dequantize(vc, vs, g.shape)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            v = jnp.maximum(v, 0.0)
+            u = (m / b1c) / (jnp.sqrt(v / b2c) + eps)
+            new_p = p.astype(jnp.float32) - lr_t * (u + weight_decay * p.astype(jnp.float32))
+            mc2, ms2 = _quantize(m)
+            vc2, vs2 = _quantize(v)
+            return new_p.astype(p.dtype), mc2, ms2, vc2, vs2
+
+        out = jax.tree.map(lambda *ls: _maybe_map(upd, *ls),
+                           grads, state.m_codes, state.m_scale,
+                           state.v_codes, state.v_scale, params)
+        pick = lambda i: jax.tree.map(lambda t: t[i], out,
+                                      is_leaf=lambda x: isinstance(x, tuple))
+        return pick(0), Adam8bitState(step=step, m_codes=pick(1), m_scale=pick(2),
+                                      v_codes=pick(3), v_scale=pick(4))
+
+    return Optimizer(init=init, update=update)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moment, no first moment) — memory floor
+# ---------------------------------------------------------------------------
+
+class AdafactorState(NamedTuple):
+    step: jax.Array
+    vr: dict   # row stats
+    vc: dict   # col stats
+
+
+def adafactor(lr: float = 3e-4, eps: float = 1e-30, clip: float = 1.0) -> Optimizer:
+    def init(params):
+        def zero(p):
+            if p.ndim >= 2:
+                return (jnp.zeros(p.shape[:-1], jnp.float32),
+                        jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32))
+            return (jnp.zeros(p.shape, jnp.float32), jnp.zeros((1,), jnp.float32))
+        zs = jax.tree.map(zero, params)
+        pick = lambda i: jax.tree.map(lambda t: t[i], zs,
+                                      is_leaf=lambda x: isinstance(x, tuple))
+        return AdafactorState(step=jnp.zeros((), jnp.int32), vr=pick(0), vc=pick(1))
+
+    def update(grads, state, params):
+        step = state.step + 1
+        beta = 1.0 - (step.astype(jnp.float32) + 1) ** -0.8
+
+        def upd(g, vr, vc, p):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if p.ndim >= 2:
+                vr = beta * vr + (1 - beta) * g2.mean(axis=-1)
+                vc = beta * vc + (1 - beta) * g2.mean(axis=-2)
+                r = vr / jnp.maximum(vr.mean(axis=-1, keepdims=True), eps)
+                u = g / jnp.sqrt(jnp.maximum(r[..., None] * vc[..., None, :], eps))
+            else:
+                vr = beta * vr + (1 - beta) * g2
+                u = g / jnp.sqrt(jnp.maximum(vr, eps))
+            norm = jnp.sqrt(jnp.mean(u * u))
+            u = u / jnp.maximum(1.0, norm / clip)
+            new_p = p.astype(jnp.float32) - lr * u
+            return new_p.astype(p.dtype), vr, vc
+
+        out = jax.tree.map(upd, grads, state.vr, state.vc, params)
+        pick = lambda i: jax.tree.map(lambda t: t[i], out,
+                                      is_leaf=lambda x: isinstance(x, tuple))
+        return pick(0), AdafactorState(step=step, vr=pick(1), vc=pick(2))
+
+    return Optimizer(init=init, update=update)
+
+
+OPTIMIZERS = {"adamw": adamw, "adam8bit": adam8bit, "adafactor": adafactor}

@@ -1,0 +1,73 @@
+"""Logical-axis sharding rules (MaxText-style) for the (pod, data, model) mesh.
+
+Model code annotates activations/params with *logical* axis names; this module
+maps them onto mesh axes.  With no mesh in scope every annotation is a no-op,
+so the same model code runs on 1 CPU device and on the 512-chip dry-run mesh.
+
+Parallelism mapping (DESIGN.md §4):
+  DP  — "batch"  → ("pod", "data")   gradient all-reduce crosses pods once
+  FSDP— "fsdp"   → "data"            params/optimizer sharded over data too
+  TP  — "heads"/"ffn"/"vocab"/"experts" → "model"
+  SP  — "kv_seq" → "data"            long-context decode shards the cache
+  EP  — "experts" → "model"          routed experts, all-to-all dispatch
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical name → mesh axis (or tuple of axes)
+DEFAULT_RULES = {
+    "batch": ("pod", "data"),
+    "fsdp": "data",
+    "heads": "model",
+    "kv_heads": "model",
+    "ffn": "model",
+    "vocab": "model",
+    "experts": "model",
+    "embed": None,          # d_model stays replicated (activations)
+    "seq": None,
+    "seq_sp": "model",      # Megatron-SP residual stream between layers
+    "kv_seq": "data",       # sequence parallelism for long-context decode
+    "conv": None,
+    "state": None,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingCtx:
+    mesh: Optional[Mesh]
+    rules: dict
+
+    def spec(self, *names: Optional[str]) -> P:
+        axes = []
+        for n in names:
+            ax = self.rules.get(n) if n else None
+            if isinstance(ax, tuple):
+                ax = tuple(a for a in ax if self.mesh and a in self.mesh.axis_names)
+                ax = ax or None
+            elif ax is not None and (not self.mesh or ax not in self.mesh.axis_names):
+                ax = None
+            axes.append(ax)
+        return P(*axes)
+
+    def constrain(self, x: jax.Array, *names: Optional[str]) -> jax.Array:
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, self.spec(*names)))
+
+    def named(self, *names: Optional[str]) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.spec(*names))
+
+
+def make_ctx(mesh: Optional[Mesh], rules: Optional[dict] = None) -> ShardingCtx:
+    return ShardingCtx(mesh=mesh, rules=dict(DEFAULT_RULES, **(rules or {})))
+
+
+NULL_CTX = ShardingCtx(mesh=None, rules=DEFAULT_RULES)

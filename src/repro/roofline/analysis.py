@@ -1,0 +1,98 @@
+"""Roofline aggregation: dry-run artifacts → the §Roofline table.
+
+  compute term    = HLO_FLOPs / peak_FLOP/s          (per chip)
+  memory term     = HLO_bytes / HBM_bw               (per chip)
+  collective term = collective_bytes / link_bw       (per chip, ring-factored)
+
+HLO_FLOPs / bytes / collective payloads come from the trip-count-aware HLO
+parser (hlo_cost.py); hardware constants are TPU v5e (197 TF bf16, 819 GB/s
+HBM, ~50 GB/s/link ICI).  Ring factors: all-reduce moves 2(N-1)/N ~ 2x its
+payload over the slowest link; all-gather/reduce-scatter (N-1)/N ~ 1x;
+all-to-all (N-1)/N ~ 1x; collective-permute 1x.
+
+Usage: PYTHONPATH=src python -m repro.roofline.analysis [--dir experiments/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+RING_FACTOR = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+               "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def roofline_terms(rec: dict) -> dict:
+    hlo = rec["hlo"]
+    comp = hlo["flops_per_device"] / PEAK_FLOPS
+    mem = hlo["hbm_bytes_per_device"] / HBM_BW
+    coll_bytes = sum(RING_FACTOR.get(k, 1.0) * v
+                     for k, v in hlo["collectives_per_device"].items())
+    coll = coll_bytes / ICI_BW
+    dominant = max((("compute", comp), ("memory", mem), ("collective", coll)),
+                   key=lambda kv: kv[1])[0]
+    total = max(comp, mem, coll)
+    mf = rec["roofline"]["model_flops_global"]
+    n = rec["n_chips"]
+    # achievable MFU bound under this cost model: useful model flops per chip
+    # over the bottleneck-dominated step time
+    mfu_bound = (mf / n / PEAK_FLOPS) / total if total > 0 else 0.0
+    return {
+        "compute_s": comp, "memory_s": mem, "collective_s": coll,
+        "dominant": dominant, "mfu_bound": mfu_bound,
+        "useful_ratio": mf / max(hlo["flops_per_device"] * n, 1.0),
+        "hbm_gb": rec.get("hbm_per_device_gb", 0.0),
+        "fits_16gb": rec.get("hbm_per_device_gb", 1e9) <= 16.0,
+    }
+
+
+def load(dir_: pathlib.Path) -> list[dict]:
+    recs = []
+    for f in sorted(dir_.glob("*.json")):
+        r = json.loads(f.read_text())
+        recs.append(r)
+    return recs
+
+
+def table(recs: list[dict], mesh: str = "pod16x16") -> str:
+    lines = ["| arch | shape | comp s | mem s | coll s | dominant | "
+             "MFU bound | useful | HBM GB | fits |",
+             "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r.get("mesh") != mesh:
+            continue
+        if r.get("skipped"):
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"skipped | — | — | — | — |")
+            continue
+        if not r.get("ok"):
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"FAILED | — | — | — | — |")
+            continue
+        t = roofline_terms(r)
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {t['compute_s']:.3g} | "
+            f"{t['memory_s']:.3g} | {t['collective_s']:.3g} | "
+            f"{t['dominant']} | {t['mfu_bound']*100:.1f}% | "
+            f"{t['useful_ratio']*100:.0f}% | {t['hbm_gb']:.1f} | "
+            f"{'yes' if t['fits_16gb'] else 'NO'} |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default="pod16x16")
+    args = ap.parse_args()
+    recs = load(pathlib.Path(args.dir))
+    print(table(recs, args.mesh))
+    done = sum(1 for r in recs if r.get("ok"))
+    print(f"\n{done}/{len(recs)} cells ok")
+
+
+if __name__ == "__main__":
+    main()

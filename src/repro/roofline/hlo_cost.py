@@ -1,0 +1,269 @@
+"""Static cost model over compiled HLO text — trip-count aware.
+
+XLA's ``compiled.cost_analysis()`` visits each instruction once, so anything
+inside a ``while`` body (our lax.scan layer stacks!) is counted once instead
+of n_layers times.  This parser walks the HLO text, recursing through
+``while``/``call``/``fusion`` with multipliers (trip counts parsed from the
+loop condition's comparison constant), and accumulates:
+
+  * flops            — 2 * prod(result) * K for every dot (K from
+                       lhs_contracting_dims × the lhs shape symbol table)
+  * hbm_bytes        — fusion-boundary traffic: operands + result of every
+                       top-level op (fusions are the HBM-traffic unit on TPU;
+                       parameter/constant/tuple/gte/bitcast excluded)
+  * collectives      — per-type summed payload bytes (all-gather counts its
+                       (larger) result; others count operands); ring/link
+                       factors are applied downstream in analysis.py
+
+All sizes are *global* (the HLO is the SPMD per-device program, so shapes
+are already per-device — values here are per-device costs).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z][a-z0-9]*)\[([\d,]*)\]")
+_INSTR_RE = re.compile(r"^\s+(ROOT\s+)?(%[\w\.\-]+)\s*=\s*(.*)$")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?(%[\w\.\-]+)\s*\(.*\)\s*->.*\{")
+_OPERAND_RE = re.compile(r"%[\w\.\-]+")
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_NO_TRAFFIC = ("parameter", "constant", "get-tuple-element", "tuple",
+               "bitcast", "after-all", "add-dependency", "partition-id",
+               "replica-id")
+
+
+def _shape_bytes(text: str) -> int:
+    """Total bytes of every shape literal in `text` (handles tuples)."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(text: str):
+    m = _SHAPE_RE.search(text)
+    if not m:
+        return None
+    dims = m.group(2)
+    return [int(d) for d in dims.split(",")] if dims else []
+
+
+class _Instr:
+    __slots__ = ("name", "rhs", "op", "result_bytes", "is_root")
+
+    def __init__(self, name, rhs, is_root=False):
+        self.name = name
+        self.rhs = rhs
+        self.is_root = is_root
+        m = re.search(r"\b([a-z][a-z0-9\-]*)\(", rhs)
+        self.op = m.group(1) if m else "unknown"
+        # result shape(s): the text before the op name
+        head = rhs[: m.start()] if m else rhs
+        self.result_bytes = _shape_bytes(head)
+
+
+def parse_computations(hlo: str) -> Dict[str, list]:
+    comps: Dict[str, list] = {}
+    cur = None
+    for line in hlo.splitlines():
+        h = _COMP_HDR_RE.match(line.strip()) if "{" in line else None
+        if h and "->" in line:
+            cur = h.group(1)
+            comps[cur] = []
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if m:
+            comps[cur].append(_Instr(m.group(2), m.group(3),
+                                     is_root=bool(m.group(1))))
+    return comps
+
+
+def _trip_count(cond_instrs) -> int:
+    """Largest integer constant in the loop condition — the bound of the
+    canonical `iter < C` comparison (our scans all have static lengths)."""
+    best = 1
+    for ins in cond_instrs:
+        if ins.op == "constant":
+            m = re.search(r"constant\((\d+)\)", ins.rhs)
+            if m:
+                best = max(best, int(m.group(1)))
+    return best
+
+
+def _dot_flops(ins: _Instr, table: Dict[str, str]) -> float:
+    out_dims = _shape_dims(ins.rhs)
+    if out_dims is None:
+        return 0.0
+    m = re.search(r"dot\(([^)]*)\)", ins.rhs)
+    if not m:
+        return 0.0
+    ops = _OPERAND_RE.findall(m.group(1))
+    k = 1
+    cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.rhs)
+    if ops and cm and ops[0] in table:
+        lhs_dims = _shape_dims(table[ops[0]])
+        if lhs_dims:
+            for d in (cm.group(1).split(",") if cm.group(1) else []):
+                di = int(d)
+                if di < len(lhs_dims):
+                    k *= lhs_dims[di]
+    out_n = 1
+    for d in out_dims:
+        out_n *= d
+    return 2.0 * out_n * k
+
+
+def _root_instr(instrs):
+    for ins in instrs:
+        if ins.is_root:
+            return ins
+    return instrs[-1] if instrs else None
+
+
+def _update_operand_bytes(ins: _Instr, table) -> int:
+    """Bytes of the update operand (2nd arg) of dus/scatter."""
+    m = re.search(r"\b[a-z][a-z0-9\-]*\(([^)]*)\)", ins.rhs)
+    args = _OPERAND_RE.findall(m.group(1) if m else "")
+    if len(args) >= 2 and args[1] in table:
+        head = table[args[1]]
+        mm = re.search(r"\b([a-z][a-z0-9\-]*)\(", head)
+        return _shape_bytes(head[: mm.start()] if mm else head)
+    return ins.result_bytes  # fallback
+
+
+def analyze(hlo: str) -> dict:
+    comps = parse_computations(hlo)
+    # symbol tables: instruction name -> rhs text (for operand shape lookup)
+    tables = {c: {i.name: i.rhs for i in instrs} for c, instrs in comps.items()}
+    memo: dict = {}
+
+    def operand_bytes(ins: _Instr, table) -> int:
+        m = re.search(r"\b[a-z][a-z0-9\-]*\(([^;]*)$", ins.rhs)
+        args = _OPERAND_RE.findall(m.group(1) if m else ins.rhs)
+        total = 0
+        for a in args:
+            if a in table:
+                head = table[a]
+                mm = re.search(r"\b([a-z][a-z0-9\-]*)\(", head)
+                total += _shape_bytes(head[: mm.start()] if mm else head)
+        return total
+
+    def cost_of(comp: str) -> dict:
+        if comp in memo:
+            return memo[comp]
+        acc = {"flops": 0.0, "hbm_bytes": 0.0,
+               "collectives": defaultdict(float)}
+        memo[comp] = acc  # cycle guard
+        table = tables.get(comp, {})
+        for ins in comps.get(comp, []):
+            if ins.op == "while":
+                bm = re.search(r"body=(%[\w\.\-]+)", ins.rhs)
+                cm = re.search(r"condition=(%[\w\.\-]+)", ins.rhs)
+                tc = _trip_count(comps.get(cm.group(1), [])) if cm else 1
+                if bm and bm.group(1) in comps:
+                    sub = cost_of(bm.group(1))
+                    acc["flops"] += tc * sub["flops"]
+                    acc["hbm_bytes"] += tc * sub["hbm_bytes"]
+                    for k, v in sub["collectives"].items():
+                        acc["collectives"][k] += tc * v
+                continue
+            if ins.op == "conditional":
+                branches = re.search(r"branch_computations=\{([^}]*)\}", ins.rhs)
+                names = _OPERAND_RE.findall(branches.group(1)) if branches \
+                    else []
+                if not names:
+                    for kw in ("true_computation", "false_computation"):
+                        m2 = re.search(kw + r"=(%[\w\.\-]+)", ins.rhs)
+                        if m2:
+                            names.append(m2.group(1))
+                subs = [cost_of(n) for n in names if n in comps]
+                if subs:  # charge the most expensive branch
+                    best = max(subs, key=lambda s: s["hbm_bytes"] + s["flops"])
+                    acc["flops"] += best["flops"]
+                    acc["hbm_bytes"] += best["hbm_bytes"]
+                    for k, v in best["collectives"].items():
+                        acc["collectives"][k] += v
+                continue
+            if ins.op in ("call", "fusion", "async-start"):
+                cm = re.search(r"calls=(%[\w\.\-]+)", ins.rhs)
+                sub_comp = cm.group(1) if cm else None
+                if sub_comp in comps:
+                    sub = cost_of(sub_comp)
+                    acc["flops"] += sub["flops"]
+                    for k, v in sub["collectives"].items():
+                        acc["collectives"][k] += v
+                    root = _root_instr(comps[sub_comp])
+                    if root is not None and root.op == "dynamic-update-slice":
+                        # in-place scan accumulator: the fusion touches only
+                        # the updated slice, not the whole buffer — charging
+                        # the buffer inflated zamba2 by ~7 TB/step (§Perf)
+                        upd = _update_operand_bytes(
+                            root, {i.name: i.rhs for i in comps[sub_comp]})
+                        acc["hbm_bytes"] += 2 * upd
+                        continue
+                    if root is not None and root.op == "dynamic-slice":
+                        acc["hbm_bytes"] += 2 * root.result_bytes
+                        continue
+                # fusion boundary traffic:
+                acc["hbm_bytes"] += ins.result_bytes + operand_bytes(ins, table)
+                continue
+            if ins.op == "dot":
+                acc["flops"] += _dot_flops(ins, table)
+                acc["hbm_bytes"] += ins.result_bytes + operand_bytes(ins, table)
+                continue
+            if ins.op in _COLLECTIVES:
+                if ins.op == "all-gather":
+                    acc["collectives"][ins.op] += ins.result_bytes
+                else:
+                    acc["collectives"][ins.op] += operand_bytes(ins, table)
+                continue
+            if ins.op in _NO_TRAFFIC:
+                continue
+            if ins.op in ("dynamic-slice", "slice", "gather", "broadcast",
+                          "iota", "reshape", "transpose"):
+                # reads only the region it produces (scan layer-slicing must
+                # NOT be charged the whole stacked array per iteration)
+                acc["hbm_bytes"] += 2 * ins.result_bytes
+                continue
+            if ins.op in ("dynamic-update-slice", "scatter"):
+                # touches the updated region (read+write), not the buffer
+                upd = _update_operand_bytes(ins, table)
+                acc["hbm_bytes"] += 2 * upd
+                continue
+            acc["hbm_bytes"] += ins.result_bytes + operand_bytes(ins, table)
+        return acc
+
+    entry = None
+    m = re.search(r"^ENTRY\s+(%[\w\.\-]+)", hlo, re.M)
+    if m:
+        entry = m.group(1)
+    else:  # fall back to the largest computation
+        entry = max(comps, key=lambda c: len(comps[c])) if comps else None
+    if entry is None:
+        return {"flops": 0.0, "hbm_bytes": 0.0, "collectives": {},
+                "collective_bytes": 0.0}
+    out = cost_of(entry)
+    out["collectives"] = dict(out["collectives"])
+    out["collective_bytes"] = sum(out["collectives"].values())
+    return out

@@ -1,0 +1,158 @@
+"""KV/state cache construction + shardings for batched decode.
+
+Cache layout per family (stacked on the layer dim, scanned as xs/ys):
+  dense/vlm : k/v (L, B, S, Hkv, dh)
+  moe       : dense-layer k/v + moe-layer k/v; MLA stores the latent cache
+              (L, B, S, d_c) + shared rotary key (L, B, S, r) instead
+  hybrid    : mamba SSD state (G, E, B, H, N, P) + conv tails, plus the
+              shared-attention block's per-group k/v (G, B, S, Hkv, dh)
+  ssm       : mLSTM (pairs, B, H, P, P) matrix memories + sLSTM scalars
+  encdec    : decoder self k/v + precomputed cross k/v (L, B, Te, Hkv, dh)
+
+Sharding: batch over ("pod","data") when divisible; cache sequence over
+"model" (and over ("data","model") when batch == 1, e.g. long_500k) — decode
+attention contracts over the sharded S dim and XLA inserts the distributed
+softmax reductions (flash-decode-style LSE combine).
+
+Sketch attention (gemma long_500k): per-block SRP signatures
+(L, B, nb, SIG_BITS) ride along with the cache (DESIGN.md §5.4).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+SIG_BITS = 64
+SKETCH_BLOCK = 512
+
+
+def _shd(mesh, *axes):
+    if mesh is None:
+        return None
+    ok = []
+    for a in axes:
+        if isinstance(a, tuple):
+            a = tuple(x for x in a if x in mesh.axis_names) or None
+        elif a is not None and a not in mesh.axis_names:
+            a = None
+        ok.append(a)
+    return NamedSharding(mesh, P(*ok))
+
+
+def cache_axes(cfg: ModelConfig, B: int, mesh: Optional[Mesh]):
+    """(batch axes, seq axes) for cache tensors given the batch size."""
+    if mesh is None:
+        return None, None
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dp_size = math.prod(mesh.shape[a] for a in dp) if dp else 1
+    if B % max(dp_size, 1) == 0 and B >= dp_size:
+        return dp, ("model",)
+    # batch too small (long_500k B=1): replicate batch, shard seq harder
+    return None, tuple(a for a in ("data", "model") if a in mesh.axis_names)
+
+
+def init_cache(cfg: ModelConfig, B: int, s_max: int,
+               mesh: Optional[Mesh] = None, sketch: bool = False) -> dict:
+    dt = jnp.bfloat16 if cfg.param_dtype == "bfloat16" else jnp.float32
+    dh = cfg.resolved_head_dim
+    ba, sa = cache_axes(cfg, B, mesh)
+
+    def kv(L, S):
+        shape = (L, B, S, cfg.n_kv_heads, dh)
+        sh = _shd(mesh, None, ba, sa, None, None)
+        z = jnp.zeros(shape, dt)
+        return z if sh is None else jax.device_put(z, sh)
+
+    cache: dict = {"length": jnp.zeros((), jnp.int32)}
+
+    if cfg.family in ("dense", "vlm"):
+        cache["k"], cache["v"] = kv(cfg.n_layers, s_max), kv(cfg.n_layers, s_max)
+    elif cfg.family == "moe":
+        nd, nm = cfg.n_dense_layers, cfg.n_layers - cfg.n_dense_layers
+        if nd:
+            cache["dk"], cache["dv"] = kv(nd, s_max), kv(nd, s_max)
+        if cfg.use_mla:
+            csh = _shd(mesh, None, ba, sa, None)
+            c = jnp.zeros((nm, B, s_max, cfg.mla_d_c), dt)
+            kr = jnp.zeros((nm, B, s_max, cfg.mla_rope_dim), dt)
+            cache["c"] = c if csh is None else jax.device_put(c, csh)
+            cache["kr"] = kr if csh is None else jax.device_put(kr, csh)
+        else:
+            cache["k"], cache["v"] = kv(nm, s_max), kv(nm, s_max)
+    elif cfg.family == "hybrid":
+        G = cfg.n_layers // cfg.attn_every
+        E = cfg.attn_every
+        d_in = cfg.ssm_expand * cfg.d_model
+        H = d_in // cfg.ssm_head_dim
+        conv_ch = d_in + 2 * cfg.ssm_state
+        ssm_sh = _shd(mesh, None, None, ba, "model", None, None)
+        st = jnp.zeros((G, E, B, H, cfg.ssm_state, cfg.ssm_head_dim), jnp.float32)
+        cache["ssm_state"] = st if ssm_sh is None else jax.device_put(st, ssm_sh)
+        cache["conv_buf"] = jnp.zeros((G, E, B, cfg.ssm_conv - 1, conv_ch), dt)
+        cache["k"], cache["v"] = kv(G, s_max), kv(G, s_max)
+    elif cfg.family == "ssm":
+        pairs = cfg.n_layers // 2
+        d_in = 2 * cfg.d_model
+        Pm = d_in // cfg.n_heads
+        cache["mlstm_C"] = jnp.zeros((pairs, B, cfg.n_heads, Pm, Pm), jnp.float32)
+        cache["mlstm_n"] = jnp.zeros((pairs, B, cfg.n_heads, Pm), jnp.float32)
+        cache["mlstm_m"] = jnp.full((pairs, B, cfg.n_heads), -jnp.inf, jnp.float32)
+        for nm_ in ("c", "n", "h", "m"):
+            init = -jnp.inf if nm_ == "m" else 0.0
+            cache[f"slstm_{nm_}"] = jnp.full((pairs, B, cfg.d_model), init, jnp.float32)
+    elif cfg.family == "encdec":
+        cache["k"], cache["v"] = kv(cfg.n_layers, s_max), kv(cfg.n_layers, s_max)
+        cache["xk"] = kv(cfg.n_layers, cfg.enc_frames)
+        cache["xv"] = kv(cfg.n_layers, cfg.enc_frames)
+    else:
+        raise ValueError(cfg.family)
+
+    if sketch:
+        import os
+        L_sig = cache["k"].shape[0] if "k" in cache else cfg.n_layers
+        if os.environ.get("REPRO_SPLIT_LOCAL_DECODE") == "1" \
+                and cfg.local_global_period > 0 and cfg.local_window > 0:
+            # split-scan decode keeps signatures for global layers only
+            L_sig = cfg.n_layers // cfg.local_global_period
+        nb = s_max // SKETCH_BLOCK
+        cache["block_sigs"] = jnp.zeros((L_sig, B, nb, SIG_BITS), jnp.bool_)
+    return cache
+
+
+def cache_specs(cache: dict, cfg: ModelConfig, B: int, mesh: Mesh) -> dict:
+    """NamedShardings matching init_cache's placement (for jit in_shardings)."""
+    ba, sa = cache_axes(cfg, B, mesh)
+
+    def _div(axes, dim):
+        if axes is None:
+            return None
+        sz = 1
+        for a in (axes if isinstance(axes, tuple) else (axes,)):
+            sz *= mesh.shape.get(a, 1)
+        return axes if dim % sz == 0 else None
+
+    def spec(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else ""
+        nd = leaf.ndim
+        if name in ("k", "v", "dk", "dv", "xk", "xv"):
+            # cross caches (xk/xv) have Te=1500 — shard seq only if divisible
+            return _shd(mesh, None, _div(ba, leaf.shape[1]),
+                        _div(sa, leaf.shape[2]), None, None)
+        if name in ("c", "kr"):
+            return _shd(mesh, None, ba, sa, None)
+        if name == "ssm_state":
+            return _shd(mesh, None, None, ba, "model", None, None)
+        if name == "block_sigs":
+            return _shd(mesh, None, ba, None, None)
+        return _shd(mesh, *([None] * nd))
+    return jax.tree_util.tree_map_with_path(spec, cache)
+
+
+def cache_bytes(cache: dict) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(cache))

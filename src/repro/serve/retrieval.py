@@ -1,0 +1,79 @@
+"""S-ANN retrieval service: streaming index + batched queries (paper §3).
+
+The serving-side integration of the paper's sketch: documents (or cached
+hidden states) arrive as a stream of embeddings; the service maintains the
+sublinear S-ANN sketch and answers batched (c, r)-ANN queries — e.g. for
+retrieval-augmented decoding, the per-step query batch is the batch of
+current decoder hidden states.
+
+This is a thin, stateful orchestration layer over repro.core.sann; all math
+lives there (and is what the paper's guarantees cover).
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import sann
+
+
+@dataclasses.dataclass
+class RetrievalConfig:
+    dim: int
+    n_max: int = 100_000
+    eta: float = 0.5
+    r: float = 0.9
+    c: float = 2.0
+    w: float = 4.0
+    L: Optional[int] = 16
+    k: Optional[int] = 8
+    bucket_cap: int = 16
+    seed: int = 0
+
+
+class RetrievalService:
+    """Thread-safe streaming ANN index with batched queries."""
+
+    def __init__(self, cfg: RetrievalConfig):
+        base = sann.SANNConfig(
+            dim=cfg.dim, n_max=cfg.n_max, eta=cfg.eta, r=cfg.r, c=cfg.c,
+            w=cfg.w, L=cfg.L, k=cfg.k, bucket_cap=cfg.bucket_cap)
+        self.cfg, self.params, self.state = sann.sann_init(
+            base, jax.random.PRNGKey(cfg.seed))
+        self._key = jax.random.PRNGKey(cfg.seed + 1)
+        self._lock = threading.Lock()
+        self._insert = jax.jit(
+            lambda st, xs, key: sann.sann_insert_stream(
+                st, self.params, xs, key, self.cfg))
+        self._query = jax.jit(
+            lambda st, qs: sann.sann_query_batch(st, self.params, qs, self.cfg))
+        self._delete = jax.jit(
+            lambda st, x: sann.sann_delete(st, self.params, x, self.cfg))
+
+    def ingest(self, embeddings: np.ndarray) -> None:
+        xs = jnp.asarray(embeddings, jnp.float32)
+        with self._lock:
+            self._key, sub = jax.random.split(self._key)
+            self.state = self._insert(self.state, xs, sub)
+
+    def delete(self, embedding: np.ndarray) -> None:
+        """Turnstile deletion (paper §3.4)."""
+        with self._lock:
+            self.state = self._delete(self.state, jnp.asarray(embedding))
+
+    def query(self, queries: np.ndarray) -> sann.SANNResult:
+        """Batched queries (paper §3.3) — embarrassingly parallel."""
+        return self._query(self.state, jnp.asarray(queries, jnp.float32))
+
+    @property
+    def stored(self) -> int:
+        return int(self.state.n_stored)
+
+    @property
+    def sketch_bytes(self) -> int:
+        return sann.sann_bytes(self.cfg)

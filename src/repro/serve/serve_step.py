@@ -1,0 +1,480 @@
+"""Batched single-token decode (`serve_step`) for every architecture family.
+
+decode_* / long_* dry-run shapes lower THIS function (one new token against
+a kv_cache of seq_len), not train_step.  Layer stacks scan with the cache as
+scan xs/ys (the MaxText pattern — keeps HLO O(1) in depth and lets XLA alias
+the cache update in place).
+
+Sketch attention (the paper's S-ANN adapted to decode, DESIGN.md §5.4): when
+enabled, *global* attention layers prune KV blocks whose SRP signature does
+not collide with the query signature — the jnp semantics here; the Pallas
+kernel (`repro.kernels.sketch_decode_attn`) is the TPU hot path.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import layers, mla, moe, model as model_lib, ssm, xlstm
+from repro.parallel.sharding import NULL_CTX, make_ctx
+from .kv_cache import SIG_BITS, SKETCH_BLOCK
+
+_SIG_SEED = 42
+_MIN_MATCH_FRAC = 0.25
+
+
+def rope_token(x, position, theta):
+    """x (B, 1, H, dh) rotated at scalar position `position`."""
+    if theta <= 0:
+        return x
+    B = x.shape[0]
+    pos = jnp.full((B, 1), position, jnp.int32)
+    return layers.rope(x, pos, theta)
+
+
+def decode_attention(q, k_cache, v_cache, length, *, window=0, softcap=0.0,
+                     extra_mask=None, pos_offset=0):
+    """q (B, 1, H, dh); caches (B, S, Hkv, dh); attend over [0, length].
+    pos_offset: global position of cache row 0 (windowed local-layer reads
+    pass a dynamic offset)."""
+    B, _, H, dh = q.shape
+    S, Hkv = k_cache.shape[1], k_cache.shape[2]
+    G = H // Hkv
+    qs = q.reshape(B, Hkv, G, dh).astype(jnp.float32)
+    s = jnp.einsum("bhgd,bshd->bhgs", qs, k_cache.astype(jnp.float32)) * dh**-0.5
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+    pos = pos_offset + jnp.arange(S)
+    mask = pos <= length
+    if isinstance(window, jax.Array):
+        mask = mask & ((window <= 0) | (pos > length - window))
+    elif window > 0:
+        mask = mask & (pos > length - window)
+    mask = jnp.broadcast_to(mask[None, None, None, :], s.shape) \
+        if extra_mask is None else (mask[None, None, None, :] & extra_mask)
+    s = jnp.where(mask, s, -jnp.inf)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - jnp.maximum(m, -1e30))
+    p = p / jnp.maximum(p.sum(-1, keepdims=True), 1e-30)
+    o = jnp.einsum("bhgs,bshd->bhgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(B, 1, H * dh)
+
+
+def _sig_proj(dh: int):
+    return jax.random.normal(jax.random.PRNGKey(_SIG_SEED), (dh, SIG_BITS))
+
+
+def _sig_bits(x, proj):
+    """x (..., dh) → (..., SIG_BITS) bool SRP signature."""
+    return (x.astype(jnp.float32) @ proj) >= 0.0
+
+
+def sketch_block_mask(q, sigs, length):
+    """q (B,1,H,dh), sigs (B, nb, SIG_BITS) → extra_mask (B,1,1,S) for
+    decode_attention: positions in blocks with < min_match colliding bits
+    are pruned (paper §3 bucket collision, block granularity)."""
+    B, _, H, dh = q.shape
+    proj = _sig_proj(dh)
+    q_sig = _sig_bits(q.mean(axis=2)[:, 0], proj)               # (B, bits)
+    match = jnp.einsum("bnk,bk->bn", sigs.astype(jnp.int32),
+                       q_sig.astype(jnp.int32))                 # (B, nb)
+    live = match >= int(SIG_BITS * _MIN_MATCH_FRAC)
+    nb = sigs.shape[1]
+    pos_block = jnp.arange(nb * SKETCH_BLOCK) // SKETCH_BLOCK
+    # always keep the most recent block (contains the current token)
+    cur_block = length // SKETCH_BLOCK
+    live = live | (jnp.arange(nb) == cur_block)[None]
+    mask = live[:, pos_block]                                   # (B, S)
+    return mask[:, None, None, :]
+
+
+def _update_sigs(sigs, k_new, length):
+    """OR the new key's signature into its block. sigs (B, nb, bits);
+    k_new (B, 1, Hkv, dh)."""
+    proj = _sig_proj(k_new.shape[-1])
+    bits = _sig_bits(k_new.mean(axis=2)[:, 0], proj)            # (B, bits)
+    blk = length // SKETCH_BLOCK
+    cur = jax.lax.dynamic_index_in_dim(sigs, blk, axis=1, keepdims=False)
+    return jax.lax.dynamic_update_index_in_dim(
+        sigs, cur | bits, blk, axis=1)
+
+
+def _attn_decode_block(p, x, kc, vc, length, cfg: ModelConfig, *, window,
+                       sigs=None, rope_theta=None):
+    """Shared dense-attention decode sub-block.  Returns (x, kc, vc, sigs)."""
+    dh = cfg.resolved_head_dim
+    B = x.shape[0]
+    h = layers.rms_norm(x, p["ln1"], cfg.norm_eps)
+    q = (h @ p["attn"]["wq"]).reshape(B, 1, cfg.n_heads, dh)
+    k = (h @ p["attn"]["wk"]).reshape(B, 1, cfg.n_kv_heads, dh)
+    v = (h @ p["attn"]["wv"]).reshape(B, 1, cfg.n_kv_heads, dh)
+    if cfg.qk_norm:
+        q = layers.rms_norm(q, p["attn"]["q_norm"], cfg.norm_eps)
+        k = layers.rms_norm(k, p["attn"]["k_norm"], cfg.norm_eps)
+    theta = cfg.rope_theta if rope_theta is None else rope_theta
+    q = rope_token(q, length, theta)
+    k = rope_token(k, length, theta)
+    kc = lax.dynamic_update_slice(kc, k.astype(kc.dtype), (0, length, 0, 0))
+    vc = lax.dynamic_update_slice(vc, v.astype(vc.dtype), (0, length, 0, 0))
+    extra = None
+    if sigs is not None:
+        sigs = _update_sigs(sigs, k, length)
+        is_global = window <= 0 if not isinstance(window, jax.Array) \
+            else (window <= 0)
+        mask = sketch_block_mask(q, sigs, length)
+        if isinstance(window, jax.Array):
+            extra = jnp.where(is_global, mask, jnp.ones_like(mask))
+        elif is_global:
+            extra = mask
+    a = decode_attention(q, kc, vc, length, window=window,
+                         softcap=cfg.attn_softcap, extra_mask=extra)
+    a = (a @ p["attn"]["wo"])
+    if "ln1_post" in p:
+        a = layers.rms_norm(a, p["ln1_post"], cfg.norm_eps)
+    return x + a.astype(x.dtype), kc, vc, sigs
+
+
+def _attn_decode_block_local(p, x, kc, vc, length, cfg: ModelConfig):
+    """Local-layer decode: reads only the last `local_window` cache rows
+    (static slice size, dynamic start) — a 512x traffic cut at 500k for
+    gemma-style 5:1 stacks (§Perf hillclimb 3)."""
+    W = min(cfg.local_window, kc.shape[1])
+    dh = cfg.resolved_head_dim
+    B = x.shape[0]
+    h = layers.rms_norm(x, p["ln1"], cfg.norm_eps)
+    q = (h @ p["attn"]["wq"]).reshape(B, 1, cfg.n_heads, dh)
+    k = (h @ p["attn"]["wk"]).reshape(B, 1, cfg.n_kv_heads, dh)
+    v = (h @ p["attn"]["wv"]).reshape(B, 1, cfg.n_kv_heads, dh)
+    if cfg.qk_norm:
+        q = layers.rms_norm(q, p["attn"]["q_norm"], cfg.norm_eps)
+        k = layers.rms_norm(k, p["attn"]["k_norm"], cfg.norm_eps)
+    q = rope_token(q, length, cfg.rope_theta)
+    k = rope_token(k, length, cfg.rope_theta)
+    kc = lax.dynamic_update_slice(kc, k.astype(kc.dtype), (0, length, 0, 0))
+    vc = lax.dynamic_update_slice(vc, v.astype(vc.dtype), (0, length, 0, 0))
+    start = jnp.clip(length - W + 1, 0, kc.shape[1] - W)
+    kw = lax.dynamic_slice(kc, (0, start, 0, 0),
+                           (B, W, cfg.n_kv_heads, dh))
+    vw = lax.dynamic_slice(vc, (0, start, 0, 0),
+                           (B, W, cfg.n_kv_heads, dh))
+    a = decode_attention(q, kw, vw, length, window=cfg.local_window,
+                         softcap=cfg.attn_softcap, pos_offset=start)
+    a = a @ p["attn"]["wo"]
+    if "ln1_post" in p:
+        a = layers.rms_norm(a, p["ln1_post"], cfg.norm_eps)
+    return x + a.astype(x.dtype), kc, vc
+
+
+def _mlp_block(p, x, cfg):
+    h = layers.rms_norm(x, p["ln2"], cfg.norm_eps)
+    m = layers.mlp(p["mlp"], h,
+                   act=jax.nn.gelu if cfg.mlp_act == "gelu" else jax.nn.silu)
+    if "ln2_post" in p:
+        m = layers.rms_norm(m, p["ln2_post"], cfg.norm_eps)
+    return x + m
+
+
+def make_serve_step(cfg: ModelConfig, mesh=None, sketch: bool = False):
+    ctx = make_ctx(mesh)
+
+    def serve_step(params, cache, tokens):
+        """tokens (B, 1) int32 → (logits (B, 1, vocab) fp32, new cache)."""
+        length = cache["length"]
+        x = layers.embed(params["embedding"], tokens, ctx)
+        if cfg.scale_embeddings:
+            x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+
+        import os
+        split_decode = os.environ.get("REPRO_SPLIT_LOCAL_DECODE") == "1"
+        # NOTE (§Perf hillclimb 3, REFUTED): windowed local-layer cache reads
+        # regress when the cache seq dim is sharded over "model" — the
+        # dynamic window slice spans shards and XLA reshards per layer
+        # (gemma2 decode_32k memory term 2.24 s → 7.24 s). Off by default;
+        # the Pallas sketch_decode_attn kernel is the real TPU pruning path.
+        if split_decode and cfg.family in ("dense", "vlm") \
+                and cfg.local_global_period > 0 and cfg.local_window > 0:
+            # static local/global superblock split: local layers read only a
+            # `local_window` slice of the cache (see §Perf hillclimb 3)
+            per = cfg.local_global_period
+            n_per = cfg.n_layers // per           # full periods
+            tail = cfg.n_layers - n_per * per     # trailing local layers
+            has_sig = sketch and "block_sigs" in cache
+
+            def slice_layers(tree, lo, hi, reshape=None):
+                def f(a):
+                    s = a[lo:hi]
+                    return s.reshape(reshape + s.shape[1:]) if reshape else s
+                return jax.tree.map(f, tree)
+
+            blocks = params["blocks"]
+            head = slice_layers(blocks, 0, n_per * per, (n_per, per))
+            kc_h = cache["k"][: n_per * per].reshape(
+                (n_per, per) + cache["k"].shape[1:])
+            vc_h = cache["v"][: n_per * per].reshape(
+                (n_per, per) + cache["v"].shape[1:])
+            sigs_h = cache["block_sigs"] if has_sig else jnp.zeros(
+                (n_per, 1), jnp.bool_)
+
+            def period_body(x, inp):
+                ps, kcs, vcs, sg = inp
+                def local_one(x, inp2):
+                    pl, kl, vl = inp2
+                    x, kl, vl = _attn_decode_block_local(
+                        pl, x, kl, vl, length, cfg)
+                    x = _mlp_block(pl, x, cfg)
+                    return x, (kl, vl)
+                loc = jax.tree.map(lambda a: a[: per - 1], ps)
+                x, (nkl, nvl) = lax.scan(
+                    local_one, x, (loc, kcs[: per - 1], vcs[: per - 1]))
+                pg = jax.tree.map(lambda a: a[per - 1], ps)
+                x, kg, vg, sg2 = _attn_decode_block(
+                    pg, x, kcs[per - 1], vcs[per - 1], length, cfg,
+                    window=jnp.int32(0), sigs=sg if has_sig else None)
+                x = _mlp_block(pg, x, cfg)
+                # local/global caches stacked separately — a per-period
+                # concatenate would copy the whole cache every step
+                return x, (nkl, nvl, kg, vg, sg2 if has_sig else sg)
+
+            x, (nkl_h, nvl_h, nkg_h, nvg_h, nsig) = lax.scan(
+                period_body, x, (head, kc_h, vc_h, sigs_h))
+            nk = jnp.concatenate([nkl_h, nkg_h[:, None]], axis=1).reshape(
+                (n_per * per,) + cache["k"].shape[1:])
+            nv = jnp.concatenate([nvl_h, nvg_h[:, None]], axis=1).reshape(
+                (n_per * per,) + cache["v"].shape[1:])
+            if tail:
+                tail_p = slice_layers(blocks, n_per * per, cfg.n_layers)
+                def local_tail(x, inp2):
+                    pl, kl, vl = inp2
+                    x, kl, vl = _attn_decode_block_local(
+                        pl, x, kl, vl, length, cfg)
+                    x = _mlp_block(pl, x, cfg)
+                    return x, (kl, vl)
+                x, (nk_t, nv_t) = lax.scan(
+                    local_tail, x,
+                    (tail_p, cache["k"][n_per * per:], cache["v"][n_per * per:]))
+                nk = jnp.concatenate([nk, nk_t])
+                nv = jnp.concatenate([nv, nv_t])
+            cache = dict(cache, k=nk, v=nv)
+            if has_sig:
+                cache = dict(cache, block_sigs=nsig)
+
+        elif cfg.family in ("dense", "vlm"):
+            wins = model_lib.window_pattern(cfg)
+            has_sig = sketch and "block_sigs" in cache
+            if has_sig:
+                def body(x, inp):
+                    p, kc, vc, win, sg = inp
+                    x, kc, vc, sg = _attn_decode_block(
+                        p, x, kc, vc, length, cfg, window=win, sigs=sg)
+                    x = _mlp_block(p, x, cfg)
+                    return x, (kc, vc, sg)
+                x, (nk, nv, nsig) = lax.scan(
+                    body, x, (params["blocks"], cache["k"], cache["v"], wins,
+                              cache["block_sigs"]))
+                cache = dict(cache, k=nk, v=nv, block_sigs=nsig)
+            else:
+                def body2(x, inp):
+                    p, kc, vc, win = inp
+                    x, kc, vc, _ = _attn_decode_block(
+                        p, x, kc, vc, length, cfg, window=win, sigs=None)
+                    x = _mlp_block(p, x, cfg)
+                    return x, (kc, vc)
+                x, (nk, nv) = lax.scan(
+                    body2, x, (params["blocks"], cache["k"], cache["v"], wins))
+                cache = dict(cache, k=nk, v=nv)
+
+        elif cfg.family == "moe":
+            B = tokens.shape[0]
+            if cfg.n_dense_layers:
+                def dbody(x, inp):
+                    p, kc, vc = inp
+                    x, kc, vc, _ = _attn_decode_block(
+                        p, x, kc, vc, length, cfg, window=0)
+                    x = _mlp_block(p, x, cfg)
+                    return x, (kc, vc)
+                x, (ndk, ndv) = lax.scan(
+                    dbody, x, (params["dense_blocks"], cache["dk"], cache["dv"]))
+                cache = dict(cache, dk=ndk, dv=ndv)
+
+            cf = max(cfg.capacity_factor, 8.0)  # tiny T at decode
+            if cfg.use_mla:
+                def mbody(x, inp):
+                    p, cc, krc = inp
+                    x, cc, krc = _mla_decode_block(p, x, cc, krc, length, cfg)
+                    h = layers.rms_norm(x, p["ln2"], cfg.norm_eps)
+                    m, _ = moe.moe(p["moe"], h, topk=cfg.moe_topk,
+                                   capacity_factor=cf, ctx=ctx)
+                    return x + m, (cc, krc)
+                x, (nc, nkr) = lax.scan(
+                    mbody, x, (params["moe_blocks"], cache["c"], cache["kr"]))
+                cache = dict(cache, c=nc, kr=nkr)
+            else:
+                def mbody(x, inp):
+                    p, kc, vc = inp
+                    x, kc, vc, _ = _attn_decode_block(
+                        p, x, kc, vc, length, cfg, window=0)
+                    h = layers.rms_norm(x, p["ln2"], cfg.norm_eps)
+                    m, _ = moe.moe(p["moe"], h, topk=cfg.moe_topk,
+                                   capacity_factor=cf, ctx=ctx)
+                    return x + m, (kc, vc)
+                x, (nk, nv) = lax.scan(
+                    mbody, x, (params["moe_blocks"], cache["k"], cache["v"]))
+                cache = dict(cache, k=nk, v=nv)
+
+        elif cfg.family == "hybrid":
+            def gbody(x, inp):
+                pm, st, cb, kc, vc = inp
+                def one(carry, inp2):
+                    x = carry
+                    p, st_l, cb_l = inp2
+                    h = layers.rms_norm(x, p["ln"], cfg.norm_eps)
+                    o, nc = ssm.mamba2_decode_step(
+                        p["mixer"], h, ssm.SSMCache(st_l, cb_l),
+                        state=cfg.ssm_state, expand=cfg.ssm_expand,
+                        head_dim=cfg.ssm_head_dim, norm_eps=cfg.norm_eps)
+                    return x + o, (nc.state, nc.conv_buf)
+                x, (nst, ncb) = lax.scan(one, x, (pm, st, cb))
+                p = params["shared_attn"]
+                x, kc, vc, _ = _attn_decode_block(
+                    p, x, kc, vc, length, cfg, window=0)
+                x = _mlp_block(p, x, cfg)
+                return x, (nst, ncb, kc, vc)
+            x, (nst, ncb, nk, nv) = lax.scan(
+                gbody, x, (params["mamba_blocks"], cache["ssm_state"],
+                           cache["conv_buf"], cache["k"], cache["v"]))
+            cache = dict(cache, ssm_state=nst, conv_buf=ncb, k=nk, v=nv)
+
+        elif cfg.family == "ssm":
+            d_in = 2 * cfg.d_model
+            Pm = d_in // cfg.n_heads
+            def pbody(x, inp):
+                # x (B, d); the cells consume (B, 1, d) sequences of length 1
+                (pm, psl, C, n, m, sc, sn, sh, sm) = inp
+                h = layers.rms_norm(x, pm["ln"], cfg.norm_eps)[:, None]
+                o, st = xlstm.mlstm(pm["mixer"], h, n_heads=cfg.n_heads,
+                                    norm_eps=cfg.norm_eps,
+                                    state=xlstm.MLSTMState(C, n, m))
+                x = x + o[:, 0]
+                h = layers.rms_norm(x, psl["ln"], cfg.norm_eps)[:, None]
+                o2, st2 = xlstm.slstm(psl["mixer"], h, n_heads=cfg.n_heads,
+                                      norm_eps=cfg.norm_eps,
+                                      state=xlstm.SLSTMState(sc, sn, sh, sm))
+                x = x + o2[:, 0]
+                hf = layers.rms_norm(x, psl["ln_ffn"], cfg.norm_eps)
+                x = x + layers.mlp(psl["ffn"], hf)
+                return x, (st.C, st.n, st.m, st2.c, st2.n, st2.h, st2.m)
+            x1 = x[:, 0]
+            x1, (nC, nn, nm, nsc, nsn, nsh, nsm) = lax.scan(
+                pbody, x1,
+                (params["mlstm_blocks"], params["slstm_blocks"],
+                 cache["mlstm_C"], cache["mlstm_n"], cache["mlstm_m"],
+                 cache["slstm_c"], cache["slstm_n"], cache["slstm_h"],
+                 cache["slstm_m"]))
+            x = x1[:, None]
+            cache = dict(cache, mlstm_C=nC, mlstm_n=nn, mlstm_m=nm,
+                         slstm_c=nsc, slstm_n=nsn, slstm_h=nsh, slstm_m=nsm)
+
+        elif cfg.family == "encdec":
+            # absolute sinusoidal position of the current token
+            sin_tab = model_lib._sinusoid(cache["k"].shape[2], cfg.d_model, x.dtype)
+            x = x + lax.dynamic_slice_in_dim(sin_tab[0], length, 1, axis=0)[None]
+            def ebody(x, inp):
+                p, kc, vc, xk, xv = inp
+                x, kc, vc, _ = _attn_decode_block(
+                    p, x, kc, vc, length, cfg, window=0, rope_theta=0.0)
+                # cross attention over the precomputed encoder cache
+                B = x.shape[0]
+                dh = cfg.resolved_head_dim
+                h = layers.rms_norm(x, p["ln_x"], cfg.norm_eps)
+                q = (h @ p["xattn"]["wq"]).reshape(B, 1, cfg.n_heads, dh)
+                a = decode_attention(q, xk, xv, jnp.int32(xk.shape[1] - 1))
+                x = x + (a @ p["xattn"]["wo"]).astype(x.dtype)
+                x = _mlp_block(p, x, cfg)
+                return x, (kc, vc)
+            x, (nk, nv) = lax.scan(
+                ebody, x, (params["dec_blocks"], cache["k"], cache["v"],
+                           cache["xk"], cache["xv"]))
+            cache = dict(cache, k=nk, v=nv)
+        else:
+            raise ValueError(cfg.family)
+
+        x = layers.rms_norm(x, params["ln_f"], cfg.norm_eps)
+        logits = layers.unembed(params["embedding"], x, ctx, cfg.final_softcap)
+        cache = dict(cache, length=length + 1)
+        return logits, cache
+
+    return serve_step
+
+
+def _mla_decode_block(p, x, cc, krc, length, cfg: ModelConfig):
+    """Absorbed MLA decode: score against the latent cache directly."""
+    B = x.shape[0]
+    H, dh, r = cfg.n_heads, cfg.resolved_head_dim, cfg.mla_rope_dim
+    d_c = cfg.mla_d_c
+    h = layers.rms_norm(x, p["ln1"], cfg.norm_eps)
+    pos = jnp.full((B, 1), length, jnp.int32)
+    c_new, kr_new = mla.mla_latent(p["attn"], h, pos, rope_dim=r,
+                                   rope_theta=cfg.rope_theta,
+                                   norm_eps=cfg.norm_eps)
+    cc = lax.dynamic_update_slice(cc, c_new.astype(cc.dtype), (0, length, 0))
+    krc = lax.dynamic_update_slice(krc, kr_new.astype(krc.dtype), (0, length, 0))
+    q_nope, q_rope = mla.mla_queries(
+        p["attn"], h, pos, n_heads=H, head_dim=dh, rope_dim=r,
+        rope_theta=cfg.rope_theta, norm_eps=cfg.norm_eps)
+    w_uk = p["attn"]["w_uk"].reshape(d_c, H, dh)
+    q_abs = jnp.einsum("bqhd,chd->bhc", q_nope.astype(jnp.float32),
+                       w_uk.astype(jnp.float32))                    # (B,H,d_c)
+    s = jnp.einsum("bhc,bsc->bhs", q_abs, cc.astype(jnp.float32)) \
+        + jnp.einsum("bqhr,bsr->bhs", q_rope.astype(jnp.float32),
+                     krc.astype(jnp.float32))
+    s = s / math.sqrt(dh + r)
+    S = cc.shape[1]
+    mask = jnp.arange(S) <= length
+    s = jnp.where(mask[None, None, :], s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1)
+    o_lat = jnp.einsum("bhs,bsc->bhc", w, cc.astype(jnp.float32))   # (B,H,d_c)
+    w_uv = p["attn"]["w_uv"].reshape(d_c, H, dh)
+    o = jnp.einsum("bhc,chd->bhd", o_lat, w_uv.astype(jnp.float32))
+    o = o.reshape(B, 1, H * dh) @ p["attn"]["w_o"]
+    return x + o.astype(x.dtype), cc, krc
+
+
+def encode_cross_cache(params, cfg: ModelConfig, frames, cache):
+    """Run the encoder once and fill the per-layer cross-attention k/v cache
+    (whisper-style serving prefill)."""
+    from repro.models.model import _scan_stack, _sinusoid
+
+    B, Te, _ = frames.shape
+    enc_pos = jnp.broadcast_to(jnp.arange(Te, dtype=jnp.int32), (B, Te))
+    x = frames.astype(jnp.bfloat16 if cfg.param_dtype == "bfloat16"
+                      else jnp.float32)
+    x = x + _sinusoid(Te, cfg.d_model, x.dtype)
+
+    def enc_block(p, x, _):
+        h = layers.rms_norm(x, p["ln1"], cfg.norm_eps)
+        a, _ = layers.attention(p["attn"], h, enc_pos, n_heads=cfg.n_heads,
+                                n_kv_heads=cfg.n_kv_heads,
+                                head_dim=cfg.resolved_head_dim, rope_theta=0.0,
+                                causal=False, norm_eps=cfg.norm_eps)
+        x = x + a
+        h = layers.rms_norm(x, p["ln2"], cfg.norm_eps)
+        return x + layers.mlp(p["mlp"], h, act=jax.nn.gelu)
+
+    enc, _ = _scan_stack(enc_block, params["enc_blocks"], x,
+                         jnp.zeros((cfg.n_enc_layers,), jnp.int32), cfg.remat)
+    enc = layers.rms_norm(enc, params["enc_ln_f"], cfg.norm_eps)
+    dh = cfg.resolved_head_dim
+
+    def per_layer(p):
+        xk = (enc @ p["xattn"]["wk"]).reshape(B, Te, cfg.n_kv_heads, dh)
+        xv = (enc @ p["xattn"]["wv"]).reshape(B, Te, cfg.n_kv_heads, dh)
+        return xk.astype(jnp.bfloat16), xv.astype(jnp.bfloat16)
+
+    xk, xv = jax.vmap(per_layer)(params["dec_blocks"])
+    return dict(cache, xk=xk, xv=xv)

@@ -1,0 +1,144 @@
+"""The jitted training step: CE loss (+ MoE aux + MTP), grad, optimizer.
+
+``make_train_step(cfg, optimizer, mesh)`` returns (train_step, init_state):
+both pure functions suitable for jax.jit with explicit in/out shardings
+(see launch/dryrun.py and train/trainer.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model as model_lib
+from repro.optim.adam import Optimizer
+from repro.parallel.sharding import ShardingCtx, make_ctx
+
+
+class TrainState(NamedTuple):
+    params: dict
+    opt_state: object
+    step: jax.Array
+
+
+def cross_entropy(logits: jax.Array, targets: jax.Array,
+                  mask: Optional[jax.Array] = None) -> jax.Array:
+    """Next-token CE in fp32.  logits (B, T, V); targets (B, T) already
+    aligned (target[t] is the label for position t)."""
+    lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(lp, targets[..., None], axis=-1)[..., 0]
+    if mask is not None:
+        return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll.mean()
+
+
+def chunked_xent(hidden: jax.Array, emb_params: dict, targets: jax.Array,
+                 softcap: float, ctx: ShardingCtx, chunk: int = 512) -> jax.Array:
+    """CE computed per sequence-chunk with rematerialisation: the (B, S, V)
+    fp32 logits / log-softmax tensors never exist at full size (they were
+    ~12 GB/device of the dsv3 train peak; see EXPERIMENTS.md §Perf)."""
+    from repro.models import layers
+
+    B, S, d = hidden.shape
+    c = min(chunk, S)
+    while S % c:
+        c -= 1
+    nc = S // c
+    hc = jnp.moveaxis(hidden.reshape(B, nc, c, d), 1, 0)
+    tc = jnp.moveaxis(targets.reshape(B, nc, c), 1, 0)
+
+    def body(acc, inp):
+        h, t = inp
+        logits = layers.unembed(emb_params, h, ctx, softcap)
+        lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        nll = -jnp.take_along_axis(lp, t[..., None], axis=-1)[..., 0]
+        return acc + nll.sum(), None
+
+    total, _ = jax.lax.scan(
+        jax.checkpoint(body, prevent_cse=False), jnp.zeros((), jnp.float32),
+        (hc, tc))
+    return total / (B * S)
+
+
+def loss_fn(params, cfg: ModelConfig, batch: dict, ctx: ShardingCtx):
+    hidden, aux = model_lib.forward(params, cfg, batch, ctx,
+                                    return_hidden=True)
+    tokens = batch["tokens"]
+    emb = params["embedding"]
+    loss = chunked_xent(hidden[:, :-1], emb, tokens[:, 1:],
+                        cfg.final_softcap, ctx)
+    metrics = {"ce": loss}
+    total = loss
+    if aux.get("moe_aux") is not None:
+        total = total + aux["moe_aux"]
+        metrics["moe_aux"] = aux["moe_aux"]
+    if "mtp_hidden" in aux and cfg.mtp_depth:
+        # depth-1 MTP predicts token t+2 from position t
+        mtp = chunked_xent(aux["mtp_hidden"][:, :-2], emb, tokens[:, 2:],
+                           cfg.final_softcap, ctx)
+        total = total + cfg.mtp_coef * mtp
+        metrics["mtp_ce"] = mtp
+    metrics["loss"] = total
+    return total, metrics
+
+
+def make_train_step(cfg: ModelConfig, optimizer: Optimizer, mesh=None):
+    ctx = make_ctx(mesh)
+    n_micro = max(1, cfg.grad_microbatches)
+
+    def init_state(key) -> TrainState:
+        params = model_lib.init_model(cfg, key)
+        return TrainState(params=params, opt_state=optimizer.init(params),
+                          step=jnp.zeros((), jnp.int32))
+
+    def grads_and_metrics(params, batch):
+        if n_micro == 1:
+            (_, metrics), grads = jax.value_and_grad(
+                lambda p: loss_fn(p, cfg, batch, ctx), has_aux=True)(params)
+            return grads, metrics
+
+        # gradient accumulation: scan over microbatches — XLA's peak holds a
+        # single microbatch's activation working set + the grad accumulator
+        # (this is also where the accumulated-grad reduce can overlap the
+        # next microbatch's compute on real hardware)
+        def split(x):
+            return jnp.moveaxis(
+                x.reshape(n_micro, x.shape[0] // n_micro, *x.shape[1:]), 0, 0)
+
+        mbs = jax.tree.map(split, batch)
+
+        acc_dt = jnp.bfloat16 if cfg.grad_accum_dtype == "bfloat16" \
+            else jnp.float32
+
+        def micro(carry, mb):
+            g_acc, m_acc = carry
+            (_, m), g = jax.value_and_grad(
+                lambda p: loss_fn(p, cfg, mb, ctx), has_aux=True)(params)
+            g_acc = jax.tree.map(
+                lambda a, b: a + b.astype(acc_dt), g_acc, g)
+            m_acc = jax.tree.map(lambda a, b: a + b, m_acc, m)
+            return (g_acc, m_acc), None
+
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, acc_dt), params)
+        m0 = jax.tree.map(
+            lambda l: jnp.zeros(l.shape, l.dtype),
+            jax.eval_shape(lambda p: loss_fn(p, cfg, jax.tree.map(
+                lambda x: x[0], mbs), ctx)[1], params))
+        (g, m), _ = jax.lax.scan(micro, (g0, m0), mbs)
+        g = jax.tree.map(lambda x: (x.astype(jnp.float32) / n_micro), g)
+        m = jax.tree.map(lambda x: x / n_micro, m)
+        return g, m
+
+    def train_step(state: TrainState, batch: dict):
+        grads, metrics = grads_and_metrics(state.params, batch)
+        new_params, new_opt = optimizer.update(grads, state.opt_state, state.params)
+        gnorm = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2)
+                             for g in jax.tree.leaves(grads)))
+        metrics["grad_norm"] = gnorm
+        return TrainState(params=new_params, opt_state=new_opt,
+                          step=state.step + 1), metrics
+
+    return train_step, init_state

@@ -1,0 +1,118 @@
+"""Resumable trainer: checkpoint/restart, straggler monitor, drift hooks.
+
+Fault-tolerance contract (tested in tests/test_trainer.py):
+  * checkpoints every ``ckpt_every`` steps via the async writer;
+  * ``Trainer.run`` resumes bit-exact from the latest checkpoint (params,
+    optimizer state, step counter AND data-stream position);
+  * a simulated failure (killing the loop mid-run) followed by a fresh
+    Trainer converges to the same state as an uninterrupted run;
+  * per-step wall times feed a robust straggler detector (median absolute
+    deviation) — on a real cluster this triggers hot-spare swap-in; here it
+    surfaces in metrics and is unit-tested on synthetic timings.
+"""
+from __future__ import annotations
+
+import dataclasses
+import pathlib
+import time
+from typing import Callable, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import checkpoint as ckpt_lib
+from repro.configs.base import ModelConfig
+from repro.data.pipeline import DataConfig, DriftMonitor, TokenStream
+from repro.optim.adam import OPTIMIZERS
+from repro.train.train_step import make_train_step
+
+
+class StragglerMonitor:
+    """Flags steps (hosts, on a real cluster) whose duration exceeds
+    median + k * MAD — robust to the heavy-tailed step-time distribution."""
+
+    def __init__(self, k: float = 6.0, min_history: int = 16):
+        self.k = k
+        self.min_history = min_history
+        self.times: list[float] = []
+
+    def observe(self, dt: float) -> bool:
+        self.times.append(dt)
+        h = np.asarray(self.times[-256:])
+        if len(h) < self.min_history:
+            return False
+        med = np.median(h)
+        mad = np.median(np.abs(h - med)) + 1e-9
+        return bool(dt > med + self.k * mad)
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    steps: int = 100
+    ckpt_every: int = 20
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    optimizer: str = "adamw"
+    lr: float = 3e-4
+    log_every: int = 10
+    monitor_drift: bool = True
+
+
+class Trainer:
+    def __init__(self, model_cfg: ModelConfig, data_cfg: DataConfig,
+                 cfg: TrainerConfig, mesh=None,
+                 log_fn: Callable[[str], None] = print):
+        self.model_cfg = model_cfg
+        self.data_cfg = data_cfg
+        self.cfg = cfg
+        self.mesh = mesh
+        self.log = log_fn
+        opt = OPTIMIZERS[cfg.optimizer](lr=cfg.lr)
+        self._step_fn, self._init_fn = make_train_step(model_cfg, opt, mesh)
+        self._step_jit = jax.jit(self._step_fn, donate_argnums=(0,))
+        self.ckpt = ckpt_lib.AsyncCheckpointer()
+        self.straggler = StragglerMonitor()
+        self.monitor = DriftMonitor(data_cfg) if cfg.monitor_drift else None
+        self.history: list[dict] = []
+
+    def _ckpt_path(self, step: int) -> pathlib.Path:
+        return pathlib.Path(self.cfg.ckpt_dir) / f"step_{step}"
+
+    def run(self, key=None) -> dict:
+        key = key if key is not None else jax.random.PRNGKey(0)
+        stream = TokenStream(self.data_cfg)
+        state = self._init_fn(key)
+        start = 0
+        latest = ckpt_lib.latest_step(self.cfg.ckpt_dir)
+        if latest is not None:
+            payload = {"state": state, "stream": stream.state()}
+            payload, step = ckpt_lib.restore(self._ckpt_path(latest), payload)
+            state, start = payload["state"], step
+            stream.restore(payload["stream"])
+            self.log(f"[trainer] resumed from step {start}")
+
+        metrics = {}
+        for step in range(start, self.cfg.steps):
+            batch = {"tokens": jax.numpy.asarray(stream.next_batch())}
+            drift = self.monitor.observe(np.asarray(batch["tokens"])) \
+                if self.monitor else None
+            t0 = time.time()
+            state, metrics = self._step_jit(state, batch)
+            jax.block_until_ready(metrics["loss"])
+            dt = time.time() - t0
+            slow = self.straggler.observe(dt)
+            rec = {"step": step + 1, "loss": float(metrics["loss"]),
+                   "grad_norm": float(metrics["grad_norm"]),
+                   "dt": dt, "straggler": slow}
+            if drift:
+                rec["drift"] = drift
+            self.history.append(rec)
+            if (step + 1) % self.cfg.log_every == 0:
+                self.log(f"[trainer] step {step+1} loss {rec['loss']:.4f} "
+                         f"({dt*1e3:.0f} ms{' STRAGGLER' if slow else ''})")
+            if (step + 1) % self.cfg.ckpt_every == 0 \
+                    or step + 1 == self.cfg.steps:
+                self.ckpt.save(self._ckpt_path(step + 1),
+                               {"state": state, "stream": stream.state()},
+                               step + 1)
+        self.ckpt.wait()
+        return {"state": state, "metrics": metrics, "history": self.history}

@@ -1,0 +1,12 @@
+import os
+
+# IMPORTANT: do NOT set XLA_FLAGS / device-count overrides here — smoke tests
+# and benches must see the real single-device CPU.  Multi-device semantics are
+# tested in subprocesses (tests/test_distributed.py) and the production mesh
+# only inside launch/dryrun.py.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+from hypothesis import settings
+
+settings.register_profile("repro", deadline=None, max_examples=25, derandomize=True)
+settings.load_profile("repro")

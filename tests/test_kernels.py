@@ -1,0 +1,128 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.kernels import cand_score as cs_k
+from repro.kernels import race_update as ru_k
+from repro.kernels import ref
+from repro.kernels import sketch_decode_attn as sda_k
+from repro.kernels import srp_hash as sh_k
+
+
+# ---------------------------------------------------------------------------
+# srp_hash
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B", [1, 7, 128, 300])
+@pytest.mark.parametrize("d", [32, 128])
+@pytest.mark.parametrize("Lk", [(4, 4), (8, 6)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_srp_hash_matches_ref(B, d, Lk, dtype):
+    L, k = Lk
+    key = jax.random.PRNGKey(B * d + L)
+    x = jax.random.normal(key, (B, d), dtype)
+    proj = jax.random.normal(jax.random.PRNGKey(1), (d, L * k), jnp.float32)
+    mix = jax.random.randint(jax.random.PRNGKey(2), (L, k), 1, 2**30).astype(jnp.uint32) | 1
+    got = sh_k.srp_hash(x, proj, mix, n_buckets=97, interpret=True)
+    want = ref.srp_hash_ref(x, proj, mix, n_buckets=97)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@given(B=st.integers(1, 64), d=st.sampled_from([16, 64]), L=st.integers(1, 6))
+def test_srp_hash_property(B, d, L):
+    k = 3
+    x = jax.random.normal(jax.random.PRNGKey(B), (B, d))
+    proj = jax.random.normal(jax.random.PRNGKey(d), (d, L * k))
+    mix = jax.random.randint(jax.random.PRNGKey(L), (L, k), 1, 2**30).astype(jnp.uint32) | 1
+    got = sh_k.srp_hash(x, proj, mix, n_buckets=64, interpret=True)
+    want = ref.srp_hash_ref(x, proj, mix, n_buckets=64)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# race_hist
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B", [1, 37, 300])
+@pytest.mark.parametrize("L", [1, 4])
+@pytest.mark.parametrize("W", [64, 128])
+def test_race_hist_matches_ref(B, L, W):
+    codes = jax.random.randint(jax.random.PRNGKey(B + L + W), (B, L), 0, W, jnp.int32)
+    got = ru_k.race_hist(codes, W, interpret=True)
+    want = ref.race_update_ref(jnp.zeros((L, W), jnp.int32), codes)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert np.asarray(got).sum() == B * L
+
+
+# ---------------------------------------------------------------------------
+# cand_score
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("M", [1, 24, 256, 777])
+@pytest.mark.parametrize("d", [8, 128])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_cand_score_matches_ref(M, d, dtype):
+    q = jax.random.normal(jax.random.PRNGKey(M), (d,), dtype)
+    c = jax.random.normal(jax.random.PRNGKey(d), (M, d), dtype)
+    got = cs_k.cand_score(q, c, interpret=True)
+    want = ref.cand_score_ref(q, c)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-2, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# sketch_decode_attn
+# ---------------------------------------------------------------------------
+
+def _attn_case(seed, Hkv, G, dh, S, bs, softcap, frac_live, kv_len):
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 4)
+    q = jax.random.normal(ks[0], (Hkv, G, dh), jnp.float32)
+    k = jax.random.normal(ks[1], (S, Hkv, dh), jnp.float32)
+    v = jax.random.normal(ks[2], (S, Hkv, dh), jnp.float32)
+    nb = S // bs
+    live = jax.random.uniform(ks[3], (nb,)) < frac_live
+    ids = np.full((nb,), -1, np.int32)
+    lv = np.where(np.asarray(live))[0]
+    ids[: len(lv)] = lv
+    block_ids = jnp.asarray(ids)
+    n_live = jnp.asarray([len(lv)], jnp.int32)
+    kvl = jnp.asarray([kv_len], jnp.int32)
+
+    got = sda_k.sketch_decode_attn(
+        q, k, v, block_ids, n_live, kvl, block_size=bs, softcap=softcap,
+        interpret=True)
+    want = ref.sketch_decode_attn_ref(q, k, v, live, kvl[0], bs, softcap)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("softcap", [0.0, 20.0])
+@pytest.mark.parametrize("frac_live", [1.0, 0.5])
+def test_sketch_decode_attn_matches_ref(softcap, frac_live):
+    _attn_case(0, Hkv=2, G=4, dh=64, S=1024, bs=128, softcap=softcap,
+               frac_live=frac_live, kv_len=900)
+
+
+def test_sketch_decode_attn_partial_kv():
+    _attn_case(1, Hkv=1, G=8, dh=32, S=512, bs=64, softcap=0.0,
+               frac_live=1.0, kv_len=100)
+
+
+def test_sketch_decode_attn_no_live_blocks():
+    """All blocks pruned → zero output (matches oracle's nan→0)."""
+    _attn_case(2, Hkv=1, G=2, dh=32, S=256, bs=64, softcap=0.0,
+               frac_live=0.0, kv_len=256)
+
+
+def test_live_blocks_from_sketch_compaction():
+    sigs = jnp.asarray([[1, 0, 0], [1, 1, 0], [0, 0, 1], [1, 1, 1]], bool)
+    qsig = jnp.asarray([1, 1, 0], bool)
+    ids, n_live = sda_k.live_blocks_from_sketch(
+        qsig, sigs, kv_len=jnp.int32(4 * 16), block_size=16, min_match=2)
+    ids = np.asarray(ids)
+    assert int(n_live[0]) == 2
+    assert set(ids[:2].tolist()) == {1, 3}
+    assert (ids[2:] == -1).all()

@@ -1,0 +1,97 @@
+"""LSH family invariants (paper §2.1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import lsh, theory
+
+
+def test_srp_range_and_determinism():
+    key = jax.random.PRNGKey(0)
+    p = lsh.init_srp(key, 64, L=6, k=5, n_buckets=97)
+    x = jax.random.normal(jax.random.PRNGKey(1), (50, 64))
+    c1 = lsh.srp_hash(p, x)
+    c2 = lsh.srp_hash(p, x)
+    assert c1.shape == (50, 6)
+    assert (c1 == c2).all()
+    assert int(c1.min()) >= 0 and int(c1.max()) < 97
+
+
+def test_pstable_range():
+    key = jax.random.PRNGKey(0)
+    p = lsh.init_pstable(key, 64, L=6, k=3, w=4.0, n_buckets=101)
+    x = jax.random.normal(jax.random.PRNGKey(1), (50, 64))
+    c = lsh.pstable_hash(p, x)
+    assert c.shape == (50, 6)
+    assert int(c.min()) >= 0 and int(c.max()) < 101
+
+
+def test_srp_collision_monotone_in_similarity():
+    """Definition 2.1: closer pairs must collide more often (p1 > p2)."""
+    key = jax.random.PRNGKey(2)
+    d = 32
+    # L acts as repetition count for the empirical rate.
+    p = lsh.init_srp(key, d, L=512, k=1, n_buckets=2**20)
+    base = jax.random.normal(jax.random.PRNGKey(3), (d,))
+    near = base + 0.1 * jax.random.normal(jax.random.PRNGKey(4), (d,))
+    far = jax.random.normal(jax.random.PRNGKey(5), (d,))
+    cb, cn, cf = (lsh.srp_hash(p, v[None])[0] for v in (base, near, far))
+    rate_near = float((cb == cn).mean())
+    rate_far = float((cb == cf).mean())
+    assert rate_near > rate_far + 0.2
+
+
+def test_srp_collision_prob_matches_charikar():
+    """Empirical single-bit collision rate ~ 1 - theta/pi [Cha02]."""
+    key = jax.random.PRNGKey(6)
+    d = 48
+    p = lsh.init_srp(key, d, L=4096, k=1, n_buckets=2**20)
+    a = jax.random.normal(jax.random.PRNGKey(7), (d,))
+    b = a + 0.7 * jax.random.normal(jax.random.PRNGKey(8), (d,))
+    emp = float((lsh.srp_hash(p, a[None])[0] == lsh.srp_hash(p, b[None])[0]).mean())
+    pred = float(lsh.srp_collision_prob(a, b, p=1))
+    # Folding to n_buckets adds ~2^-20 extra collisions — negligible.
+    assert abs(emp - pred) < 0.05, (emp, pred)
+
+
+def test_pstable_collision_prob_matches_diim():
+    """Empirical p-stable collision rate vs the [DIIM04] closed form."""
+    key = jax.random.PRNGKey(9)
+    d, w = 32, 4.0
+    p = lsh.init_pstable(key, d, L=4096, k=1, w=w, n_buckets=2**20)
+    a = jax.random.normal(jax.random.PRNGKey(10), (d,))
+    for scale in (0.5, 2.0, 6.0):
+        off = jax.random.normal(jax.random.PRNGKey(11), (d,))
+        b = a + scale * off / jnp.linalg.norm(off)
+        emp = float((lsh.pstable_hash(p, a[None])[0] == lsh.pstable_hash(p, b[None])[0]).mean())
+        pred = theory.pstable_p(scale, w)
+        assert abs(emp - pred) < 0.05, (scale, emp, pred)
+
+
+def test_fold_spreads_buckets():
+    """The universal fold must not collapse the bucket space."""
+    key = jax.random.PRNGKey(12)
+    p = lsh.init_srp(key, 32, L=1, k=12, n_buckets=64)
+    x = jax.random.normal(jax.random.PRNGKey(13), (4096, 32))
+    c = np.asarray(lsh.srp_hash(p, x)[:, 0])
+    counts = np.bincount(c, minlength=64)
+    # every bucket population within 5x of uniform
+    assert counts.max() < 5 * (4096 / 64)
+
+
+def test_theory_params_consistent():
+    p1, p2 = 0.8, 0.3
+    rho = theory.rho(p1, p2)
+    assert 0 < rho < 1
+    n = 10_000
+    k = theory.choose_k(n, p2)
+    assert p2**k <= 1.0 / n + 1e-12
+    L = theory.choose_L(n, p1, p2)
+    assert L >= n**rho / p1 - 1
+    # Theorem 3.1 failure prob < 1 for m >= C n^eta with large C
+    eta = 0.5
+    m = 10 * n**eta
+    assert theory.sann_failure_prob(n, eta, m) < 1.0
+    # and decreasing in m
+    assert theory.sann_failure_prob(n, eta, 2 * m) < theory.sann_failure_prob(n, eta, m)

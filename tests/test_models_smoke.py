@@ -1,0 +1,77 @@
+"""Per-architecture smoke tests: reduced same-family config, one forward
+(and one grad) step on CPU — output shapes + finiteness (assignment item f).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.launch.inputs import make_batch
+from repro.models import model as model_lib
+
+SEQ = {"default": 64}
+
+
+def _loss(params, cfg, batch):
+    logits, aux = model_lib.forward(params, cfg, batch)
+    tgt = batch["tokens"][:, 1:]
+    lp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+    nll = -jnp.take_along_axis(lp, tgt[..., None], axis=-1)[..., 0]
+    return nll.mean() + aux.get("moe_aux", 0.0)
+
+
+@pytest.mark.parametrize("arch", registry.ARCH_IDS)
+def test_forward_shapes_and_finiteness(arch):
+    cfg = registry.get_smoke_config(arch)
+    batch = make_batch(cfg, batch=2, seq=64, key=jax.random.PRNGKey(0))
+    params = model_lib.init_model(cfg, jax.random.PRNGKey(1))
+    logits, aux = jax.jit(
+        lambda p, b: model_lib.forward(p, cfg, b))(params, batch)
+    text_len = batch["tokens"].shape[1]
+    assert logits.shape == (2, text_len, cfg.vocab), logits.shape
+    assert logits.dtype == jnp.float32
+    assert bool(jnp.isfinite(logits).all()), f"{arch}: non-finite logits"
+    assert bool(jnp.isfinite(aux["moe_aux"]))
+    if cfg.mtp_depth:
+        assert aux["mtp_logits"].shape == (2, text_len, cfg.vocab)
+
+
+@pytest.mark.parametrize("arch", ["qwen3-4b", "deepseek-v3-671b", "zamba2-2.7b",
+                                  "xlstm-125m", "whisper-large-v3"])
+def test_grad_step_finiteness(arch):
+    """One value_and_grad step per family representative."""
+    cfg = registry.get_smoke_config(arch)
+    batch = make_batch(cfg, batch=2, seq=32, key=jax.random.PRNGKey(2))
+    params = model_lib.init_model(cfg, jax.random.PRNGKey(3))
+    loss, grads = jax.jit(jax.value_and_grad(
+        lambda p: _loss(p, cfg, batch)))(params)
+    assert bool(jnp.isfinite(loss)), arch
+    finite = jax.tree.reduce(
+        lambda a, g: a and bool(jnp.isfinite(g).all()), grads, True)
+    assert finite, f"{arch}: non-finite grads"
+
+
+def test_param_counts_are_plausible():
+    """Analytic 6ND param counts should be within 2x of actual for the full
+    configs (used by the roofline MODEL_FLOPS term)."""
+    for arch in ("qwen3-4b", "granite-8b"):
+        cfg = registry.get_config(arch)
+        approx = cfg.param_count()
+        # qwen3-4b ~4e9, granite-8b ~8e9
+        target = {"qwen3-4b": 4e9, "granite-8b": 8e9}[arch]
+        assert 0.4 * target < approx < 2.5 * target, (arch, approx)
+
+
+def test_window_pattern_gemma3():
+    cfg = registry.get_config("gemma3-4b")
+    pat = np.asarray(model_lib.window_pattern(cfg))
+    assert (pat[5::6] == 0).all()              # every 6th layer global
+    assert (np.delete(pat, np.s_[5::6]) == 1024).all()
+
+
+def test_long_context_applicability():
+    from repro.configs.base import LONG_500K
+    runs = [a for a in registry.ARCH_IDS
+            if registry.shape_applicable(registry.get_config(a), LONG_500K)[0]]
+    assert set(runs) == {"zamba2-2.7b", "xlstm-125m", "gemma2-27b", "gemma3-4b"}

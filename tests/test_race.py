@@ -1,0 +1,71 @@
+"""RACE sketch invariants (paper §2.3, Theorems 2.3/2.4)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import lsh, race
+
+
+def test_race_counts_conserve_mass():
+    key = jax.random.PRNGKey(0)
+    p = lsh.init_srp(key, 16, L=5, k=3, n_buckets=32)
+    xs = jax.random.normal(jax.random.PRNGKey(1), (200, 16))
+    st = race.race_init(5, 32)
+    st = race.race_update_batch(st, p, xs)
+    # every row holds exactly one increment per element
+    assert (np.asarray(st.counts).sum(axis=1) == 200).all()
+    assert int(st.n) == 200
+
+
+def test_race_turnstile_exact_cancellation():
+    key = jax.random.PRNGKey(2)
+    p = lsh.init_pstable(key, 16, L=4, k=2, w=4.0, n_buckets=64)
+    xs = jax.random.normal(jax.random.PRNGKey(3), (50, 16))
+    st_all = race.race_update_batch(race.race_init(4, 64), p, xs)
+    st_del = race.race_update_batch(st_all, p, xs[:20], sign=-1)
+    st_ref = race.race_update_batch(race.race_init(4, 64), p, xs[20:])
+    assert (np.asarray(st_del.counts) == np.asarray(st_ref.counts)).all()
+    assert int(st_del.n) == 30
+
+
+def test_race_single_vs_batch_update_agree():
+    key = jax.random.PRNGKey(4)
+    p = lsh.init_srp(key, 8, L=3, k=2, n_buckets=16)
+    xs = jax.random.normal(jax.random.PRNGKey(5), (32, 8))
+    st_b = race.race_update_batch(race.race_init(3, 16), p, xs)
+
+    def step(s, x):
+        return race.race_update(s, p, x), None
+
+    st_s, _ = jax.lax.scan(step, race.race_init(3, 16), xs)
+    assert (np.asarray(st_b.counts) == np.asarray(st_s.counts)).all()
+
+
+def test_ace_unbiasedness_theorem_2_3():
+    """E[A[h(q)]] = sum_x k^p(x, q): average over many independent sketches
+    approaches the collision-kernel KDE (+ n/W fold-collision bias)."""
+    d, n, L, k, W = 16, 64, 64, 2, 256
+    key = jax.random.PRNGKey(6)
+    xs = jax.random.normal(jax.random.PRNGKey(7), (n, d))
+    q = xs[0] + 0.3 * jax.random.normal(jax.random.PRNGKey(8), (d,))
+
+    # L independent rows of an SRP sketch = L independent ACE estimators.
+    p = lsh.init_srp(key, d, L=L, k=k, n_buckets=W)
+    st = race.race_update_batch(race.race_init(L, W), p, xs)
+    codes = lsh.srp_hash(p, q[None])[0]
+    est = float(np.asarray(st.counts)[np.arange(L), np.asarray(codes)].mean())
+
+    kernel = float(jax.vmap(lambda x: lsh.srp_collision_prob(x, q, p=k))(xs).sum())
+    bias = n / W  # chance fold collisions
+    assert abs(est - kernel) < 0.35 * kernel + 3 * bias, (est, kernel, bias)
+
+
+def test_race_query_median_of_means_close_to_mean():
+    key = jax.random.PRNGKey(9)
+    p = lsh.init_srp(key, 8, L=20, k=2, n_buckets=64)
+    xs = jax.random.normal(jax.random.PRNGKey(10), (128, 8))
+    st = race.race_update_batch(race.race_init(20, 64), p, xs)
+    q = xs[3]
+    mean = float(race.race_query(st, p, q))
+    mom = float(race.race_query(st, p, q, median_of_means=4))
+    assert abs(mean - mom) <= 0.5 * mean + 1

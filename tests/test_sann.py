@@ -1,0 +1,113 @@
+"""S-ANN streaming (c,r)-ANN guarantees (paper §3, Theorem 3.1/3.3)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import sann
+
+
+def _poisson_planted(key, n, d, r):
+    """Poisson-point-process-ish stream: dense uniform cloud, so every r-ball
+    near the data support holds ~Poisson(m) points (the paper's syn-32)."""
+    return jax.random.uniform(key, (n, d), minval=0.0, maxval=1.0)
+
+
+def test_sampling_rate_concentrates():
+    cfg = sann.SANNConfig(dim=8, n_max=2000, eta=0.25, r=0.5, c=2.0, L=4, k=2)
+    cfg, params, state = sann.sann_init(cfg, jax.random.PRNGKey(0))
+    xs = _poisson_planted(jax.random.PRNGKey(1), 2000, 8, 0.5)
+    state = sann.sann_insert_stream(state, params, xs, jax.random.PRNGKey(2), cfg)
+    expect = 2000 * cfg.keep_prob
+    sd = np.sqrt(2000 * cfg.keep_prob * (1 - cfg.keep_prob))
+    assert abs(int(state.n_stored) - expect) < 5 * sd
+    assert int(state.n_seen) == 2000
+
+
+def test_query_succeeds_on_dense_stream():
+    """(c,r) contract: when r-balls are dense (m*p >> 1), queries near the
+    data must return a point within c*r with high rate (Lemma 3.3)."""
+    d, n = 4, 4000
+    cfg = sann.SANNConfig(dim=d, n_max=n, eta=0.2, r=0.3, c=2.0, w=2.0,
+                          L=8, k=4, bucket_cap=32)
+    cfg, params, state = sann.sann_init(cfg, jax.random.PRNGKey(3))
+    xs = _poisson_planted(jax.random.PRNGKey(4), n, d, cfg.r)
+    state = sann.sann_insert_stream(state, params, xs, jax.random.PRNGKey(5), cfg)
+
+    qs = jax.random.uniform(jax.random.PRNGKey(6), (50, d), minval=0.2, maxval=0.8)
+    res = sann.sann_query_batch(state, params, qs, cfg)
+    rate = float(res.found.mean())
+    assert rate > 0.8, rate
+    # returned distances honour the (c,r) contract
+    found_d = np.asarray(res.distance)[np.asarray(res.found)]
+    assert (found_d <= cfg.c * cfg.r + 1e-5).all()
+
+
+def test_query_returns_null_far_from_data():
+    d, n = 4, 1000
+    cfg = sann.SANNConfig(dim=d, n_max=n, eta=0.2, r=0.3, c=2.0, w=2.0, L=8, k=4)
+    cfg, params, state = sann.sann_init(cfg, jax.random.PRNGKey(7))
+    xs = _poisson_planted(jax.random.PRNGKey(8), n, d, cfg.r)
+    state = sann.sann_insert_stream(state, params, xs, jax.random.PRNGKey(9), cfg)
+    q_far = jnp.full((d,), 50.0)
+    res = sann.sann_query(state, params, q_far, cfg)
+    assert not bool(res.found)
+    assert int(res.index) == -1
+
+
+def test_turnstile_delete_removes_neighbor():
+    """§3.4: delete the planted neighbor; query must stop returning it."""
+    d = 8
+    cfg = sann.SANNConfig(dim=d, n_max=500, eta=0.0, r=0.5, c=2.0, w=2.0, L=8, k=3)
+    cfg, params, state = sann.sann_init(cfg, jax.random.PRNGKey(10))
+    q = jnp.full((d,), 0.5)
+    planted = q + 0.1  # distance 0.1*sqrt(8) ~ 0.28 < r
+    far = 10.0 + jax.random.uniform(jax.random.PRNGKey(11), (100, d))
+    stream = jnp.concatenate([far[:50], planted[None], far[50:]])
+    state = sann.sann_insert_stream(state, params, stream, jax.random.PRNGKey(12), cfg)
+
+    res_before = sann.sann_query(state, params, q, cfg)
+    assert bool(res_before.found)
+    stored_before = int(state.n_stored)
+    state = sann.sann_delete(state, params, planted, cfg)
+    res_after = sann.sann_query(state, params, q, cfg)
+    assert not bool(res_after.found)
+    assert int(state.n_stored) == stored_before - 1  # exactly one tombstone
+
+
+def test_batch_query_matches_single():
+    d = 8
+    cfg = sann.SANNConfig(dim=d, n_max=300, eta=0.1, r=0.4, c=2.0, w=2.0, L=6, k=3)
+    cfg, params, state = sann.sann_init(cfg, jax.random.PRNGKey(13))
+    xs = _poisson_planted(jax.random.PRNGKey(14), 300, d, cfg.r)
+    state = sann.sann_insert_stream(state, params, xs, jax.random.PRNGKey(15), cfg)
+    qs = xs[:8]
+    batch = sann.sann_query_batch(state, params, qs, cfg)
+    for i in range(8):
+        single = sann.sann_query(state, params, qs[i], cfg)
+        assert int(batch.index[i]) == int(single.index)
+        assert bool(batch.found[i]) == bool(single.found)
+
+
+def test_candidate_budget_is_3L():
+    d = 4
+    cfg = sann.SANNConfig(dim=d, n_max=500, eta=0.0, r=0.3, c=2.0, w=2.0, L=4, k=1,
+                          bucket_cap=64)
+    cfg, params, state = sann.sann_init(cfg, jax.random.PRNGKey(16))
+    # all points identical → all collide → candidate list saturates at 3L
+    xs = jnp.ones((200, d)) * 0.5
+    state = sann.sann_insert_stream(state, params, xs, jax.random.PRNGKey(17), cfg)
+    res = sann.sann_query(state, params, xs[0], cfg)
+    assert int(res.n_candidates) <= 3 * cfg.L
+
+
+def test_memory_is_sublinear_in_eta():
+    """Fig. 5 claim: sketch bytes shrink as eta grows, and scale ~n^{1-eta}."""
+    sizes = []
+    for eta in (0.2, 0.5, 0.8):
+        cfg = sann.SANNConfig(dim=128, n_max=100_000, eta=eta, r=0.5, c=2.0, L=16, k=8)
+        sizes.append(sann.sann_bytes(cfg))
+    assert sizes[0] > sizes[1] > sizes[2]
+    # n^{1-eta} scaling (up to the constant-size floor)
+    ratio = sizes[0] / sizes[1]
+    assert ratio > 5  # 100k^{0.3} ~ 31.6x ideal; tables add overhead

@@ -1,0 +1,111 @@
+"""SW-AKDE end-to-end guarantees (paper §4, Theorem 4.1 / Lemma 4.3)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import lsh, race, swakde
+
+
+def _exact_window_counts(params, window_pts, q):
+    """Ground truth: per-row count of window points colliding with q."""
+    codes_q = lsh.hash_points(params, q)                    # (L,)
+    codes_x = lsh.hash_points(params, window_pts)           # (T, L)
+    return (codes_x == codes_q[None, :]).sum(axis=0)        # (L,)
+
+
+def test_swakde_matches_exact_window_count_within_eps():
+    """The SW-AKDE estimator must track the exact in-window collision count
+    to the EH error eps' (Lemma 4.1/4.2 with X_i known exactly)."""
+    key = jax.random.PRNGKey(0)
+    d, L, W, N = 12, 8, 64, 100
+    eps = 0.1
+    cfg = swakde.SWAKDEConfig(L=L, W=W, window=N, eh_eps=eps)
+    params = lsh.init_srp(key, d, L=L, k=2, n_buckets=W)
+    xs = jax.random.normal(jax.random.PRNGKey(1), (250, d))
+    state = swakde.swakde_init(cfg)
+    state = swakde.swakde_stream(state, params, xs, cfg)
+
+    q = xs[-5]
+    est = float(swakde.swakde_query(state, params, q, cfg))
+    exact_rows = np.asarray(_exact_window_counts(params, xs[-N:], q))
+    exact = exact_rows.mean()
+    assert abs(est - exact) <= eps * exact + 1.0, (est, exact)
+
+
+def test_swakde_full_window_equals_race():
+    """With stream length <= N nothing expires: SW-AKDE == plain RACE (the
+    paper's Fig. 11 comparison in the degenerate regime)."""
+    key = jax.random.PRNGKey(2)
+    d, L, W = 8, 6, 32
+    cfg = swakde.SWAKDEConfig(L=L, W=W, window=500, eh_eps=0.1)
+    params = lsh.init_srp(key, d, L=L, k=2, n_buckets=W)
+    xs = jax.random.normal(jax.random.PRNGKey(3), (80, d))
+
+    sw = swakde.swakde_stream(swakde.swakde_init(cfg), params, xs, cfg)
+    rc = race.race_update_batch(race.race_init(L, W), params, xs)
+
+    for i in (0, 17, 42):
+        q = xs[i]
+        est_sw = float(swakde.swakde_query(sw, params, q, cfg))
+        est_rc = float(race.race_query(rc, params, q))
+        assert abs(est_sw - est_rc) <= 0.1 * est_rc + 1.0, (i, est_sw, est_rc)
+
+
+def test_swakde_expiry_shifts_density():
+    """Distribution drift: after the window slides past cluster A, density at
+    A must fall and density at B must rise (the paper's motivating use)."""
+    key = jax.random.PRNGKey(4)
+    d, L, W, N = 8, 8, 64, 60
+    cfg = swakde.SWAKDEConfig(L=L, W=W, window=N, eh_eps=0.1)
+    params = lsh.init_srp(key, d, L=L, k=3, n_buckets=W)
+    mu_a = jnp.full((d,), 4.0)
+    mu_b = -mu_a
+    a = mu_a + 0.3 * jax.random.normal(jax.random.PRNGKey(5), (100, d))
+    b = mu_b + 0.3 * jax.random.normal(jax.random.PRNGKey(6), (100, d))
+
+    state = swakde.swakde_init(cfg)
+    state = swakde.swakde_stream(state, params, jnp.concatenate([a, b]), cfg)
+    da = float(swakde.swakde_query(state, params, mu_a, cfg))
+    db = float(swakde.swakde_query(state, params, mu_b, cfg))
+    assert db > 10 * max(da, 0.1), (da, db)
+
+
+def test_swakde_batch_query_matches_single():
+    key = jax.random.PRNGKey(7)
+    d, L, W = 8, 4, 32
+    cfg = swakde.SWAKDEConfig(L=L, W=W, window=40, eh_eps=0.2)
+    params = lsh.init_srp(key, d, L=L, k=2, n_buckets=W)
+    xs = jax.random.normal(jax.random.PRNGKey(8), (50, d))
+    state = swakde.swakde_stream(swakde.swakde_init(cfg), params, xs, cfg)
+    qs = xs[:4]
+    batch = np.asarray(swakde.swakde_query_batch(state, params, qs, cfg))
+    single = np.asarray([float(swakde.swakde_query(state, params, q, cfg)) for q in qs])
+    np.testing.assert_allclose(batch, single, rtol=1e-6)
+
+
+def test_batch_swakde_window_semantics():
+    """Corollary 4.2: window counts the last N *batches*."""
+    key = jax.random.PRNGKey(9)
+    d, L, W, R = 8, 4, 32, 8
+    cfg = swakde.BatchSWAKDEConfig(L=L, W=W, window=5, eh_eps=0.2, batch_size=R)
+    params = lsh.init_srp(key, d, L=L, k=2, n_buckets=W)
+    mu = jnp.full((d,), 3.0)
+    near = mu + 0.2 * jax.random.normal(jax.random.PRNGKey(10), (5 * R, d))
+    far = -mu + 0.2 * jax.random.normal(jax.random.PRNGKey(11), (10 * R, d))
+
+    st = swakde.batch_swakde_init(cfg)
+    for i in range(5):
+        st = swakde.batch_swakde_update(st, params, near[i * R:(i + 1) * R], cfg)
+    dens_in = float(swakde.batch_swakde_query(st, params, mu, cfg))
+    for i in range(10):  # push the near batches out of the window
+        st = swakde.batch_swakde_update(st, params, far[i * R:(i + 1) * R], cfg)
+    dens_out = float(swakde.batch_swakde_query(st, params, mu, cfg))
+    assert dens_in > 5 * max(dens_out, 0.2), (dens_in, dens_out)
+
+
+def test_swakde_space_formula():
+    cfg = swakde.SWAKDEConfig(L=16, W=128, window=450, eh_eps=0.1)
+    assert swakde.swakde_bytes(cfg) > 0
+    # Lemma 4.3 relation between KDE eps and EH eps'
+    assert abs(cfg.kde_eps - (2 * 0.1 + 0.1**2)) < 1e-9
