@@ -26,8 +26,9 @@ def _build_sann(data, eta, r, c, seed=0, L=12, k=6, bucket_cap=32):
     cfg = sann.SANNConfig(dim=data.shape[1], n_max=len(data), eta=eta, r=r,
                           c=c, w=2.0 * r, L=L, k=k, bucket_cap=bucket_cap)
     cfg, params, state = sann.sann_init(cfg, jax.random.PRNGKey(seed))
-    state = sann.sann_insert_stream(state, params, jnp.asarray(data),
-                                    jax.random.PRNGKey(seed + 1), cfg)
+    state = sann.sann_insert_chunked(state, params, jnp.asarray(data),
+                                     jax.random.PRNGKey(seed + 1), cfg,
+                                     chunk=4096)
     return cfg, params, state
 
 

@@ -1,0 +1,134 @@
+"""Ingest-path benchmarks: per-point `lax.scan` vs batched updates.
+
+The paper's headline is *streaming* sketches; the serving bottleneck is how
+fast a chunk of stream elements can be folded into sketch state.  This
+suite measures points/sec for the per-point reference path (one scan step
+per element) against the batched contract (one hash matmul + one
+conflict-resolving update per chunk) for all three sketches:
+
+  ingest.race.*    — RACE counter grid (core.race → kernels race_hist).
+                     Config: sign-bit ACE rows (SRP k=1, W=2^k) — the
+                     canonical compact-range RACE [CS20].
+  ingest.swakde.*  — sliding-window EH grid.  The batched path is the
+                     Corollary-4.2 batch model (one EH timestep per chunk,
+                     closed-form multi-increment SumEH cells); the
+                     `exact` row is the bit-identical per-point-timestamp
+                     chunk replay (core.swakde.swakde_update_chunk).
+  ingest.sann.*    — S-ANN sampled point store + hash tables
+                     (core.sann.sann_insert_batch segment scatter).
+
+Emits ``name,us_per_call,derived`` CSV rows (benchmarks.run contract);
+``derived`` carries points-per-second and the batched-over-sequential
+speedup at each chunk size.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import lsh, race, sann, swakde
+from .common import syn_ppp, timeit
+
+N_POINTS = 4096
+CHUNKS = (256, 1024, 4096)
+WINDOW_PTS = 2048  # SW-AKDE sliding window, in stream points
+
+
+def _pps(us: float) -> float:
+    return N_POINTS * 1e6 / us
+
+
+def bench_race(rows):
+    d, L, W, k = 32, 48, 2, 1
+    params = lsh.init_srp(jax.random.PRNGKey(0), d, L=L, k=k, n_buckets=W)
+    xs = jnp.asarray(syn_ppp(N_POINTS, d, seed=1))
+    st0 = race.race_init(L, W)
+
+    def seq(st, stream):
+        def step(s, x):
+            return race.race_update(s, params, x), None
+        return jax.lax.scan(step, st, stream)[0]
+
+    us_seq = timeit(jax.jit(seq), st0, xs, repeats=5)
+    rows.append((f"ingest.race.seq.n{N_POINTS}", us_seq,
+                 f"pps={_pps(us_seq):.0f}"))
+
+    for chunk in CHUNKS:
+        def batched(st, stream, chunk=chunk):
+            def step(s, c):
+                return race.race_update_batch(s, params, c), None
+            return jax.lax.scan(step, st, stream.reshape(-1, chunk, d))[0]
+
+        us = timeit(jax.jit(batched), st0, xs, repeats=5)
+        rows.append((f"ingest.race.batch{chunk}", us,
+                     f"pps={_pps(us):.0f};speedup={us_seq/us:.1f}"))
+
+
+def bench_swakde(rows):
+    d, L, W = 16, 8, 64
+    params = lsh.init_srp(jax.random.PRNGKey(2), d, L=L, k=8, n_buckets=W)
+    xs = jax.random.normal(jax.random.PRNGKey(3), (N_POINTS, d))
+
+    cfg = swakde.SWAKDEConfig(L=L, W=W, window=WINDOW_PTS, eh_eps=0.2)
+    st0 = swakde.swakde_init(cfg)
+    us_seq = timeit(
+        jax.jit(lambda st, s: swakde.swakde_stream(st, params, s, cfg)),
+        st0, xs, repeats=5)
+    rows.append((f"ingest.swakde.seq.n{N_POINTS}", us_seq,
+                 f"pps={_pps(us_seq):.0f}"))
+
+    # Production batched path — Corollary 4.2: one EH timestep per chunk,
+    # window measured in batches at the same point horizon.
+    for chunk in CHUNKS:
+        bcfg = swakde.BatchSWAKDEConfig(
+            L=L, W=W, window=max(1, WINDOW_PTS // chunk), eh_eps=0.2,
+            batch_size=chunk)
+        bst0 = swakde.batch_swakde_init(bcfg)
+
+        def batched(st, stream, chunk=chunk, bcfg=bcfg):
+            def step(s, c):
+                return swakde.batch_swakde_update(s, params, c, bcfg), None
+            return jax.lax.scan(step, st, stream.reshape(-1, chunk, d))[0]
+
+        us = timeit(jax.jit(batched), bst0, xs, repeats=5)
+        rows.append((f"ingest.swakde.batch{chunk}", us,
+                     f"pps={_pps(us):.0f};speedup={us_seq/us:.1f}"))
+
+    # Exact chunked replay: bit-identical to the per-point path (same
+    # per-point timestamps), still one grid traversal per chunk.
+    us = timeit(
+        jax.jit(lambda st, s: swakde.swakde_update_chunk(st, params, s, cfg)),
+        st0, xs, repeats=5)
+    rows.append((f"ingest.swakde.exact{N_POINTS}", us,
+                 f"pps={_pps(us):.0f};speedup={us_seq/us:.1f}"))
+
+
+def bench_sann(rows):
+    d = 48
+    cfg = sann.SANNConfig(dim=d, n_max=N_POINTS, eta=0.3, r=0.5, c=2.0,
+                          w=1.0, L=8, k=4, bucket_cap=16)
+    cfg, params, st0 = sann.sann_init(cfg, jax.random.PRNGKey(4))
+    xs = jnp.asarray(syn_ppp(N_POINTS, d, seed=5))
+    key = jax.random.PRNGKey(6)
+
+    us_seq = timeit(
+        jax.jit(lambda st, s, k:
+                sann.sann_insert_stream(st, params, s, k, cfg)),
+        st0, xs, key, repeats=5)
+    rows.append((f"ingest.sann.seq.n{N_POINTS}", us_seq,
+                 f"pps={_pps(us_seq):.0f}"))
+
+    for chunk in CHUNKS:
+        us = timeit(
+            jax.jit(lambda st, s, k, chunk=chunk:
+                    sann.sann_insert_chunked(st, params, s, k, cfg,
+                                             chunk=chunk)),
+            st0, xs, key, repeats=5)
+        rows.append((f"ingest.sann.batch{chunk}", us,
+                     f"pps={_pps(us):.0f};speedup={us_seq/us:.1f}"))
+
+
+def run(rows):
+    bench_race(rows)
+    bench_swakde(rows)
+    bench_sann(rows)

@@ -58,8 +58,9 @@ def _swakde_error(data, queries, kind, rows_, window, W=96, eh_eps=0.1):
     cfg = swakde.SWAKDEConfig(L=rows_, W=W, window=window, eh_eps=eh_eps)
     params = _params(kind, data.shape[1], rows_, W)
     t0 = time.perf_counter()
-    state = jax.block_until_ready(swakde.swakde_stream(
-        swakde.swakde_init(cfg), params, jnp.asarray(data), cfg))
+    # Bit-identical to swakde_stream, one grid traversal per chunk.
+    state = jax.block_until_ready(swakde.swakde_stream_batched(
+        swakde.swakde_init(cfg), params, jnp.asarray(data), cfg, chunk=512))
     build_us = (time.perf_counter() - t0) * 1e6 / len(data)
     est = np.asarray(swakde.swakde_query_batch(
         state, params, jnp.asarray(queries), cfg))

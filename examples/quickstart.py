@@ -18,8 +18,10 @@ def streaming_ann():
     cfg = sann.SANNConfig(dim=d, n_max=n, eta=0.4, r=0.8, c=2.0, w=1.6,
                           L=10, k=4)
     cfg, params, state = sann.sann_init(cfg, jax.random.PRNGKey(0))
-    state = sann.sann_insert_stream(state, params, jnp.asarray(stream),
-                                    jax.random.PRNGKey(1), cfg)
+    # batched ingest: one hash matmul + one segment scatter per chunk,
+    # bit-identical to the per-point sann_insert_stream under the same key
+    state = sann.sann_insert_batch(state, params, jnp.asarray(stream),
+                                   jax.random.PRNGKey(1), cfg)
     print(f"  stream={n}  stored={int(state.n_stored)} "
           f"(keep prob n^-eta = {cfg.keep_prob:.3f})")
 

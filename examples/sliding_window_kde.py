@@ -22,7 +22,9 @@ def main():
     stream = np.concatenate(phases)
 
     state = swakde.swakde_init(cfg)
-    state = swakde.swakde_stream(state, params, jnp.asarray(stream), cfg)
+    # chunked batched ingest — bit-identical to the per-point swakde_stream
+    state = swakde.swakde_stream_batched(state, params, jnp.asarray(stream),
+                                         cfg, chunk=128)
 
     q = jnp.asarray(phases[2][:8])   # query near the current phase
     est = np.asarray(swakde.swakde_query_batch(state, params, q, cfg))

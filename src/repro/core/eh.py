@@ -50,7 +50,7 @@ class EHConfig:
 
 
 class EHState(NamedTuple):
-    ts: jax.Array    # (levels, slots) int64 — bucket timestamps, newest-first
+    ts: jax.Array    # (levels, slots) int32 — bucket timestamps, newest-first
     num: jax.Array   # (levels,) int32 — live buckets per level
 
 
@@ -69,28 +69,38 @@ def _expire(state: EHState, t: jax.Array, cfg: EHConfig) -> EHState:
 
 
 def eh_add(state: EHState, t: jax.Array, cfg: EHConfig) -> EHState:
-    """Record a 1 at time ``t``; cascade merges to maintain DGIM invariants."""
+    """Record a 1 at time ``t``; cascade merges to maintain DGIM invariants.
+
+    The cascade is a `lax.scan` over the levels axis: each level receives an
+    optional carry bucket from below, prepends it, and (on overflow) merges
+    its two oldest buckets into a carry for the level above.  One pass over
+    the (levels, slots) buffer per add — the per-level in-place-update
+    formulation copies the whole buffer at every level, which dominates when
+    the batched ingest path vmaps eh_add over thousands of cells.
+    """
     state = _expire(state, t, cfg)
     ts, num = state
-    # Insert a size-1 bucket at the front of level 0.
-    ts = ts.at[0].set(jnp.roll(ts[0], 1).at[0].set(t))
-    num = num.at[0].add(1)
 
-    def body(level, carry):
-        ts, num = carry
-        overflow = num[level] > cfg.max_buckets_per_level
-        # Two oldest buckets at this level live at indices num-1 (oldest) and
-        # num-2.  The merged bucket keeps the *newer* timestamp (DGIM: a
-        # bucket's timestamp is its most recent 1).
-        merged_ts = ts[level, jnp.maximum(num[level] - 2, 0)]
-        new_num_l = jnp.where(overflow, num[level] - 2, num[level])
-        pushed = jnp.roll(ts[level + 1], 1).at[0].set(merged_ts)
-        ts = ts.at[level + 1].set(jnp.where(overflow, pushed, ts[level + 1]))
-        num = num.at[level].set(new_num_l)
-        num = num.at[level + 1].add(jnp.where(overflow, 1, 0))
-        return ts, num
+    def level_step(carry, level_row):
+        in_ts, in_flag = carry                    # bucket pushed from below
+        row_ts, row_num, level = level_row        # (slots,), (), ()
+        new_ts = jnp.where(
+            in_flag, jnp.roll(row_ts, 1).at[0].set(in_ts), row_ts)
+        new_num = row_num + in_flag.astype(jnp.int32)
+        # Two oldest buckets live at indices new_num-1 (oldest) and
+        # new_num-2.  The merged bucket keeps the *newer* timestamp (DGIM:
+        # a bucket's timestamp is its most recent 1).  The top level never
+        # merges (sized so in-window mass cannot overflow it).
+        overflow = (new_num > cfg.max_buckets_per_level) & (level < cfg.levels - 1)
+        merged_ts = new_ts[jnp.maximum(new_num - 2, 0)]
+        out_num = jnp.where(overflow, new_num - 2, new_num)
+        return (merged_ts, overflow), (new_ts, out_num)
 
-    ts, num = lax.fori_loop(0, cfg.levels - 1, body, (ts, num))
+    levels = jnp.arange(cfg.levels, dtype=jnp.int32)
+    # The size-1 bucket for ``t`` enters as the carry into level 0.
+    _, (ts, num) = lax.scan(level_step,
+                            (jnp.asarray(t, ts.dtype), jnp.bool_(True)),
+                            (ts, num, levels))
     return EHState(ts=ts, num=num)
 
 
@@ -162,8 +172,11 @@ def sum_eh_init(cfg: SumEHConfig) -> SumEHState:
     return eh_init(cfg.base)
 
 
-def sum_eh_add(state: SumEHState, t, value, cfg: SumEHConfig) -> SumEHState:
-    """Add ``value`` in [0, batch_max] unit elements, all stamped ``t``."""
+def sum_eh_add_ref(state: SumEHState, t, value, cfg: SumEHConfig) -> SumEHState:
+    """Reference: ``value`` sequential unit ``eh_add``s, all stamped ``t``.
+
+    O(batch_max · levels) — kept as the semantic oracle for the closed-form
+    ``sum_eh_add`` below (tests/test_eh.py checks live-state equivalence)."""
 
     def body(i, s):
         added = eh_add(s, t, cfg.base)
@@ -172,6 +185,66 @@ def sum_eh_add(state: SumEHState, t, value, cfg: SumEHConfig) -> SumEHState:
     state = lax.fori_loop(0, cfg.batch_max, body, state)
     # value == 0 still advances expiry lazily (query-side masking handles it).
     return state
+
+
+def sum_eh_add(state: SumEHState, t, value, cfg: SumEHConfig) -> SumEHState:
+    """Add ``value`` in [0, batch_max] unit elements, all stamped ``t`` —
+    closed-form cascade, O(levels · slots) independent of ``value``.
+
+    Because all ``value`` unit buckets share one timestamp, the DGIM cascade
+    is binary-counter carry propagation and each level can be settled in one
+    shot.  Per level, arrivals are consumed oldest-first, so the j-th merge
+    consumes queue items 2j and 2j+1 of
+
+        queue = reverse(live ring) ++ carried-up stamps ++ t, t, ...
+
+    and emits the newer stamp ``queue[2j+1]`` to the level above.  The merge
+    count follows from the saturation dynamics: the level fills to
+    ``maxb+1`` once, then every second arrival fires a merge.  Carried-up
+    stamps are representable as (a ≤ slots-entry prefix of old stamps, a
+    count of trailing ``t``s), which the halving keeps closed across levels.
+
+    The live state (ring prefixes ``ts[:, :num]`` and ``num``) is identical
+    to ``sum_eh_add_ref``; slots beyond ``num`` may hold different garbage
+    (they are masked by every reader)."""
+    base = cfg.base
+    maxb = base.max_buckets_per_level
+    S = base.slots
+    expired = _expire(state, t, base)
+    ts0, num0 = expired
+    t32 = jnp.asarray(t, ts0.dtype)
+    iota = jnp.arange(S, dtype=jnp.int32)
+
+    def level_step(carry, level_row):
+        pre, npre, r = carry                 # carried-up stamps: prefix + t's
+        row_ts, num, level = level_row       # (S,), (), ()
+        c = npre + r
+        total = num + c
+        K = num + npre                       # queue prefix length (non-t part)
+
+        def q(i):                            # queue lookup at indices i
+            ring_val = row_ts[jnp.clip(num - 1 - i, 0, S - 1)]
+            pre_val = pre[jnp.clip(i - num, 0, S - 1)]
+            return jnp.where(i < num, ring_val,
+                             jnp.where(i < K, pre_val, t32))
+
+        m = jnp.where(total <= maxb, 0, 1 + (c - (maxb + 1 - num)) // 2)
+        m = jnp.where(level < base.levels - 1, m, 0)   # top level never merges
+        out_pre = q(2 * iota + 1)
+        out_npre = jnp.minimum(m, K // 2)
+        out_r = m - out_npre
+        n_f = total - 2 * m
+        new_ts = jnp.where(iota < n_f, q(total - 1 - iota), row_ts)
+        return (out_pre, out_npre, out_r), (new_ts, n_f)
+
+    levels = jnp.arange(base.levels, dtype=jnp.int32)
+    init = (jnp.zeros((S,), ts0.dtype), jnp.int32(0),
+            jnp.asarray(value, jnp.int32))
+    _, (ts, num) = lax.scan(level_step, init, (ts0, num0, levels))
+    new = EHState(ts=ts, num=num.astype(jnp.int32))
+    # value == 0 leaves the state untouched (expiry stays lazy, matching ref).
+    return jax.tree.map(
+        lambda a, b: jnp.where(jnp.asarray(value) > 0, a, b), new, state)
 
 
 def sum_eh_query(state: SumEHState, t, cfg: SumEHConfig) -> jax.Array:

@@ -18,11 +18,13 @@ import jax
 import jax.numpy as jnp
 
 from . import lsh
+from .util import saturating_add
 
 
 class RACEState(NamedTuple):
     counts: jax.Array   # (L, W) int32
-    n: jax.Array        # () int64 — signed stream size (insertions - deletions)
+    n: jax.Array        # () int32 — signed stream size (insertions - deletions),
+    #                       saturating at INT32_MAX (core.util.saturating_add)
 
 
 def race_init(L: int, W: int) -> RACEState:
@@ -34,16 +36,21 @@ def race_update(state: RACEState, params, x: jax.Array, sign: int = 1) -> RACESt
     codes = lsh.hash_points(params, x)                       # (L,)
     rows = jnp.arange(codes.shape[0])
     counts = state.counts.at[rows, codes].add(jnp.int32(sign))
-    return RACEState(counts=counts, n=state.n + sign)
+    return RACEState(counts=counts, n=saturating_add(state.n, sign))
 
 
 def race_update_batch(state: RACEState, params, xs: jax.Array, sign: int = 1) -> RACEState:
-    """Vectorised batch insert: xs (B, d)."""
+    """Batched turnstile update: xs (B, d), one hash matmul + one histogram.
+
+    Routes through `repro.kernels.ops.race_hist` (Pallas one-hot-compare
+    histogram on TPU, scatter-add oracle on CPU) instead of materialising a
+    (B, L, W) one-hot — counters are bit-identical to B single updates."""
     codes = lsh.hash_points(params, xs)                      # (B, L)
-    L, W = state.counts.shape
-    onehot = jax.nn.one_hot(codes, W, dtype=jnp.int32)       # (B, L, W)
-    counts = state.counts + jnp.int32(sign) * onehot.sum(axis=0)
-    return RACEState(counts=counts, n=state.n + sign * xs.shape[0])
+    from repro.kernels import ops as kernel_ops
+    hist = kernel_ops.race_hist(codes, state.counts.shape[1])
+    counts = state.counts + jnp.int32(sign) * hist
+    return RACEState(counts=counts,
+                     n=saturating_add(state.n, sign * xs.shape[0]))
 
 
 def race_query(state: RACEState, params, q: jax.Array, median_of_means: int = 0) -> jax.Array:

@@ -18,6 +18,17 @@ gather + one distance matmul (`repro.kernels.cand_score`).  The early-exit
 ("stop at 3L") becomes a post-gather priority truncation: we score the same
 <=3L candidates the sequential algorithm would, Lemma 3.2's Markov bound is
 unchanged.
+
+Ingest paths:
+  * ``sann_insert`` / ``sann_insert_stream`` — the per-point reference
+    semantics (Alg. 1 verbatim, one `lax.scan` step per stream element);
+  * ``sann_insert_batch`` — the production batched-update contract: one hash
+    matmul per chunk, keep decisions from the *same* per-point key schedule,
+    slots assigned by a prefix sum over kept points, and the ring-buffer
+    appends realised as a sort-by-(row, code) segment scatter.  The final
+    state is bit-identical to replaying ``sann_insert`` point by point
+    (tests/test_batched_ingest.py), but costs O(1) XLA steps per chunk
+    instead of O(chunk).
 """
 from __future__ import annotations
 
@@ -27,8 +38,10 @@ from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+from jax import lax
 
 from . import lsh, theory
+from .util import saturating_add
 
 
 @dataclasses.dataclass(frozen=True)
@@ -73,9 +86,9 @@ class SANNConfig:
 class SANNState(NamedTuple):
     points: jax.Array       # (capacity, dim) float32
     valid: jax.Array        # (capacity,) bool
-    write_ptr: jax.Array    # () int32 cyclic slot pointer
-    n_seen: jax.Array       # () int64
-    n_stored: jax.Array     # () int64
+    write_ptr: jax.Array    # () int32 slot pointer, kept reduced mod capacity
+    n_seen: jax.Array       # () int32, saturating (see core.util.saturating_add)
+    n_stored: jax.Array     # () int32 — live stored points (== valid.sum())
     tables: jax.Array       # (L, n_buckets, bucket_cap) int32 slot ids, -1 empty
     table_ptr: jax.Array    # (L, n_buckets) int32 cyclic bucket pointers
 
@@ -100,22 +113,33 @@ def sann_insert(state: SANNState, params, x: jax.Array, key: jax.Array,
     """Sample-and-store one stream point (Alg. 1 insert; Fig. 1)."""
     keep = jax.random.bernoulli(key, cfg.keep_prob)
     slot = state.write_ptr % cfg.capacity
+    evict = keep & state.valid[slot]
+    # Recycling a live slot invalidates every table entry still pointing at
+    # it (the evicted point's buckets) — tombstone them, or queries would
+    # score the *new* vector under the *old* point's bucket membership.
+    tables = lax.cond(
+        evict,
+        lambda tb: jnp.where(tb == slot, jnp.int32(-1), tb),
+        lambda tb: tb,
+        state.tables)
+
     points = state.points.at[slot].set(jnp.where(keep, x, state.points[slot]))
     valid = state.valid.at[slot].set(jnp.where(keep, True, state.valid[slot]))
 
     codes = lsh.hash_points(params, x)                          # (L,)
     rows = jnp.arange(cfg.L)
     pos = state.table_ptr[rows, codes] % cfg.bucket_cap
-    old = state.tables[rows, codes, pos]
-    tables = state.tables.at[rows, codes, pos].set(
+    old = tables[rows, codes, pos]
+    tables = tables.at[rows, codes, pos].set(
         jnp.where(keep, slot.astype(jnp.int32), old))
     table_ptr = state.table_ptr.at[rows, codes].add(jnp.where(keep, 1, 0))
 
     return SANNState(
         points=points, valid=valid,
-        write_ptr=state.write_ptr + jnp.where(keep, 1, 0).astype(jnp.int32),
-        n_seen=state.n_seen + 1,
-        n_stored=state.n_stored + jnp.where(keep, 1, 0),
+        write_ptr=(state.write_ptr + jnp.where(keep, 1, 0).astype(jnp.int32))
+        % cfg.capacity,
+        n_seen=saturating_add(state.n_seen, 1),
+        n_stored=state.n_stored + jnp.where(keep & ~evict, 1, 0),
         tables=tables, table_ptr=table_ptr,
     )
 
@@ -129,6 +153,134 @@ def sann_insert_stream(state: SANNState, params, xs: jax.Array, key: jax.Array,
         return sann_insert(s, params, x, k, cfg), None
 
     state, _ = jax.lax.scan(step, state, (xs, keys))
+    return state
+
+
+def sann_insert_batch(state: SANNState, params, xs: jax.Array, key: jax.Array,
+                      cfg: SANNConfig) -> SANNState:
+    """Batched ingest of a whole chunk ``xs (B, d)`` in O(1) XLA steps.
+
+    Bit-identical to ``sann_insert_stream`` under the same key (the chunk
+    shares the per-point ``jax.random.split`` schedule):
+
+      1. one Bernoulli draw per point from the split keys → ``keep`` mask;
+      2. slots via an exclusive prefix sum over kept points (the sequential
+         write pointer, vectorised), last-writer-wins when the ring wraps
+         within the chunk;
+      3. stale table entries pointing at recycled slots are tombstoned in
+         one masked pass (the batched form of the per-insert eviction);
+      4. ring-buffer appends: flatten (point, row) pairs, sort by
+         (row, code) so each bucket's appends are a contiguous run in
+         stream order, place rank r at ring position (ptr + r) % cap, and
+         resolve wrap collisions by max-rank (the last sequential writer).
+    """
+    B = xs.shape[0]
+    cap = cfg.capacity
+    keys = jax.random.split(key, B)
+    keep = jax.vmap(lambda k: jax.random.bernoulli(k, cfg.keep_prob))(keys)
+
+    # --- slot assignment: prefix sum over kept points -----------------------
+    kept_rank = (jnp.cumsum(keep) - keep).astype(jnp.int32)  # exclusive
+    slot = (state.write_ptr + kept_rank) % cap               # (B,)
+    n_kept = keep.sum().astype(jnp.int32)
+    # Last writer per slot wins (matters only when the chunk laps the ring);
+    # ranks assign slots round-robin, so the shadowed writers are exactly
+    # the kept points more than one full lap from the end.
+    winner = keep & (kept_rank >= n_kept - cap)
+    win_slot = jnp.where(winner, slot, cap)                  # OOB → dropped
+
+    points = state.points.at[win_slot].set(xs, mode="drop")
+    # Slots recycled this chunk form the ring interval
+    # [write_ptr + max(0, n_kept - cap), write_ptr + n_kept).
+    ring_off = (jnp.arange(cap, dtype=jnp.int32) - state.write_ptr) % cap
+    overwritten = ring_off < n_kept
+    valid = state.valid | overwritten
+
+    # --- tombstone stale references to every slot recycled this chunk ------
+    stale = (state.tables >= 0) & overwritten[jnp.maximum(state.tables, 0)]
+    tables = jnp.where(stale, jnp.int32(-1), state.tables)
+
+    # --- ring-buffer appends: sort-by-(row, code) segment scatter ----------
+    codes = lsh.hash_points(params, xs)                      # (B, L)
+    l_idx = jnp.broadcast_to(jnp.arange(cfg.L, dtype=jnp.int32), (B, cfg.L))
+    bucket_key = l_idx * cfg.n_buckets + codes               # (B, L)
+    n_flat = B * cfg.L
+    n_keys = cfg.L * cfg.n_buckets
+    flat_key = bucket_key.reshape(-1)
+    idx = jnp.arange(B, dtype=jnp.int32)
+    flat_b = jnp.broadcast_to(idx[:, None], (B, cfg.L)).reshape(-1)
+    kept_flat = jnp.broadcast_to(keep[:, None], (B, cfg.L)).reshape(-1)
+    sentinel = jnp.int32(n_keys)
+    masked_key = jnp.where(kept_flat, flat_key, sentinel)
+    if (n_keys + 1) * B < 2**31:
+        # Pack (bucket key, point id) into one int32 so XLA runs a plain
+        # single-operand sort — several times faster on CPU than the
+        # variadic (key, iota) sort argsort lowers to.
+        packed = jnp.sort(masked_key * B + flat_b)
+        s_key = packed // B
+        s_b = packed % B
+        s_kept = s_key < sentinel
+    else:  # key space too large to pack — fall back to a stable argsort
+        order = jnp.argsort(masked_key, stable=True)
+        s_key = masked_key[order]
+        s_b = flat_b[order]
+        s_kept = kept_flat[order]
+    pos_idx = jnp.arange(n_flat, dtype=jnp.int32)
+    seg_start = jnp.concatenate(
+        [jnp.ones((1,), bool), s_key[1:] != s_key[:-1]])
+    rank = pos_idx - lax.cummax(jnp.where(seg_start, pos_idx, 0))
+    s_l = jnp.minimum(s_key // cfg.n_buckets, cfg.L - 1)     # clamp sentinel
+    s_c = s_key % cfg.n_buckets
+    ring_pos = (state.table_ptr[s_l, s_c] + rank) % cfg.bucket_cap
+    flat_target = (s_l * cfg.n_buckets + s_c) * cfg.bucket_cap + ring_pos
+    tsize = jnp.int32(tables.size)
+    # Per-bucket append counts (also the table_ptr advance).  Within a
+    # bucket the appends at ring positions r, r+cap, ... shadow each other;
+    # the survivors are the last `bucket_cap` ranks.
+    counts = jnp.zeros((cfg.L, cfg.n_buckets), jnp.int32).at[
+        l_idx, codes].add(kept_flat.reshape(B, cfg.L).astype(jnp.int32))
+    seg_total = counts[s_l, s_c]
+    entry_win = s_kept & (rank >= seg_total - cfg.bucket_cap)
+    # A loser point's entries are appended then tombstoned by the later
+    # overwrite of its slot — net effect: the ring cell holds -1.
+    val = jnp.where(winner[s_b], slot[s_b], jnp.int32(-1))
+    tables = tables.reshape(-1).at[
+        jnp.where(entry_win, flat_target, tsize)].set(
+        val, mode="drop").reshape(tables.shape)
+    table_ptr = state.table_ptr + counts
+
+    newly = winner & ~state.valid[jnp.where(winner, slot, 0)]
+    return SANNState(
+        points=points, valid=valid,
+        write_ptr=(state.write_ptr + n_kept) % cap,
+        n_seen=saturating_add(state.n_seen, B),
+        n_stored=state.n_stored + newly.sum(),
+        tables=tables, table_ptr=table_ptr,
+    )
+
+
+def sann_insert_chunked(state: SANNState, params, xs: jax.Array,
+                        key: jax.Array, cfg: SANNConfig,
+                        chunk: int = 1024) -> SANNState:
+    """Stream ``xs (T, d)`` through ``sann_insert_batch`` in fixed chunks.
+
+    Equivalent to one big ``sann_insert_batch`` call whose key is split per
+    chunk; use when T is too large to hash in one matmul.
+    """
+    T = xs.shape[0]
+    n_full = T // chunk
+    n_keys = n_full + (1 if T % chunk else 0)
+    ckeys = jax.random.split(key, max(n_keys, 1))
+    if n_full:
+        def step(s, ck):
+            c, k = ck
+            return sann_insert_batch(s, params, c, k, cfg), None
+        state, _ = lax.scan(
+            step, state,
+            (xs[: n_full * chunk].reshape(n_full, chunk, -1), ckeys[:n_full]))
+    if T % chunk:
+        state = sann_insert_batch(state, params, xs[n_full * chunk:],
+                                  ckeys[n_full], cfg)
     return state
 
 

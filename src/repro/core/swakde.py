@@ -13,6 +13,18 @@ State layout (DESIGN.md §5.3): the EH grid is a single pytree of dense
 arrays ``ts: (L, W, levels, slots)``, ``num: (L, W, levels)``; one stream
 step touches L cells (one per row) via gather → vmapped eh_add → scatter.
 Batch updates (Corollary 4.2) use SumEH cells instead.
+
+Ingest paths:
+  * ``swakde_update`` / ``swakde_stream`` — per-point reference semantics
+    (one `lax.scan` step per stream element, each step scattering into the
+    full EH grid);
+  * ``swakde_update_chunk`` / ``swakde_stream_batched`` — the batched-update
+    contract: one hash matmul per chunk, then per row the chunk's codes are
+    sorted into per-cell segments and each hit cell replays its own adds
+    (own timestamps, stream order) through vmapped EH cascades.  The grid is
+    read and written **once per chunk** instead of once per point, and the
+    result is bit-identical to the per-point path
+    (tests/test_batched_ingest.py).
 """
 from __future__ import annotations
 
@@ -21,12 +33,14 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+from jax import lax
 
 from . import lsh
 from .eh import (
     EHConfig, EHState, eh_add, eh_init, eh_query,
     SumEHConfig, SumEHState, sum_eh_add, sum_eh_init, sum_eh_query,
 )
+from .util import saturating_add
 
 
 @dataclasses.dataclass(frozen=True)
@@ -46,9 +60,9 @@ class SWAKDEConfig:
 
 
 class SWAKDEState(NamedTuple):
-    ts: jax.Array     # (L, W, levels, slots) int64
+    ts: jax.Array     # (L, W, levels, slots) int32
     num: jax.Array    # (L, W, levels) int32
-    t: jax.Array      # () int64 current timestep
+    t: jax.Array      # () int32 current timestep, saturating (core.util)
 
 
 def swakde_init(cfg: SWAKDEConfig) -> SWAKDEState:
@@ -70,17 +84,94 @@ def swakde_update(state: SWAKDEState, params, x: jax.Array, cfg: SWAKDEConfig) -
     return SWAKDEState(
         ts=state.ts.at[rows, codes].set(new_cell.ts),
         num=state.num.at[rows, codes].set(new_cell.num),
-        t=state.t + 1,
+        t=saturating_add(state.t, 1),
     )
 
 
 def swakde_stream(state: SWAKDEState, params, xs: jax.Array, cfg: SWAKDEConfig) -> SWAKDEState:
-    """Scan a stream of points (T, d) through the sketch."""
+    """Scan a stream of points (T, d) through the sketch, one step per point."""
 
     def step(s, x):
         return swakde_update(s, params, x, cfg), None
 
     state, _ = jax.lax.scan(step, state, xs)
+    return state
+
+
+def swakde_update_chunk(state: SWAKDEState, params, xs: jax.Array,
+                        cfg: SWAKDEConfig) -> SWAKDEState:
+    """Consume a whole chunk ``xs (C, d)`` in one step, bit-identical to C
+    calls of ``swakde_update``.
+
+    Per row: sort the chunk's codes so each hit cell's points form a
+    contiguous run (stream order preserved by the stable sort), gather the
+    ≤ min(C, W) hit cells once, replay each cell's adds at the points' own
+    timestamps via vmapped ``eh_add`` (a while-loop bounded by the largest
+    per-cell hit count), and scatter the cells back.  The (L, W, levels,
+    slots) grid is traversed once per chunk instead of once per point.
+    """
+    eh = cfg.eh_config()
+    C = xs.shape[0]
+    SW = min(C, cfg.W)                       # max distinct cells hit per row
+    codes = lsh.hash_points(params, xs)      # (C, L)
+    t0 = state.t
+    pos = jnp.arange(C, dtype=jnp.int32)
+
+    def row_update(codes_l, ts_row, num_row):
+        # codes_l (C,), ts_row (W, levels, slots), num_row (W, levels)
+        order = jnp.argsort(codes_l, stable=True)
+        sc = codes_l[order]
+        # per-add timestamps; saturating like the per-point path's t counter
+        add_ts = saturating_add(t0, order.astype(jnp.int32))
+        is_start = jnp.concatenate([jnp.ones((1,), bool), sc[1:] != sc[:-1]])
+        seg_id = jnp.cumsum(is_start).astype(jnp.int32) - 1   # (C,) < SW
+        seg_len = jnp.zeros((SW,), jnp.int32).at[seg_id].add(1, mode="drop")
+        seg_code = jnp.full((SW,), cfg.W, jnp.int32).at[seg_id].set(
+            sc, mode="drop")
+        seg_first = jnp.full((SW,), C, jnp.int32).at[seg_id].min(
+            pos, mode="drop")
+        gcode = jnp.minimum(seg_code, cfg.W - 1)     # clamp padding segments
+        cell_ts = ts_row[gcode]                      # (SW, levels, slots)
+        cell_num = num_row[gcode]                    # (SW, levels)
+        max_len = seg_len.max()
+
+        def body(carry):
+            j, cts, cnum = carry
+            tstamp = add_ts[jnp.minimum(seg_first + j, C - 1)]
+            act = j < seg_len
+
+            def one(ts_i, num_i, t_i, a_i):
+                ns = eh_add(EHState(ts=ts_i, num=num_i), t_i, eh)
+                return (jnp.where(a_i, ns.ts, ts_i),
+                        jnp.where(a_i, ns.num, num_i))
+
+            cts, cnum = jax.vmap(one)(cts, cnum, tstamp, act)
+            return j + 1, cts, cnum
+
+        _, cell_ts, cell_num = lax.while_loop(
+            lambda c: c[0] < max_len, body,
+            (jnp.int32(0), cell_ts, cell_num))
+        ts_row = ts_row.at[seg_code].set(cell_ts, mode="drop")
+        num_row = num_row.at[seg_code].set(cell_num, mode="drop")
+        return ts_row, num_row
+
+    ts, num = jax.vmap(row_update)(codes.T, state.ts, state.num)
+    return SWAKDEState(ts=ts, num=num, t=saturating_add(state.t, C))
+
+
+def swakde_stream_batched(state: SWAKDEState, params, xs: jax.Array,
+                          cfg: SWAKDEConfig, chunk: int = 1024) -> SWAKDEState:
+    """Stream (T, d) points through ``swakde_update_chunk`` in fixed chunks —
+    same final state as ``swakde_stream``, O(T / chunk) XLA steps."""
+    T = xs.shape[0]
+    n_full = T // chunk
+    if n_full:
+        def step(s, c):
+            return swakde_update_chunk(s, params, c, cfg), None
+        state, _ = lax.scan(
+            step, state, xs[: n_full * chunk].reshape(n_full, chunk, -1))
+    if T % chunk:
+        state = swakde_update_chunk(state, params, xs[n_full * chunk:], cfg)
     return state
 
 
@@ -148,14 +239,15 @@ def batch_swakde_update(
     number of batch elements hashing to it (0..R)."""
     eh = cfg.eh_config()
     codes = lsh.hash_points(params, batch)                # (R, L)
-    incr = jax.nn.one_hot(codes, cfg.W, dtype=jnp.int32).sum(0)  # (L, W)
+    from repro.kernels import ops as kernel_ops
+    incr = kernel_ops.race_hist(codes, cfg.W)             # (L, W)
 
     def upd_cell(ts, num, v):
         s = sum_eh_add(SumEHState(ts, num), state.t, v, eh)
         return s.ts, s.num
 
     ts, num = jax.vmap(jax.vmap(upd_cell))(state.ts, state.num, incr)
-    return BatchSWAKDEState(ts=ts, num=num, t=state.t + 1)
+    return BatchSWAKDEState(ts=ts, num=num, t=saturating_add(state.t, 1))
 
 
 def batch_swakde_query(

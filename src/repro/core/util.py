@@ -1,0 +1,21 @@
+"""Small shared helpers for the sketch state machines."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_INT32_MAX = jnp.int32(2**31 - 1)
+
+
+def saturating_add(counter: jax.Array, delta) -> jax.Array:
+    """int32 counter + delta, clamped at INT32_MAX instead of wrapping.
+
+    Stream counters (`n_seen`, `t`, `n`) are int32 (int64 needs
+    jax_enable_x64); streams longer than 2^31 steps would silently wrap
+    negative and corrupt window/normalisation arithmetic downstream, so we
+    saturate: the counters stop being exact but stay monotone and positive.
+    """
+    counter = counter.astype(jnp.int32)
+    delta = jnp.asarray(delta, jnp.int32)
+    overflow = (delta > 0) & (counter > _INT32_MAX - delta)
+    return jnp.where(overflow, _INT32_MAX, counter + delta)

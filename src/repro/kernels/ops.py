@@ -40,6 +40,23 @@ def srp_hash(x: jax.Array, proj: jax.Array, mix: jax.Array, n_buckets: int) -> j
 def race_hist(codes: jax.Array, W: int) -> jax.Array:
     if _use_pallas():
         return _ru.race_hist(codes, W, interpret=_interpret())
+    if W <= 128:
+        # CPU mirror of the TPU kernel's one-hot compare + reduce (XLA CPU
+        # scatters cost ~60ns/element; a fused compare-reduce over a small
+        # W is several times faster).  Chunked over the batch so the
+        # broadcast tile stays cache-resident.
+        B, L = codes.shape
+        cb = 128
+        pad = (-B) % cb
+        padded = jnp.pad(codes, ((0, pad), (0, 0)), constant_values=-1)
+        iota = jnp.arange(W, dtype=codes.dtype)
+
+        def step(acc, blk):
+            return acc + (blk[:, :, None] == iota).sum(0, dtype=jnp.int32), None
+
+        acc, _ = jax.lax.scan(step, jnp.zeros((L, W), jnp.int32),
+                              padded.reshape(-1, cb, L))
+        return acc
     return ref.race_update_ref(jnp.zeros((codes.shape[1], W), jnp.int32), codes)
 
 

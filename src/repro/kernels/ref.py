@@ -22,10 +22,13 @@ def srp_hash_ref(x: jax.Array, proj: jax.Array, mix: jax.Array, n_buckets: int) 
 
 
 def race_update_ref(counts: jax.Array, codes: jax.Array, sign: int = 1) -> jax.Array:
-    """counts (L, W), codes (B, L) → counts + sign * histogram."""
-    L, W = counts.shape
-    onehot = jax.nn.one_hot(codes, W, dtype=jnp.int32)         # (B, L, W)
-    return counts + jnp.int32(sign) * onehot.sum(axis=0)
+    """counts (L, W), codes (B, L) → counts + sign * histogram.
+
+    Scatter-add (deterministic for integer counters) rather than a
+    materialised (B, L, W) one-hot: O(B*L) memory instead of O(B*L*W)."""
+    L, _ = counts.shape
+    rows = jnp.broadcast_to(jnp.arange(L, dtype=codes.dtype), codes.shape)
+    return counts.at[rows, codes].add(jnp.int32(sign))
 
 
 def cand_score_ref(q: jax.Array, cands: jax.Array) -> jax.Array:

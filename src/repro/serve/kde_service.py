@@ -1,0 +1,96 @@
+"""SW-AKDE density service: streaming sliding-window KDE with batched
+ingest and batched queries (paper §4).
+
+The serving-side integration of the paper's second sketch, mirroring
+`repro.serve.retrieval.RetrievalService`: points arrive as a stream of
+embeddings, the service maintains the sliding-window EH grid via the
+chunked batched-update path (`core.swakde.swakde_update_chunk` — one hash
+matmul + one grid traversal per chunk), and answers batched density
+queries — e.g. drift monitoring over a decode-time activation stream, or
+novelty scoring of incoming requests.
+
+This is a thin, stateful orchestration layer over repro.core.swakde; all
+math lives there (and is what the paper's Theorem 4.1 guarantee covers).
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import lsh, swakde
+
+
+@dataclasses.dataclass
+class KDEServiceConfig:
+    dim: int
+    L: int = 16              # sketch rows (repetitions)
+    W: int = 128             # LSH range after rehash
+    window: int = 10_000     # sliding-window length N (stream steps)
+    eh_eps: float = 0.1      # per-cell EH relative error eps'
+    hash_family: str = "srp"  # "srp" (angular) | "pstable" (Euclidean)
+    k: int = 2               # concatenation power p
+    w: float = 4.0           # p-stable bucket width (pstable only)
+    seed: int = 0
+    # Batched-ingest chunk: one swakde_update_chunk call per chunk; each
+    # distinct partial-chunk size triggers one extra jit trace.
+    ingest_chunk: int = 1024
+
+
+class KDEService:
+    """Thread-safe streaming sliding-window KDE with batched queries."""
+
+    def __init__(self, cfg: KDEServiceConfig):
+        self.cfg = cfg
+        self.sketch_cfg = swakde.SWAKDEConfig(
+            L=cfg.L, W=cfg.W, window=cfg.window, eh_eps=cfg.eh_eps)
+        key = jax.random.PRNGKey(cfg.seed)
+        if cfg.hash_family == "srp":
+            self.params = lsh.init_srp(key, cfg.dim, L=cfg.L, k=cfg.k,
+                                       n_buckets=cfg.W)
+        elif cfg.hash_family == "pstable":
+            self.params = lsh.init_pstable(key, cfg.dim, L=cfg.L, k=cfg.k,
+                                           w=cfg.w, n_buckets=cfg.W)
+        else:
+            raise ValueError(cfg.hash_family)
+        self.state = swakde.swakde_init(self.sketch_cfg)
+        self._lock = threading.Lock()
+        self._update = jax.jit(
+            lambda st, xs: swakde.swakde_update_chunk(
+                st, self.params, xs, self.sketch_cfg))
+        self._query = jax.jit(
+            lambda st, qs: swakde.swakde_query_batch(
+                st, self.params, qs, self.sketch_cfg))
+
+    def ingest(self, points: np.ndarray) -> None:
+        """Stream a block of points through the chunked batched update."""
+        xs = jnp.asarray(points, jnp.float32)
+        chunk = self.cfg.ingest_chunk
+        with self._lock:
+            for i in range(0, xs.shape[0], chunk):
+                self.state = self._update(self.state, xs[i:i + chunk])
+
+    def query(self, queries: np.ndarray) -> np.ndarray:
+        """Batched unnormalised window-density estimates Ŷ (Thm 4.1)."""
+        out = self._query(self.state, jnp.asarray(queries, jnp.float32))
+        return np.asarray(out)
+
+    def density(self, queries: np.ndarray) -> np.ndarray:
+        """Normalised sliding-window density: Ŷ / min(t, N)."""
+        with self._lock:  # snapshot state + t together vs concurrent ingest
+            state = self.state
+        denom = max(min(int(state.t), self.cfg.window), 1)
+        out = self._query(state, jnp.asarray(queries, jnp.float32))
+        return np.asarray(out) / float(denom)
+
+    @property
+    def steps(self) -> int:
+        """Stream steps consumed so far."""
+        return int(self.state.t)
+
+    @property
+    def sketch_bytes(self) -> int:
+        return swakde.swakde_bytes(self.sketch_cfg)

@@ -34,10 +34,14 @@ class RetrievalConfig:
     k: Optional[int] = 8
     bucket_cap: int = 16
     seed: int = 0
+    # Batched-ingest chunk: each chunk is one hash matmul + one segment
+    # scatter (core.sann.sann_insert_batch).  Larger chunks amortise more;
+    # each distinct partial-chunk size triggers one extra jit trace.
+    ingest_chunk: int = 1024
 
 
 class RetrievalService:
-    """Thread-safe streaming ANN index with batched queries."""
+    """Thread-safe streaming ANN index with batched ingest and queries."""
 
     def __init__(self, cfg: RetrievalConfig):
         base = sann.SANNConfig(
@@ -45,10 +49,11 @@ class RetrievalService:
             w=cfg.w, L=cfg.L, k=cfg.k, bucket_cap=cfg.bucket_cap)
         self.cfg, self.params, self.state = sann.sann_init(
             base, jax.random.PRNGKey(cfg.seed))
+        self._chunk = cfg.ingest_chunk
         self._key = jax.random.PRNGKey(cfg.seed + 1)
         self._lock = threading.Lock()
         self._insert = jax.jit(
-            lambda st, xs, key: sann.sann_insert_stream(
+            lambda st, xs, key: sann.sann_insert_batch(
                 st, self.params, xs, key, self.cfg))
         self._query = jax.jit(
             lambda st, qs: sann.sann_query_batch(st, self.params, qs, self.cfg))
@@ -56,10 +61,14 @@ class RetrievalService:
             lambda st, x: sann.sann_delete(st, self.params, x, self.cfg))
 
     def ingest(self, embeddings: np.ndarray) -> None:
+        """Stream a block of embeddings through the batched insert path,
+        one `sann_insert_batch` call per `ingest_chunk` rows."""
         xs = jnp.asarray(embeddings, jnp.float32)
         with self._lock:
-            self._key, sub = jax.random.split(self._key)
-            self.state = self._insert(self.state, xs, sub)
+            for i in range(0, xs.shape[0], self._chunk):
+                self._key, sub = jax.random.split(self._key)
+                self.state = self._insert(self.state, xs[i:i + self._chunk],
+                                          sub)
 
     def delete(self, embedding: np.ndarray) -> None:
         """Turnstile deletion (paper §3.4)."""
