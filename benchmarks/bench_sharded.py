@@ -1,0 +1,154 @@
+"""Sharded ingest/query scaling benchmark (repro.parallel.sketch_sharding).
+
+Measures batched-ingest and batched-query throughput for the three sketches
+at shard counts 1, 2, 4, 8 (clipped to the visible device count) and
+reports **per-shard** points/sec alongside the total.  On real multi-chip
+hardware the rows/tables live on different chips and the total scales; on a
+CPU forced to 8 virtual devices (how CI runs this) the devices share the
+same cores, so the interesting output is that sharding *doesn't lose*
+throughput — the combine overhead (all-gather of per-row reads) is visible
+directly as pps(sharded)/pps(1).
+
+Standalone (forces 8 host devices before jax initialises):
+
+    PYTHONPATH=src python -m benchmarks.bench_sharded
+
+or through the harness (uses however many devices are already visible):
+
+    PYTHONPATH=src python -m benchmarks.run --only sharded
+
+Emits ``name,us_per_call,derived`` CSV rows (benchmarks.run contract);
+``derived`` carries pps, per-shard pps, and the ratio vs the 1-shard run.
+"""
+from __future__ import annotations
+
+import os
+
+if __name__ == "__main__":  # must precede any jax import in this process
+    if "xla_force_host_platform_device_count" not in os.environ.get(
+            "XLA_FLAGS", ""):
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + " --xla_force_host_platform_device_count=8").strip()
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import lsh, race, sann, swakde
+from repro.parallel import sketch_sharding as ss
+
+from .common import syn_ppp, timeit
+
+N_POINTS = 4096
+N_QUERIES = 256
+
+
+def _shard_counts():
+    n_dev = len(jax.devices())
+    return [s for s in (1, 2, 4, 8) if s <= n_dev]
+
+
+def _pps(us: float, n: int = N_POINTS) -> float:
+    return n * 1e6 / us
+
+
+def _ctx(shards: int):
+    return ss.make_sketch_ctx(ss.make_sketch_mesh(shards)
+                              if shards > 1 else None)
+
+
+def bench_race(rows):
+    d, L, W = 32, 32, 64
+    params = lsh.init_srp(jax.random.PRNGKey(0), d, L=L, k=2, n_buckets=W)
+    xs = jnp.asarray(syn_ppp(N_POINTS, d, seed=1))
+    qs = jnp.asarray(syn_ppp(N_QUERIES, d, seed=2))
+    base_i = base_q = None
+    for shards in _shard_counts():
+        ctx = _ctx(shards)
+        st, p = ss.shard_race(race.race_init(L, W), params, ctx) \
+            if ctx.mesh is not None else (race.race_init(L, W), params)
+        ing = jax.jit(lambda s, x: ss.sharded_race_update_batch(s, p, x, ctx))
+        us = timeit(ing, st, xs, repeats=5)
+        base_i = base_i or us
+        rows.append((f"sharded.race.ingest.s{shards}", us,
+                     f"pps={_pps(us):.0f};per_shard={_pps(us)/shards:.0f};"
+                     f"vs1={base_i/us:.2f}"))
+        qry = jax.jit(lambda s, q: ss.sharded_race_query_batch(s, p, q, ctx))
+        us = timeit(qry, ing(st, xs), qs, repeats=5)
+        base_q = base_q or us
+        rows.append((f"sharded.race.query.s{shards}", us,
+                     f"qps={_pps(us, N_QUERIES):.0f};vs1={base_q/us:.2f}"))
+
+
+def bench_swakde(rows):
+    d, L, W = 16, 16, 64
+    cfg = swakde.SWAKDEConfig(L=L, W=W, window=2048, eh_eps=0.2)
+    params = lsh.init_srp(jax.random.PRNGKey(3), d, L=L, k=4, n_buckets=W)
+    xs = jnp.asarray(syn_ppp(1024, d, seed=4))
+    qs = jnp.asarray(syn_ppp(N_QUERIES, d, seed=5))
+    base_i = base_q = None
+    for shards in _shard_counts():
+        ctx = _ctx(shards)
+        st0 = swakde.swakde_init(cfg)
+        if ctx.mesh is not None:
+            st0, p = ss.shard_swakde(st0, params, ctx)
+        else:
+            p = params
+        ing = jax.jit(lambda s, x: ss.sharded_swakde_update_chunk(
+            s, p, x, cfg, ctx))
+        us = timeit(ing, st0, xs, repeats=5)
+        base_i = base_i or us
+        rows.append((f"sharded.swakde.ingest.s{shards}", us,
+                     f"pps={_pps(us, 1024):.0f};"
+                     f"per_shard={_pps(us, 1024)/shards:.0f};"
+                     f"vs1={base_i/us:.2f}"))
+        qry = jax.jit(lambda s, q: ss.sharded_swakde_query_batch(
+            s, p, q, cfg, ctx))
+        us = timeit(qry, ing(st0, xs), qs, repeats=5)
+        base_q = base_q or us
+        rows.append((f"sharded.swakde.query.s{shards}", us,
+                     f"qps={_pps(us, N_QUERIES):.0f};vs1={base_q/us:.2f}"))
+
+
+def bench_sann(rows):
+    d = 48
+    cfg = sann.SANNConfig(dim=d, n_max=N_POINTS, eta=0.3, r=0.5, c=2.0,
+                          w=1.0, L=16, k=4, bucket_cap=16)
+    cfg, params, st0 = sann.sann_init(cfg, jax.random.PRNGKey(6))
+    xs = jnp.asarray(syn_ppp(N_POINTS, d, seed=7))
+    qs = jnp.asarray(syn_ppp(N_QUERIES, d, seed=8))
+    key = jax.random.PRNGKey(9)
+    base_i = base_q = None
+    for shards in _shard_counts():
+        ctx = _ctx(shards)
+        if ctx.mesh is not None:
+            st, p = ss.shard_sann(st0, params, ctx)
+        else:
+            st, p = st0, params
+        ing = jax.jit(lambda s, x, k: ss.sharded_sann_insert_batch(
+            s, p, x, k, cfg, ctx))
+        us = timeit(ing, st, xs, key, repeats=5)
+        base_i = base_i or us
+        rows.append((f"sharded.sann.ingest.s{shards}", us,
+                     f"pps={_pps(us):.0f};per_shard={_pps(us)/shards:.0f};"
+                     f"vs1={base_i/us:.2f}"))
+        qry = jax.jit(lambda s, q: ss.sharded_sann_query_batch(
+            s, p, q, cfg, ctx))
+        us = timeit(qry, ing(st, xs, key), qs, repeats=5)
+        base_q = base_q or us
+        rows.append((f"sharded.sann.query.s{shards}", us,
+                     f"qps={_pps(us, N_QUERIES):.0f};vs1={base_q/us:.2f}"))
+
+
+def run(rows):
+    bench_race(rows)
+    bench_swakde(rows)
+    bench_sann(rows)
+
+
+if __name__ == "__main__":
+    rows: list = []
+    run(rows)
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.2f},{derived}")

@@ -1,7 +1,8 @@
 """Benchmark harness entry point: one section per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV (assignment contract).
-Usage: PYTHONPATH=src python -m benchmarks.run [--only ann|kde|kernels|ingest]
+Usage: PYTHONPATH=src python -m benchmarks.run
+       [--only ann|kde|kernels|ingest|sharded]
 """
 from __future__ import annotations
 
@@ -12,13 +13,16 @@ import sys
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    choices=[None, "ann", "kde", "kernels", "ingest"])
+                    choices=[None, "ann", "kde", "kernels", "ingest",
+                             "sharded"])
     args = ap.parse_args()
 
-    from . import bench_ann, bench_ingest, bench_kde, bench_kernels
+    from . import (bench_ann, bench_ingest, bench_kde, bench_kernels,
+                   bench_sharded)
     rows: list[tuple] = []
     suites = {"ann": bench_ann.run, "kde": bench_kde.run,
-              "kernels": bench_kernels.run, "ingest": bench_ingest.run}
+              "kernels": bench_kernels.run, "ingest": bench_ingest.run,
+              "sharded": bench_sharded.run}
     for name, fn in suites.items():
         if args.only and args.only != name:
             continue

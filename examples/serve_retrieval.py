@@ -2,26 +2,56 @@
 an S-ANN retrieval service indexes the stream of its hidden states — the
 paper's sketch as first-class serving infrastructure.
 
+The service ingests through the chunked batched path (one hash matmul + one
+segment scatter per ``ingest_chunk`` rows — `core.sann.sann_insert_batch`):
+a synthetic document corpus is streamed in first (several chunks), then the
+decode loop streams its per-step states into the same index.
+
+``--num-shards N`` demos the sharded service (`repro.parallel
+.sketch_sharding`): the L hash tables are split across N devices — on a
+CPU-only box the devices are virtual (forced via XLA_FLAGS before jax
+initialises), and results are bit-identical to the single-device service.
+
 Run: PYTHONPATH=src python examples/serve_retrieval.py [--steps 24]
+     PYTHONPATH=src python examples/serve_retrieval.py --num-shards 4
 """
 import argparse
+import os
 import time
 
-import jax
-import jax.numpy as jnp
-import numpy as np
 
-from repro.configs import registry
-from repro.models import model as model_lib
-from repro.serve import kv_cache, serve_step as serve_lib
-from repro.serve.retrieval import RetrievalConfig, RetrievalService
-
-
-def main():
+def parse_args():
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=24)
     ap.add_argument("--batch", type=int, default=8)
-    args = ap.parse_args()
+    ap.add_argument("--corpus", type=int, default=3000,
+                    help="synthetic documents pre-ingested in chunks")
+    ap.add_argument("--ingest-chunk", type=int, default=512)
+    ap.add_argument("--num-shards", type=int, default=0,
+                    help="shard the L hash tables across this many devices "
+                         "(0/1 = single-device)")
+    return ap.parse_args()
+
+
+def main():
+    args = parse_args()
+    if args.num_shards > 1:
+        # must be set before jax initialises its backends; append to any
+        # pre-existing XLA_FLAGS rather than losing either side
+        existing = os.environ.get("XLA_FLAGS", "")
+        if "xla_force_host_platform_device_count" not in existing:
+            os.environ["XLA_FLAGS"] = (
+                existing + " --xla_force_host_platform_device_count="
+                f"{args.num_shards}").strip()
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs import registry
+    from repro.models import model as model_lib
+    from repro.serve import kv_cache, serve_step as serve_lib
+    from repro.serve.retrieval import RetrievalConfig, RetrievalService
 
     cfg = registry.get_smoke_config("qwen3-4b")
     params = model_lib.init_model(cfg, jax.random.PRNGKey(0))
@@ -29,8 +59,25 @@ def main():
     cache = kv_cache.init_cache(cfg, B=B, s_max=S_max)
     step = jax.jit(serve_lib.make_serve_step(cfg))
 
-    retr = RetrievalService(RetrievalConfig(dim=cfg.d_model, n_max=10_000,
-                                            eta=0.3, r=0.35, c=2.0))
+    retr = RetrievalService(RetrievalConfig(
+        dim=cfg.d_model, n_max=10_000, eta=0.3, r=0.35, c=2.0,
+        ingest_chunk=args.ingest_chunk, num_shards=args.num_shards))
+    print(f"retrieval service: {retr.num_shards} shard(s), "
+          f"ingest_chunk={args.ingest_chunk}")
+
+    # Pre-ingest a document corpus through the chunked batched path:
+    # ceil(corpus / ingest_chunk) sann_insert_batch calls, one hash matmul
+    # each — the serving-side bulk-load pattern.
+    rng = np.random.default_rng(7)
+    corpus = rng.normal(0, 1, (args.corpus, cfg.d_model)).astype(np.float32)
+    corpus /= np.linalg.norm(corpus, axis=1, keepdims=True) + 1e-6
+    t0 = time.time()
+    retr.ingest(corpus)
+    jax.block_until_ready(retr.state)   # ingest dispatches asynchronously
+    dt = time.time() - t0
+    print(f"bulk ingest: {args.corpus} docs in "
+          f"{-(-args.corpus // args.ingest_chunk)} chunks "
+          f"({args.corpus / dt:.0f} docs/s), stored={retr.stored}")
 
     tokens = jax.random.randint(jax.random.PRNGKey(1), (B, 1), 0, cfg.vocab)
     t0 = time.time()
@@ -50,8 +97,10 @@ def main():
 
     # batched queries against the decode-time stream (Corollary 3.2)
     res = retr.query(emb)
-    print(f"batched query: found={np.asarray(res.found).mean():.2f} "
-          f"mean_dist={np.asarray(res.distance)[np.asarray(res.found)].mean():.3f}")
+    found = np.asarray(res.found)
+    mean_d = (np.asarray(res.distance)[found].mean()
+              if found.any() else float("nan"))
+    print(f"batched query: found={found.mean():.2f} mean_dist={mean_d:.3f}")
 
 
 if __name__ == "__main__":

@@ -131,6 +131,60 @@ def eh_query(state: EHState, t: jax.Array, cfg: EHConfig) -> jax.Array:
     return jnp.maximum(est, 0).astype(jnp.float32)
 
 
+def eh_merge(a: EHState, b: EHState, t: jax.Array, cfg: EHConfig) -> EHState:
+    """Merge two EHs over disjoint sub-streams sharing one clock (mergeable-
+    summaries EH merge; the SW-AKDE multi-worker combine).
+
+    Both inputs are expired at ``t``, then per level (bottom-up) the union
+    of A's, B's and the carried-up buckets is sorted newest-first and the
+    DGIM invariant is restored by pairing *oldest* buckets: each pair
+    becomes one bucket at the next level stamped with the pair's newer
+    timestamp — exactly the `eh_add` cascade rule, applied to a multiset.
+    Total bucket mass is preserved exactly (modulo expiry and the top-level
+    capacity clamp, which only triggers when the merged in-window mass
+    exceeds the 4N headroom the levels are sized for).
+
+    Properties (docs/DESIGN.md §8.3): commutative bit-exactly (the per-level
+    sort erases input order); a merge with an empty EH is a live-state
+    identity; the merged estimate carries the standard additive error,
+    eps_a + eps_b + eps_a*eps_b relative, instead of the single-stream
+    eps'."""
+    a = _expire(a, t, cfg)
+    b = _expire(b, t, cfg)
+    S = cfg.slots
+    C = 2 * S                                    # carry capacity (see bound
+    #   in docs/DESIGN.md §8.3: m <= (3*slots+2)/2 < 2*slots)
+    pool_len = 2 * S + C
+    maxb = cfg.max_buckets_per_level
+    iota_s = jnp.arange(S, dtype=jnp.int32)
+    iota_c = jnp.arange(C, dtype=jnp.int32)
+
+    def level_step(carry, level_row):
+        c_ts, c_n = carry                        # buckets pushed from below
+        a_ts, a_n, b_ts, b_n, level = level_row
+        pool = jnp.concatenate([
+            jnp.where(iota_s < a_n, a_ts, -1),
+            jnp.where(iota_s < b_n, b_ts, -1),
+            jnp.where(iota_c < c_n, c_ts, -1),
+        ])
+        s = -jnp.sort(-pool)                     # newest first, -1 pads last
+        count = a_n + b_n + c_n
+        can_merge = level < cfg.levels - 1       # top level never merges
+        m = jnp.where((count > maxb) & can_merge, (count - maxb + 1) // 2, 0)
+        new_num = jnp.minimum(count - 2 * m, S)  # top-level capacity clamp
+        # j-th merge consumes the oldest remaining pair (s[count-1-2j],
+        # s[count-2-2j]) and carries up the pair's *newer* stamp.
+        idx = jnp.clip(count - 2 - 2 * iota_c, 0, pool_len - 1)
+        out_ts = jnp.where(iota_c < m, s[idx], -1)
+        return (out_ts, m), (s[:S], new_num)
+
+    levels = jnp.arange(cfg.levels, dtype=jnp.int32)
+    init = (jnp.full((C,), -1, jnp.int32), jnp.int32(0))
+    _, (ts, num) = lax.scan(
+        level_step, init, (a.ts, a.num, b.ts, b.num, levels))
+    return EHState(ts=ts, num=num.astype(jnp.int32))
+
+
 def eh_exact_upper(cfg: EHConfig) -> int:
     """Worst-case live buckets — the paper's space bound (k/2+1)(log(2N/k)+1)+1."""
     import math

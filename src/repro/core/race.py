@@ -28,11 +28,27 @@ class RACEState(NamedTuple):
 
 
 def race_init(L: int, W: int) -> RACEState:
+    """Zero sketch: ``counts (L, W) int32``, ``n () int32``.
+
+    Counters are mergeable histograms — two RACE sketches built over
+    different streams with the *same* LSH params combine by addition
+    (`race_merge`), which is what the sharded layer
+    (`repro.parallel.sketch_sharding`) exploits."""
     return RACEState(counts=jnp.zeros((L, W), jnp.int32), n=jnp.zeros((), jnp.int32))
 
 
+def race_merge(a: RACEState, b: RACEState) -> RACEState:
+    """Combine two sketches built (with identical params) over different
+    streams: counters sum exactly, so the merged sketch is bit-identical to
+    one sketch fed both streams in any order.  Associative and commutative
+    (int32 addition; ``n`` saturates at INT32_MAX like every other path)."""
+    return RACEState(counts=a.counts + b.counts, n=saturating_add(a.n, b.n))
+
+
 def race_update(state: RACEState, params, x: jax.Array, sign: int = 1) -> RACEState:
-    """Insert (sign=+1) or delete (sign=-1) one point — turnstile update."""
+    """Insert (sign=+1) or delete (sign=-1) one point ``x (d,) float32`` —
+    turnstile update.  Per-point reference path; the production path is
+    `race_update_batch` (bit-identical counters)."""
     codes = lsh.hash_points(params, x)                       # (L,)
     rows = jnp.arange(codes.shape[0])
     counts = state.counts.at[rows, codes].add(jnp.int32(sign))
@@ -53,13 +69,16 @@ def race_update_batch(state: RACEState, params, xs: jax.Array, sign: int = 1) ->
                      n=saturating_add(state.n, sign * xs.shape[0]))
 
 
-def race_query(state: RACEState, params, q: jax.Array, median_of_means: int = 0) -> jax.Array:
-    """Unnormalised KDE estimate at q (mean over rows; optional median-of-means
+def estimate_from_vals(vals: jax.Array, median_of_means: int = 0) -> jax.Array:
+    """Reduce per-row counter reads ``vals (..., L) float32`` to the RACE
+    estimate: mean over rows, or median-of-means with ``median_of_means``
+    groups (the [CS20] failure-probability booster).
 
-    with ``median_of_means`` groups, the estimator [CS20] uses to bound the
-    failure probability)."""
-    codes = lsh.hash_points(params, q)                       # (L,)
-    vals = state.counts[jnp.arange(codes.shape[-1]), codes].astype(jnp.float32)
+    Shared by `race_query` and the sharded query path
+    (`repro.parallel.sketch_sharding.sharded_race_query_batch`), which
+    all-gathers the per-shard rows and then applies this *same* reduction —
+    that is what makes the sharded estimate bit-identical to the
+    single-device one."""
     if median_of_means and median_of_means > 1:
         g = median_of_means
         L = vals.shape[-1]
@@ -69,11 +88,22 @@ def race_query(state: RACEState, params, q: jax.Array, median_of_means: int = 0)
     return vals.mean(-1)
 
 
+def race_query(state: RACEState, params, q: jax.Array, median_of_means: int = 0) -> jax.Array:
+    """Unnormalised KDE estimate at ``q (d,) float32`` → () float32.
+
+    ``E[estimate] = sum_x k^p(x, q)`` (Theorem 2.3): reads one counter per
+    row and reduces via `estimate_from_vals`."""
+    codes = lsh.hash_points(params, q)                       # (L,)
+    vals = state.counts[jnp.arange(codes.shape[-1]), codes].astype(jnp.float32)
+    return estimate_from_vals(vals, median_of_means)
+
+
 def race_query_batch(state: RACEState, params, qs: jax.Array, median_of_means: int = 0):
+    """Vmapped `race_query`: ``qs (B, d) float32`` → (B,) float32."""
     return jax.vmap(lambda q: race_query(state, params, q, median_of_means))(qs)
 
 
 def race_kde(state: RACEState, params, q: jax.Array, median_of_means: int = 0) -> jax.Array:
-    """Normalised density estimate: raw count / current stream size."""
+    """Normalised density estimate at ``q (d,)``: raw count / stream size."""
     raw = race_query(state, params, q, median_of_means)
     return raw / jnp.maximum(state.n.astype(jnp.float32), 1.0)

@@ -94,6 +94,12 @@ class SANNState(NamedTuple):
 
 
 def sann_init(cfg: SANNConfig, key: jax.Array):
+    """Resolve the config (derive L, k from n_max/r/c if unset) and allocate
+    an empty sketch.
+
+    Returns ``(resolved cfg, lsh.PStableParams, SANNState)`` — state shapes
+    are documented on `SANNState`; all ids/counters are int32, points
+    float32."""
     cfg = cfg.resolved()
     params = lsh.init_pstable(key, cfg.dim, cfg.L, cfg.k, cfg.w, cfg.n_buckets)
     state = SANNState(
@@ -146,6 +152,10 @@ def sann_insert(state: SANNState, params, x: jax.Array, key: jax.Array,
 
 def sann_insert_stream(state: SANNState, params, xs: jax.Array, key: jax.Array,
                        cfg: SANNConfig) -> SANNState:
+    """Per-point reference ingest of ``xs (T, d) float32``: one `lax.scan`
+    step per element under the per-point key schedule
+    ``jax.random.split(key, T)``.  `sann_insert_batch` is the production
+    path and is bit-identical to this one under the same key."""
     keys = jax.random.split(key, xs.shape[0])
 
     def step(s, xk):
@@ -304,22 +314,40 @@ class SANNResult(NamedTuple):
     n_candidates: jax.Array
 
 
-def sann_query(state: SANNState, params, q: jax.Array, cfg: SANNConfig) -> SANNResult:
-    """Alg. 1 query: gather L buckets, truncate to 3L candidates, score,
-    return argmin if within c*r (Fig. 2)."""
+def sann_bucket_candidates(state: SANNState, params, q: jax.Array,
+                           cfg: SANNConfig):
+    """Gather the colliding buckets for ``q (d,) float32``.
+
+    Returns ``(cand, ok)``: candidate slot ids ``(cfg.L * bucket_cap,)
+    int32`` in row-major table order and their validity mask (entry is a
+    live stored point).  Split out from `sann_query` so the table-sharded
+    path (`repro.parallel.sketch_sharding`) can gather per-shard candidate
+    blocks and concatenate them — shard-order concatenation reproduces this
+    exact row-major order."""
     codes = lsh.hash_points(params, q)                          # (L,)
     rows = jnp.arange(cfg.L)
     cand = state.tables[rows, codes].reshape(-1)                # (L*bucket_cap,)
     ok = (cand >= 0) & state.valid[jnp.maximum(cand, 0)]
-    # Truncate to the paper's 3L budget: stable-sort invalid entries last,
-    # keep the first 3L.
+    return cand, ok
+
+
+def sann_score_candidates(points: jax.Array, cand: jax.Array, ok: jax.Array,
+                          q: jax.Array, budget: int,
+                          cfg: SANNConfig) -> SANNResult:
+    """Truncate-and-score: keep the first ``budget`` valid candidates (the
+    paper's 3L early-exit), score via `repro.kernels.cand_score`, return the
+    argmin if within c*r (Fig. 2).
+
+    ``points (capacity, d) float32`` is the (replicated, in the sharded
+    case) point store; ``cand/ok`` come from `sann_bucket_candidates`."""
+    # Truncate to the budget: stable-sort invalid entries last, keep the
+    # first ``budget``.
     order = jnp.argsort(jnp.where(ok, 0, 1), stable=True)
-    budget = 3 * cfg.L
     sel = order[:budget]
     cand, ok = cand[sel], ok[sel]
-    vecs = state.points[jnp.maximum(cand, 0)]                   # (3L, dim)
+    vecs = points[jnp.maximum(cand, 0)]                         # (budget, dim)
     from repro.kernels import ops as kernel_ops
-    d2 = kernel_ops.cand_score(q, vecs)                         # (3L,)
+    d2 = kernel_ops.cand_score(q, vecs)                         # (budget,)
     d2 = jnp.where(ok, d2, jnp.inf)
     best = jnp.argmin(d2)
     dist = jnp.sqrt(d2[best])
@@ -332,8 +360,20 @@ def sann_query(state: SANNState, params, q: jax.Array, cfg: SANNConfig) -> SANNR
     )
 
 
+def sann_query(state: SANNState, params, q: jax.Array, cfg: SANNConfig) -> SANNResult:
+    """Alg. 1 query: gather L buckets, truncate to 3L candidates, score,
+    return argmin if within c*r (Fig. 2).
+
+    ``q (d,) float32`` → `SANNResult` of scalars (index -1 / distance inf
+    encode the paper's NULL answer)."""
+    cand, ok = sann_bucket_candidates(state, params, q, cfg)
+    return sann_score_candidates(state.points, cand, ok, q, 3 * cfg.L, cfg)
+
+
 def sann_query_batch(state: SANNState, params, qs: jax.Array, cfg: SANNConfig) -> SANNResult:
-    """Batch queries (§3.3 / Corollary 3.2) — embarrassingly parallel vmap."""
+    """Batch queries (§3.3 / Corollary 3.2) — embarrassingly parallel vmap.
+
+    ``qs (B, d) float32`` → `SANNResult` with (B,) fields."""
     return jax.vmap(lambda q: sann_query(state, params, q, cfg))(qs)
 
 
@@ -347,8 +387,17 @@ def sann_bytes(cfg: SANNConfig) -> int:
 
 def sann_query_topk(state: SANNState, params, q: jax.Array, cfg: SANNConfig,
                     topk: int = 50):
-    """Top-k variant for recall benchmarks: returns (slot ids, distances) of
-    the k closest candidates in the bucket union (−1/inf padded)."""
+    """Top-k variant for recall benchmarks (no 3L truncation, no (c,r)
+    contract): score the full bucket union, dedup repeated slot ids, return
+    the k closest.
+
+    ``q (d,) float32`` → ``(ids (k,) int32, dists (k,) float32)`` with
+    ``k = min(topk, cfg.L * bucket_cap)``, sorted by ascending distance and
+    padded with id -1 / distance inf when fewer than k live candidates
+    collide.  The table-sharded path merges per-shard results of this
+    function (`sketch_sharding.sharded_sann_query_topk_batch`): the global
+    top-k is contained in the union of per-shard top-ks, so the merge is
+    exact."""
     codes = lsh.hash_points(params, q)
     rows = jnp.arange(cfg.L)
     cand = state.tables[rows, codes].reshape(-1)
@@ -369,4 +418,6 @@ def sann_query_topk(state: SANNState, params, q: jax.Array, cfg: SANNConfig,
 
 
 def sann_query_topk_batch(state, params, qs, cfg: SANNConfig, topk: int = 50):
+    """Vmapped `sann_query_topk`: ``qs (B, d)`` → ``(ids (B, k), dists
+    (B, k))`` with the same padding/ordering contract."""
     return jax.vmap(lambda q: sann_query_topk(state, params, q, cfg, topk))(qs)

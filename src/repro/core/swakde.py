@@ -37,7 +37,7 @@ from jax import lax
 
 from . import lsh
 from .eh import (
-    EHConfig, EHState, eh_add, eh_init, eh_query,
+    EHConfig, EHState, eh_add, eh_init, eh_merge, eh_query,
     SumEHConfig, SumEHState, sum_eh_add, sum_eh_init, sum_eh_query,
 )
 from .util import saturating_add
@@ -66,6 +66,8 @@ class SWAKDEState(NamedTuple):
 
 
 def swakde_init(cfg: SWAKDEConfig) -> SWAKDEState:
+    """Empty sketch: ``ts (L, W, levels, slots) int32`` (-1 = empty bucket),
+    ``num (L, W, levels) int32``, ``t () int32``."""
     eh = cfg.eh_config()
     return SWAKDEState(
         ts=jnp.full((cfg.L, cfg.W, eh.levels, eh.slots), -1, jnp.int32),
@@ -75,7 +77,9 @@ def swakde_init(cfg: SWAKDEConfig) -> SWAKDEState:
 
 
 def swakde_update(state: SWAKDEState, params, x: jax.Array, cfg: SWAKDEConfig) -> SWAKDEState:
-    """One stream element: hash with L rows, eh_add the L hit cells."""
+    """One stream element ``x (d,) float32``: hash with L rows, `eh_add` the
+    L hit cells at timestep ``t``.  Per-point reference path; the production
+    chunked path `swakde_update_chunk` is bit-identical."""
     eh = cfg.eh_config()
     codes = lsh.hash_points(params, x)                      # (L,)
     rows = jnp.arange(cfg.L)
@@ -175,18 +179,61 @@ def swakde_stream_batched(state: SWAKDEState, params, xs: jax.Array,
     return state
 
 
-def swakde_query(state: SWAKDEState, params, q: jax.Array, cfg: SWAKDEConfig) -> jax.Array:
-    """Average of the L EH estimates — the paper's SW-AKDE estimator Ŷ."""
+def swakde_row_estimates(state: SWAKDEState, params, q: jax.Array,
+                         cfg: SWAKDEConfig) -> jax.Array:
+    """Per-row EH window counts at ``q (d,) float32`` → (L,) float32.
+
+    One gather + vmapped `eh_query` over the L hit cells.  Shared by
+    `swakde_query` and the sharded query path
+    (`repro.parallel.sketch_sharding.sharded_swakde_query_batch`), which
+    all-gathers each shard's rows and applies the same mean — making the
+    sharded estimate bit-identical to the single-device one."""
     eh = cfg.eh_config()
     codes = lsh.hash_points(params, q)
     rows = jnp.arange(cfg.L)
     cell = EHState(ts=state.ts[rows, codes], num=state.num[rows, codes])
-    vals = jax.vmap(lambda s: eh_query(s, state.t - 1, eh))(cell)
-    return vals.mean()
+    return jax.vmap(lambda s: eh_query(s, state.t - 1, eh))(cell)
+
+
+def swakde_query(state: SWAKDEState, params, q: jax.Array, cfg: SWAKDEConfig) -> jax.Array:
+    """Average of the L EH estimates — the paper's SW-AKDE estimator Ŷ.
+
+    ``q (d,) float32`` → () float32 (unnormalised window density)."""
+    return swakde_row_estimates(state, params, q, cfg).mean()
 
 
 def swakde_query_batch(state: SWAKDEState, params, qs: jax.Array, cfg: SWAKDEConfig):
+    """Vmapped `swakde_query`: ``qs (B, d) float32`` → (B,) float32."""
     return jax.vmap(lambda q: swakde_query(state, params, q, cfg))(qs)
+
+
+def swakde_merge(a: SWAKDEState, b: SWAKDEState, cfg: SWAKDEConfig) -> SWAKDEState:
+    """Combine two sketches built (with identical params and a shared clock)
+    over different sub-streams — e.g. two ingest workers splitting one
+    logical stream.
+
+    Cell-wise exact EH bucket-union merge (`core.eh.eh_merge`): every cell's
+    merged estimate counts the window hits of *both* sub-streams, so the
+    merged Ŷ ≈ Ŷ_a + Ŷ_b with the standard mergeable-summaries error
+    accumulation (eps' per input sketch).  Commutative bit-exactly; total
+    bucket mass is preserved exactly, but the bucket *structure* after
+    ``merge(merge(a,b),c)`` vs ``merge(a,merge(b,c))`` may differ by one
+    cascade level, so associativity holds at the estimate level (within the
+    EH error bound), not bitwise — see docs/DESIGN.md §8.3."""
+    eh = cfg.eh_config()
+    t = jnp.maximum(a.t, b.t)
+    shape = a.ts.shape                                  # (L, W, levels, slots)
+    flat = lambda x: x.reshape((-1,) + x.shape[2:])
+
+    def cell(ts_a, num_a, ts_b, num_b):
+        # Expire at the *query* clock t - 1 (every query path reads
+        # eh_query(state, t - 1)): expiring at t would drop the boundary
+        # bucket stamped exactly t - window that queries still count.
+        m = eh_merge(EHState(ts_a, num_a), EHState(ts_b, num_b), t - 1, eh)
+        return m.ts, m.num
+
+    ts, num = jax.vmap(cell)(flat(a.ts), flat(a.num), flat(b.ts), flat(b.num))
+    return SWAKDEState(ts=ts.reshape(shape), num=num.reshape(shape[:3]), t=t)
 
 
 def swakde_kde(state: SWAKDEState, params, q: jax.Array, cfg: SWAKDEConfig) -> jax.Array:

@@ -34,6 +34,11 @@ DEFAULT_RULES = {
     "kv_seq": "data",       # sequence parallelism for long-context decode
     "conv": None,
     "state": None,
+    # sketch-state axes (repro.parallel.sketch_sharding): RACE / SW-AKDE
+    # rows and S-ANN tables live on the 1-D "shard" mesh axis; on meshes
+    # without that axis (the training meshes above) they stay replicated.
+    "sketch_rows": "shard",
+    "sketch_tables": "shard",
 }
 
 

@@ -1,0 +1,423 @@
+"""Multi-device sharded ingest & query for the three sketches (shard_map).
+
+All three sketches are mergeable histograms, which is exactly what makes
+them shardable (the property RACE [CS20] exploits for distributed
+sketching, and the batch/Turnstile model of the paper's Corollary 4.2
+assumes for partitioned updates):
+
+  * **RACE** — ``counts (L, W)`` sharded along the **L (rows)** axis.  Each
+    device hashes the chunk with its own row block of the LSH params and
+    updates its rows; a query all-gathers the per-row counter reads and
+    applies `core.race.estimate_from_vals` — the psum-style combine is the
+    row mean, and the result is *bit-identical* to single-device.
+  * **SW-AKDE** — the EH grid ``(L, W, levels, slots)`` sharded along L,
+    same scheme: rows are untouched by sharding, queries all-gather the
+    per-row EH estimates (`core.swakde.swakde_row_estimates`).  Cross-
+    *worker* combine (different sub-streams, same clock) is the exact EH
+    merge `core.swakde.swakde_merge`.
+  * **S-ANN** — sharded **by table**: ``tables (L, n_buckets, cap)`` and
+    ``table_ptr`` split along L; the point store / valid mask / counters
+    are replicated (every device makes the same keep decisions from the
+    same key, so the replicas stay bit-identical by construction).  Queries
+    either all-gather the candidate blocks and reuse the single-device
+    truncate-and-score (`sharded_sann_query_batch`, bit-identical), or
+    merge per-shard top-ks (`sharded_sann_query_topk_batch` — exact, since
+    the global top-k is contained in the union of per-shard top-ks).
+
+Every sharded ingest entry point reuses the PR-1 batched kernel per shard
+(`race_update_batch`, `swakde_update_chunk`, `sann_insert_batch`): the
+per-shard computation *is* the single-device computation on a row/table
+block, so sharded state equals single-device state block-for-block
+(tests/test_distributed.py asserts this bitwise on 8 host devices).
+
+The mesh is a 1-D ``("shard",)`` mesh built with the existing
+`ShardingCtx`/`make_ctx` machinery (`make_sketch_ctx`); ``ctx.mesh is
+None`` short-circuits every function here back to the plain single-device
+call, so services can hold one code path.
+
+Works on any backend; CPU CI forces 8 host devices via
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import Mesh, NamedSharding
+
+from repro.core import lsh, race, sann, swakde
+from repro.core.race import race_merge  # noqa: F401  (re-export: merge API)
+from repro.core.swakde import swakde_merge  # noqa: F401  (re-export)
+
+from .sharding import ShardingCtx, make_ctx
+
+SHARD_AXIS = "shard"
+
+try:  # jax >= 0.6: top-level shard_map, replication check kw is check_vma
+    _shard_map = jax.shard_map
+    _CHECK_KW = "check_vma"
+except AttributeError:  # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _CHECK_KW = "check_rep"
+
+
+def _smap(fn, mesh, in_specs, out_specs):
+    # Replication checking is disabled: outputs marked P() are replicated by
+    # construction (identical per-device computation), which the static
+    # checker cannot see through all_gather + gather chains.
+    return _shard_map(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **{_CHECK_KW: False})
+
+
+# ---------------------------------------------------------------------------
+# Mesh / ctx / placement helpers
+# ---------------------------------------------------------------------------
+
+def make_sketch_mesh(num_shards: int) -> Mesh:
+    """1-D ``("shard",)`` mesh over the first ``num_shards`` local devices."""
+    devs = jax.devices()
+    if len(devs) < num_shards:
+        raise ValueError(
+            f"num_shards={num_shards} but only {len(devs)} devices visible "
+            "(CPU CI: set XLA_FLAGS=--xla_force_host_platform_device_count=N)")
+    return Mesh(np.asarray(devs[:num_shards]).reshape(num_shards),
+                (SHARD_AXIS,))
+
+
+def make_sketch_ctx(mesh: Optional[Mesh]) -> ShardingCtx:
+    """ShardingCtx over ``mesh`` with the sketch logical-axis rules
+    (``sketch_rows``/``sketch_tables`` → the "shard" mesh axis).
+
+    A mesh without a "shard" axis would silently replicate everything and
+    crash later inside ingest — reject it up front."""
+    if mesh is not None and SHARD_AXIS not in mesh.axis_names:
+        raise ValueError(
+            f"sketch sharding needs a ('{SHARD_AXIS}',) mesh axis, got "
+            f"{mesh.axis_names} (build one with make_sketch_mesh)")
+    return make_ctx(mesh)
+
+
+def make_service_ctx(mesh: Optional[Mesh], num_shards: int) -> ShardingCtx:
+    """The services' config contract: an explicit ``mesh`` wins, else
+    ``num_shards > 1`` builds one, else single-device (``ctx.mesh=None``)."""
+    if mesh is None and num_shards > 1:
+        mesh = make_sketch_mesh(num_shards)
+    return make_sketch_ctx(mesh)
+
+
+def ctx_num_shards(ctx: ShardingCtx) -> int:
+    """Shard count of a sketch ctx (1 for the single-device path)."""
+    return 1 if ctx.mesh is None else ctx.mesh.shape[SHARD_AXIS]
+
+
+_num_shards = ctx_num_shards
+
+
+def _check_rows(L: int, n: int, what: str) -> int:
+    if L % n:
+        raise ValueError(f"{what}: L={L} not divisible by num_shards={n}")
+    return L // n
+
+
+def _local_params(params, L_local: int):
+    """Rebind the static row count on a row-block of LSH params (the arrays
+    arrive already sliced by shard_map; only the static L must follow)."""
+    return dataclasses.replace(params, L=L_local)
+
+
+def _param_specs(params, ctx: ShardingCtx):
+    """Spec pytree for LSH params, row-sharded: ``proj (d, L*k)`` splits its
+    column axis (L-major, so contiguous blocks are whole rows), ``bias
+    (L*k,)`` and ``mix (L, k)`` split their L axis."""
+    col = ctx.spec(None, "sketch_rows")
+    row = ctx.spec("sketch_rows")
+    rowk = ctx.spec("sketch_rows", None)
+    if isinstance(params, lsh.SRPParams):
+        return dataclasses.replace(params, proj=col, mix=rowk)
+    return dataclasses.replace(params, proj=col, bias=row, mix=rowk)
+
+
+def _put(tree, spec_tree, mesh: Mesh):
+    """device_put ``tree`` with a matching pytree of PartitionSpecs."""
+    leaves, treedef = jax.tree.flatten(tree)
+    specs = treedef.flatten_up_to(spec_tree)
+    return treedef.unflatten(
+        jax.device_put(x, NamedSharding(mesh, s))
+        for x, s in zip(leaves, specs))
+
+
+def _race_state_specs(ctx: ShardingCtx):
+    return race.RACEState(counts=ctx.spec("sketch_rows", None), n=ctx.spec())
+
+
+def _swakde_state_specs(ctx: ShardingCtx):
+    return swakde.SWAKDEState(
+        ts=ctx.spec("sketch_rows", None, None, None),
+        num=ctx.spec("sketch_rows", None, None),
+        t=ctx.spec())
+
+
+def _sann_state_specs(ctx: ShardingCtx):
+    r = ctx.spec()
+    return sann.SANNState(
+        points=r, valid=r, write_ptr=r, n_seen=r, n_stored=r,
+        tables=ctx.spec("sketch_tables", None, None),
+        table_ptr=ctx.spec("sketch_tables", None))
+
+
+def shard_race(state: race.RACEState, params, ctx: ShardingCtx):
+    """Place a RACE sketch onto the mesh (rows split, ``n`` replicated)."""
+    return (_put(state, _race_state_specs(ctx), ctx.mesh),
+            _put(params, _param_specs(params, ctx), ctx.mesh))
+
+
+def shard_swakde(state: swakde.SWAKDEState, params, ctx: ShardingCtx):
+    """Place an SW-AKDE sketch onto the mesh (rows split, ``t`` replicated)."""
+    return (_put(state, _swakde_state_specs(ctx), ctx.mesh),
+            _put(params, _param_specs(params, ctx), ctx.mesh))
+
+
+def shard_sann(state: sann.SANNState, params, ctx: ShardingCtx):
+    """Place an S-ANN sketch onto the mesh (tables split, points/counters
+    replicated)."""
+    return (_put(state, _sann_state_specs(ctx), ctx.mesh),
+            _put(params, _param_specs(params, ctx), ctx.mesh))
+
+
+# ---------------------------------------------------------------------------
+# RACE
+# ---------------------------------------------------------------------------
+
+def sharded_race_update_batch(state: race.RACEState, params, xs: jax.Array,
+                              ctx: ShardingCtx, sign: int = 1) -> race.RACEState:
+    """Sharded turnstile batch update: ``xs (B, d)`` replicated to every
+    device, each device running `race_update_batch` on its row block.
+    Counters are bit-identical to the single-device call."""
+    if ctx.mesh is None:
+        return race.race_update_batch(state, params, xs, sign)
+    Lsh = _check_rows(params.L, _num_shards(ctx), "RACE")
+
+    def body(st, p, xs):
+        return race.race_update_batch(st, _local_params(p, Lsh), xs, sign)
+
+    return _smap(
+        body, ctx.mesh,
+        in_specs=(_race_state_specs(ctx), _param_specs(params, ctx),
+                  ctx.spec()),
+        out_specs=_race_state_specs(ctx))(state, params, xs)
+
+
+def sharded_race_query_batch(state: race.RACEState, params, qs: jax.Array,
+                             ctx: ShardingCtx,
+                             median_of_means: int = 0) -> jax.Array:
+    """Sharded batched query ``qs (B, d)`` → (B,) float32.
+
+    Each device reads its rows' counters, the (B, L_local) blocks are
+    all-gathered into the full (B, L) value matrix in row order, and the
+    single-device reduction `estimate_from_vals` runs replicated —
+    bit-identical to `race_query_batch`."""
+    if ctx.mesh is None:
+        return race.race_query_batch(state, params, qs, median_of_means)
+    Lsh = _check_rows(params.L, _num_shards(ctx), "RACE")
+
+    def body(st, p, qs):
+        codes = lsh.hash_points(_local_params(p, Lsh), qs)      # (B, Lsh)
+        vals = st.counts[jnp.arange(Lsh), codes].astype(jnp.float32)
+        vals = lax.all_gather(vals, SHARD_AXIS, axis=1, tiled=True)  # (B, L)
+        return race.estimate_from_vals(vals, median_of_means)
+
+    return _smap(
+        body, ctx.mesh,
+        in_specs=(_race_state_specs(ctx), _param_specs(params, ctx),
+                  ctx.spec()),
+        out_specs=ctx.spec())(state, params, qs)
+
+
+# ---------------------------------------------------------------------------
+# SW-AKDE
+# ---------------------------------------------------------------------------
+
+def sharded_swakde_update_chunk(state: swakde.SWAKDEState, params,
+                                xs: jax.Array, cfg: swakde.SWAKDEConfig,
+                                ctx: ShardingCtx) -> swakde.SWAKDEState:
+    """Sharded exact chunk ingest: each device replays the chunk into its
+    row block via `swakde_update_chunk` (rows are independent given the
+    shared timestep counter, which every device advances identically).
+    Bit-identical to the single-device call."""
+    if ctx.mesh is None:
+        return swakde.swakde_update_chunk(state, params, xs, cfg)
+    Lsh = _check_rows(cfg.L, _num_shards(ctx), "SW-AKDE")
+    cfg_local = dataclasses.replace(cfg, L=Lsh)
+
+    def body(st, p, xs):
+        return swakde.swakde_update_chunk(st, _local_params(p, Lsh), xs,
+                                          cfg_local)
+
+    return _smap(
+        body, ctx.mesh,
+        in_specs=(_swakde_state_specs(ctx), _param_specs(params, ctx),
+                  ctx.spec()),
+        out_specs=_swakde_state_specs(ctx))(state, params, xs)
+
+
+def sharded_swakde_query_batch(state: swakde.SWAKDEState, params,
+                               qs: jax.Array, cfg: swakde.SWAKDEConfig,
+                               ctx: ShardingCtx) -> jax.Array:
+    """Sharded batched query ``qs (B, d)`` → (B,) float32 (unnormalised Ŷ).
+
+    Per-device row estimates → all-gather to (B, L) in row order → the same
+    mean the single-device estimator takes.  Bit-identical to
+    `swakde_query_batch` (the EH-merge-style combine across devices reduces
+    to concatenation because row cells are never split)."""
+    if ctx.mesh is None:
+        return swakde.swakde_query_batch(state, params, qs, cfg)
+    Lsh = _check_rows(cfg.L, _num_shards(ctx), "SW-AKDE")
+    cfg_local = dataclasses.replace(cfg, L=Lsh)
+
+    def body(st, p, qs):
+        p = _local_params(p, Lsh)
+        vals = jax.vmap(
+            lambda q: swakde.swakde_row_estimates(st, p, q, cfg_local))(qs)
+        vals = lax.all_gather(vals, SHARD_AXIS, axis=1, tiled=True)  # (B, L)
+        return vals.mean(-1)
+
+    return _smap(
+        body, ctx.mesh,
+        in_specs=(_swakde_state_specs(ctx), _param_specs(params, ctx),
+                  ctx.spec()),
+        out_specs=ctx.spec())(state, params, qs)
+
+
+# ---------------------------------------------------------------------------
+# S-ANN
+# ---------------------------------------------------------------------------
+
+def sharded_sann_insert_batch(state: sann.SANNState, params, xs: jax.Array,
+                              key: jax.Array, cfg: sann.SANNConfig,
+                              ctx: ShardingCtx) -> sann.SANNState:
+    """Sharded batched ingest of ``xs (B, d)``: every device runs
+    `sann_insert_batch` over its table block with the *same* key, so the
+    replicated point store / keep decisions / counters are computed
+    identically everywhere and the table blocks line up with the
+    single-device tables row-for-row.  Bit-identical to the single-device
+    call under the same key."""
+    if ctx.mesh is None:
+        return sann.sann_insert_batch(state, params, xs, key, cfg)
+    Lsh = _check_rows(cfg.L, _num_shards(ctx), "S-ANN")
+    cfg_local = dataclasses.replace(cfg, L=Lsh)
+
+    def body(st, p, xs, key):
+        return sann.sann_insert_batch(st, _local_params(p, Lsh), xs, key,
+                                      cfg_local)
+
+    return _smap(
+        body, ctx.mesh,
+        in_specs=(_sann_state_specs(ctx), _param_specs(params, ctx),
+                  ctx.spec(), ctx.spec()),
+        out_specs=_sann_state_specs(ctx))(state, params, xs, key)
+
+
+def sharded_sann_delete(state: sann.SANNState, params, x: jax.Array,
+                        cfg: sann.SANNConfig, ctx: ShardingCtx,
+                        tol: float = 1e-5) -> sann.SANNState:
+    """Sharded turnstile delete-by-value (§3.4): the hit mask over the
+    replicated point store is computed identically on every device; each
+    device tombstones its own table block.  Bit-identical to
+    `sann_delete`."""
+    if ctx.mesh is None:
+        return sann.sann_delete(state, params, x, cfg, tol)
+    Lsh = _check_rows(cfg.L, _num_shards(ctx), "S-ANN")
+    cfg_local = dataclasses.replace(cfg, L=Lsh)
+
+    def body(st, x):
+        return sann.sann_delete(st, None, x, cfg_local, tol)
+
+    return _smap(
+        body, ctx.mesh,
+        in_specs=(_sann_state_specs(ctx), ctx.spec()),
+        out_specs=_sann_state_specs(ctx))(state, x)
+
+
+def sharded_sann_query_batch(state: sann.SANNState, params, qs: jax.Array,
+                             cfg: sann.SANNConfig,
+                             ctx: ShardingCtx) -> sann.SANNResult:
+    """Sharded (c, r)-queries ``qs (B, d)`` → `SANNResult` with (B,) fields.
+
+    Each device gathers its tables' candidate blocks
+    (`sann_bucket_candidates`); all-gather concatenates them in shard order
+    — which *is* the single-device row-major candidate order — and the
+    single-device truncate-and-score (`sann_score_candidates`, 3L budget
+    with the global L) runs replicated.  Bit-identical to
+    `sann_query_batch`."""
+    if ctx.mesh is None:
+        return sann.sann_query_batch(state, params, qs, cfg)
+    Lsh = _check_rows(cfg.L, _num_shards(ctx), "S-ANN")
+    cfg_local = dataclasses.replace(cfg, L=Lsh)
+
+    def body(st, p, qs):
+        p = _local_params(p, Lsh)
+        cand, ok = jax.vmap(
+            lambda q: sann.sann_bucket_candidates(st, p, q, cfg_local))(qs)
+        cand = lax.all_gather(cand, SHARD_AXIS, axis=1, tiled=True)
+        ok = lax.all_gather(ok, SHARD_AXIS, axis=1, tiled=True)
+        return jax.vmap(
+            lambda q, c, o: sann.sann_score_candidates(
+                st.points, c, o, q, 3 * cfg.L, cfg))(qs, cand, ok)
+
+    return _smap(
+        body, ctx.mesh,
+        in_specs=(_sann_state_specs(ctx), _param_specs(params, ctx),
+                  ctx.spec()),
+        out_specs=sann.SANNResult(*(ctx.spec(),) * 4))(state, params, qs)
+
+
+def sharded_sann_query_topk_batch(state: sann.SANNState, params,
+                                  qs: jax.Array, cfg: sann.SANNConfig,
+                                  ctx: ShardingCtx, topk: int = 50):
+    """Sharded top-k ``qs (B, d)`` → ``(ids (B, k), dists (B, k))`` with
+    ``k = min(topk, L * bucket_cap)`` — the cross-device combine is a
+    top-k merge: per-shard `sann_query_topk` results are all-gathered,
+    duplicate slot ids (a point stored in tables on two shards) are masked
+    to inf, and a final top-k selects across shards.  Exact: every global
+    top-k entry is in its own shard's local top-k, and distances are
+    computed identically everywhere (replicated point store)."""
+    if ctx.mesh is None:
+        return sann.sann_query_topk_batch(state, params, qs, cfg, topk)
+    Lsh = _check_rows(cfg.L, _num_shards(ctx), "S-ANN")
+    cfg_local = dataclasses.replace(cfg, L=Lsh)
+    k_out = min(topk, cfg.L * cfg.bucket_cap)
+
+    def merge(ids, dists):
+        # ids/dists (B, n_shards * k_local): drop cross-shard duplicates
+        # (identical distance on every shard — keep the first), then take
+        # the global top-k by ascending distance.
+        order = jnp.argsort(ids, axis=1)
+        sid = jnp.take_along_axis(ids, order, axis=1)
+        dup = jnp.concatenate(
+            [jnp.zeros_like(sid[:, :1], bool),
+             (sid[:, 1:] == sid[:, :-1]) & (sid[:, 1:] >= 0)], axis=1)
+        dupmask = jnp.zeros_like(dup).at[
+            jnp.arange(ids.shape[0])[:, None], order].set(dup)
+        d = jnp.where(dupmask | (ids < 0), jnp.inf, dists)
+        neg, sel = lax.top_k(-d, k_out)
+        out_ids = jnp.where(jnp.isfinite(-neg),
+                            jnp.take_along_axis(ids, sel, axis=1), -1)
+        return out_ids, -neg
+
+    def body(st, p, qs):
+        p = _local_params(p, Lsh)
+        ids, dists = jax.vmap(
+            lambda q: sann.sann_query_topk(st, p, q, cfg_local, topk))(qs)
+        ids = lax.all_gather(ids, SHARD_AXIS, axis=1, tiled=True)
+        dists = lax.all_gather(dists, SHARD_AXIS, axis=1, tiled=True)
+        return merge(ids, dists)
+
+    return _smap(
+        body, ctx.mesh,
+        in_specs=(_sann_state_specs(ctx), _param_specs(params, ctx),
+                  ctx.spec()),
+        out_specs=(ctx.spec(), ctx.spec()))(state, params, qs)

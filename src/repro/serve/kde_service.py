@@ -9,6 +9,13 @@ matmul + one grid traversal per chunk), and answers batched density
 queries — e.g. drift monitoring over a decode-time activation stream, or
 novelty scoring of incoming requests.
 
+Multi-device: set ``num_shards`` (or pass a ``mesh``) to split the L
+sketch rows across devices via `repro.parallel.sketch_sharding` — each
+device replays chunks into its row block of the EH grid and queries
+all-gather the per-row estimates; results stay bit-identical to the
+single-device service.  ``mesh=None, num_shards<=1`` (the default) keeps
+today's single-device path untouched.
+
 This is a thin, stateful orchestration layer over repro.core.swakde; all
 math lives there (and is what the paper's Theorem 4.1 guarantee covers).
 """
@@ -16,12 +23,14 @@ from __future__ import annotations
 
 import dataclasses
 import threading
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import lsh, swakde
+from repro.parallel import sketch_sharding as ss
 
 
 @dataclasses.dataclass
@@ -38,6 +47,11 @@ class KDEServiceConfig:
     # Batched-ingest chunk: one swakde_update_chunk call per chunk; each
     # distinct partial-chunk size triggers one extra jit trace.
     ingest_chunk: int = 1024
+    # Multi-device sharding: num_shards > 1 splits the L rows across that
+    # many local devices (L must divide evenly); ``mesh`` overrides with a
+    # prebuilt 1-D ("shard",) mesh.  Both unset → single-device.
+    num_shards: int = 0
+    mesh: Optional[object] = None   # jax.sharding.Mesh
 
 
 class KDEService:
@@ -58,12 +72,22 @@ class KDEService:
             raise ValueError(cfg.hash_family)
         self.state = swakde.swakde_init(self.sketch_cfg)
         self._lock = threading.Lock()
+
+        self._ctx = ss.make_service_ctx(cfg.mesh, cfg.num_shards)
+        if self._ctx.mesh is not None:
+            self.state, self.params = ss.shard_swakde(self.state, self.params,
+                                                      self._ctx)
         self._update = jax.jit(
-            lambda st, xs: swakde.swakde_update_chunk(
-                st, self.params, xs, self.sketch_cfg))
+            lambda st, xs: ss.sharded_swakde_update_chunk(
+                st, self.params, xs, self.sketch_cfg, self._ctx))
         self._query = jax.jit(
-            lambda st, qs: swakde.swakde_query_batch(
-                st, self.params, qs, self.sketch_cfg))
+            lambda st, qs: ss.sharded_swakde_query_batch(
+                st, self.params, qs, self.sketch_cfg, self._ctx))
+
+    @property
+    def num_shards(self) -> int:
+        """Devices the rows are split across (1 = single-device path)."""
+        return ss.ctx_num_shards(self._ctx)
 
     def ingest(self, points: np.ndarray) -> None:
         """Stream a block of points through the chunked batched update."""

@@ -6,6 +6,13 @@ sublinear S-ANN sketch and answers batched (c, r)-ANN queries — e.g. for
 retrieval-augmented decoding, the per-step query batch is the batch of
 current decoder hidden states.
 
+Multi-device: set ``num_shards`` (or pass a ``mesh``) to split the L hash
+tables across devices via `repro.parallel.sketch_sharding` — ingest runs
+the PR-1 batched kernel per table shard, queries all-gather candidate
+blocks, and results stay bit-identical to the single-device service.
+``mesh=None, num_shards<=1`` (the default) keeps today's single-device
+path untouched.
+
 This is a thin, stateful orchestration layer over repro.core.sann; all math
 lives there (and is what the paper's guarantees cover).
 """
@@ -20,6 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import sann
+from repro.parallel import sketch_sharding as ss
 
 
 @dataclasses.dataclass
@@ -38,6 +46,11 @@ class RetrievalConfig:
     # scatter (core.sann.sann_insert_batch).  Larger chunks amortise more;
     # each distinct partial-chunk size triggers one extra jit trace.
     ingest_chunk: int = 1024
+    # Multi-device sharding: num_shards > 1 splits the L tables across that
+    # many local devices (L must divide evenly); ``mesh`` overrides with a
+    # prebuilt 1-D ("shard",) mesh.  Both unset → single-device.
+    num_shards: int = 0
+    mesh: Optional[object] = None   # jax.sharding.Mesh
 
 
 class RetrievalService:
@@ -52,13 +65,25 @@ class RetrievalService:
         self._chunk = cfg.ingest_chunk
         self._key = jax.random.PRNGKey(cfg.seed + 1)
         self._lock = threading.Lock()
+
+        self._ctx = ss.make_service_ctx(cfg.mesh, cfg.num_shards)
+        if self._ctx.mesh is not None:
+            self.state, self.params = ss.shard_sann(self.state, self.params,
+                                                    self._ctx)
         self._insert = jax.jit(
-            lambda st, xs, key: sann.sann_insert_batch(
-                st, self.params, xs, key, self.cfg))
+            lambda st, xs, key: ss.sharded_sann_insert_batch(
+                st, self.params, xs, key, self.cfg, self._ctx))
         self._query = jax.jit(
-            lambda st, qs: sann.sann_query_batch(st, self.params, qs, self.cfg))
+            lambda st, qs: ss.sharded_sann_query_batch(
+                st, self.params, qs, self.cfg, self._ctx))
         self._delete = jax.jit(
-            lambda st, x: sann.sann_delete(st, self.params, x, self.cfg))
+            lambda st, x: ss.sharded_sann_delete(
+                st, self.params, x, self.cfg, self._ctx))
+
+    @property
+    def num_shards(self) -> int:
+        """Devices the tables are split across (1 = single-device path)."""
+        return ss.ctx_num_shards(self._ctx)
 
     def ingest(self, embeddings: np.ndarray) -> None:
         """Stream a block of embeddings through the batched insert path,

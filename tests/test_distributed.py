@@ -1,6 +1,8 @@
 """Multi-device semantics (subprocesses with 8 virtual CPU devices):
 sharded step == single-device step; EP MoE == dense MoE; compressed DP
-all-reduce ≈ exact with error feedback.
+all-reduce ≈ exact with error feedback; sketch sharding
+(repro.parallel.sketch_sharding) == single-device sketches bit-for-bit;
+sketch merges are associative.
 """
 import os
 import subprocess
@@ -148,3 +150,232 @@ def test_compressed_allreduce_error_feedback():
         print("COMPRESS_OK")
     """)
     assert "COMPRESS_OK" in out
+
+
+# ---------------------------------------------------------------------------
+# Sketch sharding (repro.parallel.sketch_sharding): 8 forced host devices,
+# sharded state and query results must equal single-device bit-for-bit.
+# ---------------------------------------------------------------------------
+
+def test_sharded_race_matches_single_device():
+    out = _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import lsh, race
+        from repro.parallel import sketch_sharding as ss
+
+        L, W, d = 16, 32, 12
+        params = lsh.init_srp(jax.random.PRNGKey(0), d, L=L, k=3, n_buckets=W)
+        xs = jax.random.normal(jax.random.PRNGKey(1), (300, d))
+        qs = jax.random.normal(jax.random.PRNGKey(2), (7, d))
+
+        ref = race.race_update_batch(race.race_init(L, W), params, xs)
+        ref = race.race_update_batch(ref, params, xs[:50], sign=-1)  # turnstile
+
+        ctx = ss.make_sketch_ctx(ss.make_sketch_mesh(8))
+        st, p = ss.shard_race(race.race_init(L, W), params, ctx)
+        st = ss.sharded_race_update_batch(st, p, xs, ctx)
+        st = ss.sharded_race_update_batch(st, p, xs[:50], ctx, sign=-1)
+        assert (np.asarray(st.counts) == np.asarray(ref.counts)).all()
+        assert int(st.n) == int(ref.n)
+        for mom in (0, 4):
+            np.testing.assert_array_equal(
+                np.asarray(ss.sharded_race_query_batch(st, p, qs, ctx, mom)),
+                np.asarray(race.race_query_batch(ref, params, qs, mom)))
+        print("RACE_SHARDED_OK")
+    """)
+    assert "RACE_SHARDED_OK" in out
+
+
+def test_sharded_swakde_matches_single_device():
+    out = _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import lsh, swakde
+        from repro.parallel import sketch_sharding as ss
+
+        d = 10
+        cfg = swakde.SWAKDEConfig(L=8, W=32, window=120, eh_eps=0.15)
+        params = lsh.init_srp(jax.random.PRNGKey(0), d, L=8, k=2, n_buckets=32)
+        xs = jax.random.normal(jax.random.PRNGKey(1), (250, d))
+        qs = jax.random.normal(jax.random.PRNGKey(2), (6, d))
+
+        ref = swakde.swakde_init(cfg)
+        for i in range(0, 250, 100):   # uneven final chunk on purpose
+            ref = swakde.swakde_update_chunk(ref, params, xs[i:i+100], cfg)
+
+        ctx = ss.make_sketch_ctx(ss.make_sketch_mesh(8))
+        st, p = ss.shard_swakde(swakde.swakde_init(cfg), params, ctx)
+        for i in range(0, 250, 100):
+            st = ss.sharded_swakde_update_chunk(st, p, xs[i:i+100], cfg, ctx)
+        for a, b in zip(jax.tree.leaves(st), jax.tree.leaves(ref)):
+            assert (np.asarray(a) == np.asarray(b)).all()
+        np.testing.assert_array_equal(
+            np.asarray(ss.sharded_swakde_query_batch(st, p, qs, cfg, ctx)),
+            np.asarray(swakde.swakde_query_batch(ref, params, qs, cfg)))
+        print("SWAKDE_SHARDED_OK")
+    """)
+    assert "SWAKDE_SHARDED_OK" in out
+
+
+def test_sharded_sann_matches_single_device():
+    out = _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import sann
+        from repro.parallel import sketch_sharding as ss
+
+        d = 12
+        cfg = sann.SANNConfig(dim=d, n_max=2000, eta=0.35, r=0.8, c=2.0,
+                              w=1.6, L=16, k=4)
+        cfg, params, st0 = sann.sann_init(cfg, jax.random.PRNGKey(0))
+        stream = jnp.asarray(np.random.default_rng(1).uniform(
+            0, 1, (600, d)).astype(np.float32))
+        key = jax.random.PRNGKey(2)
+        qs = stream[:9] + 0.01
+
+        ref = sann.sann_insert_batch(st0, params, stream, key, cfg)
+        ref = sann.sann_delete(ref, params, stream[3], cfg)
+
+        ctx = ss.make_sketch_ctx(ss.make_sketch_mesh(8))
+        st, p = ss.shard_sann(st0, params, ctx)
+        st = ss.sharded_sann_insert_batch(st, p, stream, key, cfg, ctx)
+        st = ss.sharded_sann_delete(st, p, stream[3], cfg, ctx)
+        for nm, a, b in zip(ref._fields, st, ref):
+            assert (np.asarray(a) == np.asarray(b)).all(), nm
+
+        r_ref = sann.sann_query_batch(ref, params, qs, cfg)
+        r_sh = ss.sharded_sann_query_batch(st, p, qs, cfg, ctx)
+        for nm, a, b in zip(r_ref._fields, r_sh, r_ref):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                          err_msg=nm)
+        tk_ref = sann.sann_query_topk_batch(ref, params, qs, cfg, topk=10)
+        tk_sh = ss.sharded_sann_query_topk_batch(st, p, qs, cfg, ctx, topk=10)
+        np.testing.assert_array_equal(np.asarray(tk_sh[0]),
+                                      np.asarray(tk_ref[0]))
+        np.testing.assert_array_equal(np.asarray(tk_sh[1]),
+                                      np.asarray(tk_ref[1]))
+        print("SANN_SHARDED_OK")
+    """)
+    assert "SANN_SHARDED_OK" in out
+
+
+def test_sharded_services_match_single_device():
+    out = _run("""
+        import numpy as np
+        from repro.serve.retrieval import RetrievalConfig, RetrievalService
+        from repro.serve.kde_service import KDEServiceConfig, KDEService
+
+        rng = np.random.default_rng(0)
+        emb = rng.normal(0, 1, (700, 24)).astype(np.float32)
+        qs = emb[:5] + 0.01
+
+        kw = dict(dim=24, n_max=5000, eta=0.4, r=0.6, c=2.0, ingest_chunk=256)
+        r1 = RetrievalService(RetrievalConfig(**kw))
+        r8 = RetrievalService(RetrievalConfig(**kw, num_shards=8))
+        assert (r1.num_shards, r8.num_shards) == (1, 8)
+        r1.ingest(emb); r8.ingest(emb)
+        assert r1.stored == r8.stored
+        q1, q8 = r1.query(qs), r8.query(qs)
+        for nm, a, b in zip(q1._fields, q1, q8):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                          err_msg=nm)
+
+        kk = dict(dim=24, L=16, W=64, window=500, ingest_chunk=256)
+        k1 = KDEService(KDEServiceConfig(**kk))
+        k8 = KDEService(KDEServiceConfig(**kk, num_shards=8))
+        k1.ingest(emb); k8.ingest(emb)
+        np.testing.assert_array_equal(k1.density(qs), k8.density(qs))
+        print("SERVICES_SHARDED_OK")
+    """)
+    assert "SERVICES_SHARDED_OK" in out
+
+
+# ---------------------------------------------------------------------------
+# Merge APIs (multi-worker ingestion): single-device semantics, no mesh.
+# ---------------------------------------------------------------------------
+
+def test_race_merge_associative_commutative():
+    import jax
+    import numpy as np
+    from repro.core import lsh, race
+
+    params = lsh.init_srp(jax.random.PRNGKey(0), 8, L=6, k=2, n_buckets=16)
+    xs = jax.random.normal(jax.random.PRNGKey(1), (240, 8))
+    parts = [race.race_update_batch(race.race_init(6, 16), params, xs[i::3])
+             for i in range(3)]
+    a, b, c = parts
+
+    def eq(x, y):
+        return all((np.asarray(u) == np.asarray(v)).all()
+                   for u, v in zip(jax.tree.leaves(x), jax.tree.leaves(y)))
+
+    assert eq(race.race_merge(race.race_merge(a, b), c),
+              race.race_merge(a, race.race_merge(b, c)))
+    assert eq(race.race_merge(a, b), race.race_merge(b, a))
+    # merge of partition == one sketch over the whole stream (any order)
+    whole = race.race_update_batch(race.race_init(6, 16), params, xs)
+    merged = race.race_merge(race.race_merge(a, b), c)
+    assert (np.asarray(merged.counts) == np.asarray(whole.counts)).all()
+    assert int(merged.n) == int(whole.n)
+
+
+def test_swakde_merge_semantics():
+    """swakde_merge is the exact EH bucket-union merge: commutative bitwise,
+    mass-preserving, associative at the estimate level (bucket *structure*
+    may differ by one cascade level between groupings), and a merge of
+    sketches over disjoint sub-streams estimates the sum of their windows."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.core import lsh, swakde
+
+    d = 8
+    # window < substream length, so cells hold buckets at the expiry
+    # boundary (ts == t - 1 - window) — the case where the merge clock must
+    # match the query clock (state.t - 1), not state.t.
+    cfg = swakde.SWAKDEConfig(L=6, W=24, window=80, eh_eps=0.2)
+    params = lsh.init_srp(jax.random.PRNGKey(0), d, L=6, k=2, n_buckets=24)
+    xs = jax.random.normal(jax.random.PRNGKey(1), (300, d))
+    qs = jax.random.normal(jax.random.PRNGKey(2), (5, d))
+
+    # three workers over disjoint sub-streams, same shared clock length
+    parts = [swakde.swakde_update_chunk(swakde.swakde_init(cfg), params,
+                                        xs[i::3], cfg) for i in range(3)]
+    a, b, c = parts
+
+    ab = swakde.swakde_merge(a, b, cfg)
+    ba = swakde.swakde_merge(b, a, cfg)
+    for u, v in zip(jax.tree.leaves(ab), jax.tree.leaves(ba)):
+        assert (np.asarray(u) == np.asarray(v)).all()   # commutative bitwise
+
+    ab_c = swakde.swakde_merge(ab, c, cfg)
+    a_bc = swakde.swakde_merge(a, swakde.swakde_merge(b, c, cfg), cfg)
+
+    def mass(st):
+        eh = cfg.eh_config()
+        idx = np.arange(eh.slots)[None, :]
+        ts, num = np.asarray(st.ts), np.asarray(st.num)
+        # live at the query clock t - 1, the convention every reader uses
+        live = (idx < num[..., None]) & (ts > int(st.t) - 1 - cfg.window)
+        sizes = (1 << np.arange(eh.levels))[:, None]
+        return (live * sizes).sum(axis=(-2, -1))
+
+    np.testing.assert_array_equal(mass(ab_c), mass(a_bc))  # mass exact
+    e1 = np.asarray(swakde.swakde_query_batch(ab_c, params, qs, cfg))
+    e2 = np.asarray(swakde.swakde_query_batch(a_bc, params, qs, cfg))
+    np.testing.assert_allclose(e1, e2, rtol=2 * cfg.kde_eps, atol=1.0)
+
+    # identity: merging with an empty sketch changes no *live* state — the
+    # merge may compact buckets `a` only expires lazily, so the invariant
+    # is estimate equality (bitwise) + in-window mass, not raw num equality
+    empty = swakde.swakde_init(cfg)._replace(t=a.t)
+    ida = swakde.swakde_merge(a, empty, cfg)
+    np.testing.assert_array_equal(
+        np.asarray(swakde.swakde_query_batch(ida, params, qs, cfg)),
+        np.asarray(swakde.swakde_query_batch(a, params, qs, cfg)))
+    np.testing.assert_array_equal(mass(ida), mass(a))
+
+    # disjoint-substream correctness: merged window ≈ sum of part windows
+    est_m = np.asarray(swakde.swakde_query_batch(ab_c, params, qs, cfg))
+    est_sum = sum(np.asarray(swakde.swakde_query_batch(p_, params, qs, cfg))
+                  for p_ in parts)
+    np.testing.assert_allclose(est_m, est_sum,
+                               rtol=3 * cfg.kde_eps, atol=1.5)
