@@ -1,0 +1,152 @@
+"""Query-path benchmarks: fused batched engine vs the vmapped per-query
+baseline (paper §3.3 / Corollary 3.2 and Theorem 4.3 — the *query*-side
+guarantees are the headline; this suite is their throughput counterpart).
+
+For each sketch the same batch of queries is answered two ways:
+
+  query.<sketch>.B<B>.vmap   — `jax.vmap` over the per-query oracle
+                               (`sann_query` / `sann_query_topk` /
+                               `race_query` / `swakde_query`), the pre-PR-3
+                               implementation of the *_batch entry points;
+  query.<sketch>.B<B>.fused  — the batch-level fused engine (one hash
+                               matmul + one gather + batch-wide truncation
+                               / dedup / fused scorer or grid-precomputed
+                               EH reads).
+
+Both are jitted; ``derived`` carries queries-per-second and the fused-over-
+vmapped speedup.  Results are also written to ``BENCH_query.json``
+(override with REPRO_BENCH_OUT) so later PRs have a perf trajectory to
+compare against.  REPRO_BENCH_TINY=1 shrinks every size so the suite runs
+in seconds on CI CPUs (the bench-smoke job).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import lsh, race, sann, swakde
+from .common import syn_ppp, timeit
+
+TINY = os.environ.get("REPRO_BENCH_TINY") == "1"
+BATCHES = (1, 8) if TINY else (1, 64, 1024)
+N_POINTS = 512 if TINY else 4096
+OUT_PATH = os.environ.get("REPRO_BENCH_OUT", "BENCH_query.json")
+
+_json_rows: list[dict] = []
+
+
+def _pair(rows, name, B, us_vmap, us_fused):
+    """Emit the vmap/fused row pair (+ JSON mirror) for one batch size."""
+    for variant, us in (("vmap", us_vmap), ("fused", us_fused)):
+        qps = B * 1e6 / us
+        derived = f"qps={qps:.0f}"
+        if variant == "fused":
+            derived += f";speedup={us_vmap / us:.2f}"
+        rows.append((f"query.{name}.B{B}.{variant}", us, derived))
+        _json_rows.append({
+            "name": f"query.{name}.B{B}.{variant}", "sketch": name,
+            "batch": B, "variant": variant, "us_per_call": us,
+            "qps": qps, "speedup": (us_vmap / us) if variant == "fused"
+            else 1.0,
+        })
+
+
+def _build_sann(bucket_cap: int):
+    d = 16 if TINY else 48
+    cfg = sann.SANNConfig(dim=d, n_max=N_POINTS, eta=0.3, r=0.5, c=2.0,
+                          w=1.0, L=4 if TINY else 16, k=4,
+                          bucket_cap=bucket_cap)
+    cfg, params, st = sann.sann_init(cfg, jax.random.PRNGKey(0))
+    xs = jnp.asarray(syn_ppp(N_POINTS, d, seed=1))
+    st = sann.sann_insert_chunked(st, params, xs, jax.random.PRNGKey(2), cfg)
+    return cfg, params, st, xs
+
+
+def bench_sann(rows):
+    # (c, r) queries: dense-bucket regime (the paper's early-exit shines when
+    # buckets hold many colliding points — 3L of L*cap candidates scored).
+    cfg, params, st, xs = _build_sann(bucket_cap=8 if TINY else 64)
+    vmap_cr = jax.jit(lambda s, qs: jax.vmap(
+        lambda q: sann.sann_query(s, params, q, cfg))(qs))
+    fused_cr = jax.jit(lambda s, qs: sann.sann_query_batch(s, params, qs, cfg))
+    for B in BATCHES:
+        qs = xs[jnp.arange(B) % N_POINTS] + 0.01
+        _pair(rows, "sann.cr", B,
+              timeit(vmap_cr, st, qs, repeats=5),
+              timeit(fused_cr, st, qs, repeats=5))
+
+    # top-k recall queries score the *full* bucket union (no 3L truncation),
+    # so the (B, L*cap, d) gather dominates both engines — moderate caps.
+    cfg, params, st, xs = _build_sann(bucket_cap=8 if TINY else 16)
+    topk = 10
+    vmap_tk = jax.jit(lambda s, qs: jax.vmap(
+        lambda q: sann.sann_query_topk(s, params, q, cfg, topk))(qs))
+    fused_tk = jax.jit(
+        lambda s, qs: sann.sann_query_topk_batch(s, params, qs, cfg, topk))
+    for B in BATCHES:
+        qs = xs[jnp.arange(B) % N_POINTS] + 0.01
+        _pair(rows, "sann.topk", B,
+              timeit(vmap_tk, st, qs, repeats=5),
+              timeit(fused_tk, st, qs, repeats=5))
+
+
+def bench_race(rows):
+    d, L, W, k = 32, 8 if TINY else 48, 64, 2
+    params = lsh.init_srp(jax.random.PRNGKey(3), d, L=L, k=k, n_buckets=W)
+    xs = jnp.asarray(syn_ppp(N_POINTS, d, seed=4))
+    st = race.race_update_batch(race.race_init(L, W), params, xs)
+
+    vmapped = jax.jit(lambda s, qs: jax.vmap(
+        lambda q: race.race_query(s, params, q))(qs))
+    fused = jax.jit(lambda s, qs: race.race_query_batch(s, params, qs))
+    for B in BATCHES:
+        qs = xs[jnp.arange(B) % N_POINTS] + 0.01
+        _pair(rows, "race", B,
+              timeit(vmapped, st, qs, repeats=5),
+              timeit(fused, st, qs, repeats=5))
+
+
+def bench_swakde(rows):
+    # Long-window, tight-eps serving point (the sublinear-space headline
+    # regime: window ≫ stream chunk, eps' = 0.05 → ~12 slots × 18 levels
+    # per cell) with a compact-range row hash (W = 16, the canonical
+    # RACE/ACE small-range regime — cf. bench_ingest's W = 2 sign-bit
+    # rows): per-query reads cost B·L cell queries, the fused engine
+    # precomputes the L·W grid once B ≥ W.
+    d = 16
+    L, W = (4, 8) if TINY else (32, 16)
+    window = 256 if TINY else 65536
+    cfg = swakde.SWAKDEConfig(L=L, W=W, window=window,
+                              eh_eps=0.1 if TINY else 0.05)
+    params = lsh.init_srp(jax.random.PRNGKey(5), d, L=L, k=2, n_buckets=W)
+    xs = jax.random.normal(jax.random.PRNGKey(6), (N_POINTS, d))
+    st = swakde.swakde_stream_batched(swakde.swakde_init(cfg), params, xs,
+                                      cfg, chunk=min(1024, N_POINTS))
+
+    vmapped = jax.jit(lambda s, qs: jax.vmap(
+        lambda q: swakde.swakde_query(s, params, q, cfg))(qs))
+    fused = jax.jit(lambda s, qs: swakde.swakde_query_batch(s, params, qs, cfg))
+    for B in BATCHES:
+        qs = xs[jnp.arange(B) % N_POINTS] + 0.01
+        _pair(rows, "swakde", B,
+              timeit(vmapped, st, qs, repeats=5),
+              timeit(fused, st, qs, repeats=5))
+
+
+def run(rows):
+    _json_rows.clear()
+    bench_sann(rows)
+    bench_race(rows)
+    bench_swakde(rows)
+    payload = {
+        "suite": "query",
+        "backend": jax.default_backend(),
+        "tiny": TINY,
+        "batch_sizes": list(BATCHES),
+        "results": _json_rows,
+    }
+    with open(OUT_PATH, "w") as f:
+        json.dump(payload, f, indent=2)

@@ -2,7 +2,8 @@
 
 Prints ``name,us_per_call,derived`` CSV (assignment contract).
 Usage: PYTHONPATH=src python -m benchmarks.run
-       [--only ann|kde|kernels|ingest|sharded]
+       [--only ann|kde|kernels|ingest|sharded|query]
+(``query`` additionally writes BENCH_query.json — see bench_query.py.)
 """
 from __future__ import annotations
 
@@ -14,15 +15,15 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     choices=[None, "ann", "kde", "kernels", "ingest",
-                             "sharded"])
+                             "sharded", "query"])
     args = ap.parse_args()
 
     from . import (bench_ann, bench_ingest, bench_kde, bench_kernels,
-                   bench_sharded)
+                   bench_query, bench_sharded)
     rows: list[tuple] = []
     suites = {"ann": bench_ann.run, "kde": bench_kde.run,
               "kernels": bench_kernels.run, "ingest": bench_ingest.run,
-              "sharded": bench_sharded.run}
+              "sharded": bench_sharded.run, "query": bench_query.run}
     for name, fn in suites.items():
         if args.only and args.only != name:
             continue

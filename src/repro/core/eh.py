@@ -111,24 +111,37 @@ def eh_step(state: EHState, t: jax.Array, bit: jax.Array, cfg: EHConfig) -> EHSt
     return jax.tree.map(lambda a, b: jnp.where(keep, a, b), added, _expire(state, t, cfg))
 
 
+def eh_query_cells(ts: jax.Array, num: jax.Array, t: jax.Array,
+                   cfg: EHConfig) -> jax.Array:
+    """`eh_query` over a whole batch of cells in one pass.
+
+    ``ts (..., levels, slots)``, ``num (..., levels)`` → estimates ``(...)``
+    float32.  Bit-identical per cell to `eh_query` (same integer reductions,
+    broadcast over the leading axes) — this is what lets the batched query
+    engine (core.swakde.swakde_row_estimates_batch) precompute or gather
+    cell estimates grid-wide without a vmap per query."""
+    idx = jnp.arange(cfg.slots)
+    live = (idx < num[..., None]) & (ts > t - cfg.window)
+    sizes = (jnp.int32(1) << jnp.arange(cfg.levels, dtype=jnp.int32))[:, None]
+    total = jnp.sum(jnp.where(live, sizes, 0), axis=(-2, -1))
+    # Oldest live bucket = the live bucket at the highest level (sizes are
+    # age-monotone), i.e. the largest level with any live bucket.
+    has = live.any(axis=-1)
+    lvl = jnp.arange(cfg.levels)
+    last_level = jnp.max(jnp.where(has, lvl, -1), axis=-1)
+    last = jnp.where(last_level >= 0,
+                     jnp.int32(1) << last_level.astype(jnp.int32), 0)
+    est = total - last // 2
+    return jnp.maximum(est, 0).astype(jnp.float32)
+
+
 def eh_query(state: EHState, t: jax.Array, cfg: EHConfig) -> jax.Array:
     """DGIM estimate of #1s in (t - window, t]:  TOTAL - LAST/2.
 
     (Paper §2.4 states the formula once as TOTAL-LAST/2 and once as
     (TOTAL-LAST)/2; the former is DGIM's and is what we use.)
     """
-    idx = jnp.arange(cfg.slots)[None, :]
-    live = (idx < state.num[:, None]) & (state.ts > t - cfg.window)
-    sizes = (jnp.int32(1) << jnp.arange(cfg.levels, dtype=jnp.int32))[:, None]
-    total = jnp.sum(jnp.where(live, sizes, 0))
-    # Oldest live bucket = the live bucket at the highest level (sizes are
-    # age-monotone), i.e. the largest level with any live bucket.
-    has = live.any(axis=1)
-    lvl = jnp.arange(cfg.levels)
-    last_level = jnp.max(jnp.where(has, lvl, -1))
-    last = jnp.where(last_level >= 0, jnp.int32(1) << last_level.astype(jnp.int32), 0)
-    est = total - last // 2
-    return jnp.maximum(est, 0).astype(jnp.float32)
+    return eh_query_cells(state.ts, state.num, t, cfg)
 
 
 def eh_merge(a: EHState, b: EHState, t: jax.Array, cfg: EHConfig) -> EHState:

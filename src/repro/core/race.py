@@ -19,6 +19,7 @@ import jax.numpy as jnp
 
 from . import lsh
 from .util import saturating_add
+from repro.kernels import ops as kernel_ops
 
 
 class RACEState(NamedTuple):
@@ -62,7 +63,6 @@ def race_update_batch(state: RACEState, params, xs: jax.Array, sign: int = 1) ->
     histogram on TPU, scatter-add oracle on CPU) instead of materialising a
     (B, L, W) one-hot — counters are bit-identical to B single updates."""
     codes = lsh.hash_points(params, xs)                      # (B, L)
-    from repro.kernels import ops as kernel_ops
     hist = kernel_ops.race_hist(codes, state.counts.shape[1])
     counts = state.counts + jnp.int32(sign) * hist
     return RACEState(counts=counts,
@@ -98,9 +98,26 @@ def race_query(state: RACEState, params, q: jax.Array, median_of_means: int = 0)
     return estimate_from_vals(vals, median_of_means)
 
 
+def race_row_reads(state: RACEState, params, qs: jax.Array) -> jax.Array:
+    """Batched per-row counter reads: ``qs (B, d)`` → (B, L) float32.
+
+    One hash matmul + one gather for the whole batch — the fused read half
+    of the query path, shared by `race_query_batch` and the sharded query
+    (`repro.parallel.sketch_sharding.sharded_race_query_batch`, which runs
+    it per row shard and all-gathers)."""
+    codes = lsh.hash_points(params, qs)                      # (B, L)
+    L = state.counts.shape[0]
+    return state.counts[jnp.arange(L)[None, :], codes].astype(jnp.float32)
+
+
 def race_query_batch(state: RACEState, params, qs: jax.Array, median_of_means: int = 0):
-    """Vmapped `race_query`: ``qs (B, d) float32`` → (B,) float32."""
-    return jax.vmap(lambda q: race_query(state, params, q, median_of_means))(qs)
+    """Fused batch queries: ``qs (B, d) float32`` → (B,) float32.
+
+    One hash matmul + one counter gather for the whole batch
+    (`race_row_reads`) feeding the same `estimate_from_vals` reduction —
+    identical estimates to vmapping `race_query` over the batch."""
+    return estimate_from_vals(race_row_reads(state, params, qs),
+                              median_of_means)
 
 
 def race_kde(state: RACEState, params, q: jax.Array, median_of_means: int = 0) -> jax.Array:

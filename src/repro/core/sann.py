@@ -9,7 +9,8 @@ Faithful mechanics:
     candidates** (the paper's early-exit budget), return the closest if it is
     within c*r, else NULL;
   * turnstile deletions (§3.4): delete-by-value tombstones;
-  * batch queries (§3.3): vmap over the query set.
+  * batch queries (§3.3): the fused batch engine (below) — identical
+    results to running the per-query pipeline on each element.
 
 Hardware adaptation (DESIGN.md §5.2): pointer-chasing hash buckets become
 fixed-capacity **ring buffers** of point ids — `tables (L, n_buckets,
@@ -18,6 +19,15 @@ gather + one distance matmul (`repro.kernels.cand_score`).  The early-exit
 ("stop at 3L") becomes a post-gather priority truncation: we score the same
 <=3L candidates the sequential algorithm would, Lemma 3.2's Markov bound is
 unchanged.
+
+Query paths (DESIGN.md §9):
+  * ``sann_query`` / ``sann_query_topk`` — per-query reference semantics
+    (gather L buckets, truncate at 3L, score via `kernels.cand_score`);
+  * ``sann_query_batch`` / ``sann_query_topk_batch`` — the fused batch
+    engine: one hash matmul + one table gather for the whole batch,
+    batch-wide truncation/dedup, one fused scorer call
+    (`kernels.batch_score` on TPU).  Results are identical to the
+    per-query path (tests/test_query_batched.py).
 
 Ingest paths:
   * ``sann_insert`` / ``sann_insert_stream`` — the per-point reference
@@ -42,6 +52,7 @@ from jax import lax
 
 from . import lsh, theory
 from .util import saturating_add
+from repro.kernels import ops as kernel_ops
 
 
 @dataclasses.dataclass(frozen=True)
@@ -346,7 +357,6 @@ def sann_score_candidates(points: jax.Array, cand: jax.Array, ok: jax.Array,
     sel = order[:budget]
     cand, ok = cand[sel], ok[sel]
     vecs = points[jnp.maximum(cand, 0)]                         # (budget, dim)
-    from repro.kernels import ops as kernel_ops
     d2 = kernel_ops.cand_score(q, vecs)                         # (budget,)
     d2 = jnp.where(ok, d2, jnp.inf)
     best = jnp.argmin(d2)
@@ -370,11 +380,75 @@ def sann_query(state: SANNState, params, q: jax.Array, cfg: SANNConfig) -> SANNR
     return sann_score_candidates(state.points, cand, ok, q, 3 * cfg.L, cfg)
 
 
-def sann_query_batch(state: SANNState, params, qs: jax.Array, cfg: SANNConfig) -> SANNResult:
-    """Batch queries (§3.3 / Corollary 3.2) — embarrassingly parallel vmap.
+def sann_bucket_candidates_batch(state: SANNState, params, qs: jax.Array,
+                                 cfg: SANNConfig):
+    """Batched bucket gather: ``qs (B, d)`` → ``(cand (B, L*bucket_cap)
+    int32, ok (B, L*bucket_cap) bool)``.
 
-    ``qs (B, d) float32`` → `SANNResult` with (B,) fields."""
-    return jax.vmap(lambda q: sann_query(state, params, q, cfg))(qs)
+    One hash matmul + one table gather for the whole batch; per query the
+    candidate order is the same row-major table order as
+    `sann_bucket_candidates`, so the table-sharded path can all-gather
+    per-shard blocks along axis 1 and reproduce the single-device order."""
+    codes = lsh.hash_points(params, qs)                         # (B, L)
+    cand = state.tables[jnp.arange(cfg.L)[None, :], codes]      # (B, L, cap)
+    # explicit flat shape (not -1): keeps B = 0 batches reshapeable
+    cand = cand.reshape(qs.shape[0], cfg.L * cfg.bucket_cap)
+    ok = (cand >= 0) & state.valid[jnp.maximum(cand, 0)]
+    return cand, ok
+
+
+def sann_score_candidates_batch(points: jax.Array, cand: jax.Array,
+                                ok: jax.Array, qs: jax.Array, budget: int,
+                                cfg: SANNConfig) -> SANNResult:
+    """Batched truncate-and-score: the whole-batch form of
+    `sann_score_candidates`, returning a `SANNResult` with (B,) fields.
+
+    The per-query stable argsort that implemented the 3L truncation is
+    replaced by a masked cumulative-count keep rule evaluated batch-wide:
+    a candidate is kept iff it is valid and fewer than ``budget`` valid
+    candidates precede it in its row.  The keep positions are *located*
+    (rather than sorted into place) by a binary search on the row's
+    running valid count — ``searchsorted(cumsum(ok), j+1)`` is the column
+    of the j-th valid candidate — which costs O(B·budget·log C) instead of
+    the O(B·C·log C) sort (and avoids XLA/CPU's slow scatter and top_k;
+    see the ingest-side precedent in `sann_insert_batch`).  The compacted
+    ``(B, budget)`` block preserves table order, so scoring it with the
+    fused batch scorer (`repro.kernels.ops.batch_score_topk`, k = 1 ⇒
+    masked argmin) returns results identical to vmapping
+    `sann_score_candidates` (tests/test_query_batched.py)."""
+    C = cand.shape[1]
+    budget_eff = min(budget, C)
+    csum = jnp.cumsum(ok, axis=1).astype(jnp.int32)         # running count
+    targets = jnp.arange(1, budget_eff + 1, dtype=jnp.int32)
+    sel = jax.vmap(lambda a: jnp.searchsorted(a, targets, side="left"))(csum)
+    sel_ok = sel < C                   # j-th valid exists ⇔ search stayed in
+    sel = jnp.minimum(sel, C - 1)
+    sel_cand = jnp.where(sel_ok, jnp.take_along_axis(cand, sel, axis=1), -1)
+    vecs = points[jnp.maximum(sel_cand, 0)]                 # (B, budget, dim)
+    d2, idx = kernel_ops.batch_score_topk(qs, vecs, sel_ok, 1)  # (B, 1) each
+    dist = jnp.sqrt(d2[:, 0])
+    found = dist <= cfg.c * cfg.r
+    best = jnp.take_along_axis(sel_cand, idx, axis=1)[:, 0]
+    return SANNResult(
+        index=jnp.where(found, best, -1),
+        distance=jnp.where(found, dist, jnp.inf),
+        found=found,
+        n_candidates=jnp.minimum(csum[:, -1], budget).astype(jnp.int32),
+    )
+
+
+def sann_query_batch(state: SANNState, params, qs: jax.Array, cfg: SANNConfig) -> SANNResult:
+    """Batch queries (§3.3 / Corollary 3.2) — fused batch-level pipeline.
+
+    ``qs (B, d) float32`` → `SANNResult` with (B,) fields.  One hash matmul
+    and one table gather cover the whole batch
+    (`sann_bucket_candidates_batch`), the 3L truncation is a batch-wide
+    keep-mask, and scoring is one fused kernel call
+    (`sann_score_candidates_batch`) — results identical to vmapping
+    `sann_query` per query (which remains the oracle path)."""
+    cand, ok = sann_bucket_candidates_batch(state, params, qs, cfg)
+    return sann_score_candidates_batch(state.points, cand, ok, qs,
+                                       3 * cfg.L, cfg)
 
 
 def sann_bytes(cfg: SANNConfig) -> int:
@@ -403,7 +477,6 @@ def sann_query_topk(state: SANNState, params, q: jax.Array, cfg: SANNConfig,
     cand = state.tables[rows, codes].reshape(-1)
     ok = (cand >= 0) & state.valid[jnp.maximum(cand, 0)]
     vecs = state.points[jnp.maximum(cand, 0)]
-    from repro.kernels import ops as kernel_ops
     d2 = jnp.where(ok, kernel_ops.cand_score(q, vecs), jnp.inf)
     # dedup identical slots: keep first occurrence
     sort_idx = jnp.argsort(cand)
@@ -417,7 +490,44 @@ def sann_query_topk(state: SANNState, params, q: jax.Array, cfg: SANNConfig,
     return ids, jnp.sqrt(-neg)
 
 
+def _first_occurrence_mask(cand: jax.Array, capacity: int) -> jax.Array:
+    """Batch-wide duplicate-slot mask: True at the first occurrence (lowest
+    column) of each slot id per row of ``cand (B, C)`` — the batched form of
+    the per-query sort-and-compare dedup in `sann_query_topk`, identical
+    masks.
+
+    When the slot-id range is small enough, first occurrences come from a
+    scatter-min of column positions keyed by slot id — O(B·(C + capacity))
+    and no sort.  Otherwise one batched stable argsort along the candidate
+    axis marks duplicates exactly like the per-query path."""
+    B, C = cand.shape
+    rows = jnp.arange(B, dtype=jnp.int32)[:, None]
+    pos = jnp.broadcast_to(jnp.arange(C, dtype=jnp.int32), (B, C))
+    if capacity + 1 <= max(4096, 8 * C):
+        # cand ∈ [-1, capacity) → key range [0, capacity]; -1 gets its own key
+        first = jnp.full((B, capacity + 1), C, jnp.int32).at[
+            rows, cand + 1].min(pos)
+        return first[rows, cand + 1] == pos
+    order = jnp.argsort(cand, axis=1)                      # stable
+    sorted_c = jnp.take_along_axis(cand, order, axis=1)
+    dup = jnp.concatenate(
+        [jnp.zeros((B, 1), bool), sorted_c[:, 1:] == sorted_c[:, :-1]], axis=1)
+    return jnp.zeros_like(dup).at[rows, order].set(~dup)
+
+
 def sann_query_topk_batch(state, params, qs, cfg: SANNConfig, topk: int = 50):
-    """Vmapped `sann_query_topk`: ``qs (B, d)`` → ``(ids (B, k), dists
-    (B, k))`` with the same padding/ordering contract."""
-    return jax.vmap(lambda q: sann_query_topk(state, params, q, cfg, topk))(qs)
+    """Batched `sann_query_topk`: ``qs (B, d)`` → ``(ids (B, k), dists
+    (B, k))`` with the same padding/ordering contract.
+
+    Fused batch-level pipeline: one hash matmul + one gather for all B
+    queries, batch-wide duplicate-slot dedup (`_first_occurrence_mask`),
+    and one fused masked top-k scorer call — identical outputs to vmapping
+    `sann_query_topk` per query (which remains the oracle path)."""
+    cand, ok = sann_bucket_candidates_batch(state, params, qs, cfg)
+    mask = ok & _first_occurrence_mask(cand, state.points.shape[0])
+    vecs = state.points[jnp.maximum(cand, 0)]              # (B, C, dim)
+    k = min(topk, cand.shape[1])
+    d2, idx = kernel_ops.batch_score_topk(qs, vecs, mask, k)   # (B, k) each
+    ids = jnp.where(jnp.isfinite(d2), jnp.take_along_axis(cand, idx, axis=1),
+                    -1)
+    return ids, jnp.sqrt(d2)

@@ -37,10 +37,11 @@ from jax import lax
 
 from . import lsh
 from .eh import (
-    EHConfig, EHState, eh_add, eh_init, eh_merge, eh_query,
+    EHConfig, EHState, eh_add, eh_init, eh_merge, eh_query, eh_query_cells,
     SumEHConfig, SumEHState, sum_eh_add, sum_eh_init, sum_eh_query,
 )
 from .util import saturating_add
+from repro.kernels import ops as kernel_ops
 
 
 @dataclasses.dataclass(frozen=True)
@@ -195,6 +196,56 @@ def swakde_row_estimates(state: SWAKDEState, params, q: jax.Array,
     return jax.vmap(lambda s: eh_query(s, state.t - 1, eh))(cell)
 
 
+def swakde_grid_estimates(state: SWAKDEState, cfg: SWAKDEConfig) -> jax.Array:
+    """EH window counts of **every** cell in the grid → (L, W) float32.
+
+    One vectorised `eh_query_cells` pass over the (L, W) grid at the query
+    clock ``t - 1``.  O(L·W·levels·slots) regardless of the batch size —
+    once B ≥ W this is cheaper than reading B·L cells, and the per-cell
+    arithmetic is identical to `eh_query`, so estimates read from this
+    table are bit-identical to the per-query path."""
+    return eh_query_cells(state.ts, state.num, state.t - 1, cfg.eh_config())
+
+
+def swakde_row_estimates_batch(state: SWAKDEState, params, qs: jax.Array,
+                               cfg: SWAKDEConfig) -> jax.Array:
+    """Batched per-row EH window counts: ``qs (B, d)`` → (B, L) float32.
+
+    The fused read path: one hash matmul for the whole batch, then either
+
+      * B ≥ W — precompute the full (L, W) estimate table
+        (`swakde_grid_estimates`, O(L·W) cell queries) and gather (B, L)
+        entries, or
+      * B < W — gather the (B, L) hit cells once and run one batched
+        `eh_query_cells` over them (O(B·L) cell queries);
+
+    both branches are bit-identical to vmapping `swakde_row_estimates`
+    over the batch (tests/test_query_batched.py checks each).  Shared by
+    `swakde_query_batch` and the sharded query path
+    (`repro.parallel.sketch_sharding.sharded_swakde_query_batch`)."""
+    codes = lsh.hash_points(params, qs)                 # (B, L) — one matmul
+    rows = jnp.arange(cfg.L)[None, :]
+    if qs.shape[0] >= cfg.W:
+        grid = swakde_grid_estimates(state, cfg)
+        if cfg.W <= 256:
+            # Read the table through a one-hot contraction rather than a
+            # gather: XLA (CPU at least) fuses a gather into its producer
+            # and recomputes the cell queries per (b, l) read — the O(B·L)
+            # cell work this branch exists to avoid — while a dot forces
+            # the (L, W) table to materialise once.  Exact: each one-hot
+            # row has a single 1, so the contraction *is* the gather.
+            onehot = (codes[..., None] == jnp.arange(cfg.W)).astype(
+                grid.dtype)                             # (B, L, W)
+            return jnp.einsum("lw,blw->bl", grid, onehot)
+        # Large-W fallback: the B·L·W one-hot would dominate; a fusion
+        # barrier still keeps the per-read recompute mostly at bay.
+        grid = lax.optimization_barrier(grid)
+        return grid[rows, codes]
+    cell_ts = state.ts[rows, codes]                     # (B, L, levels, slots)
+    cell_num = state.num[rows, codes]                   # (B, L, levels)
+    return eh_query_cells(cell_ts, cell_num, state.t - 1, cfg.eh_config())
+
+
 def swakde_query(state: SWAKDEState, params, q: jax.Array, cfg: SWAKDEConfig) -> jax.Array:
     """Average of the L EH estimates — the paper's SW-AKDE estimator Ŷ.
 
@@ -203,8 +254,12 @@ def swakde_query(state: SWAKDEState, params, q: jax.Array, cfg: SWAKDEConfig) ->
 
 
 def swakde_query_batch(state: SWAKDEState, params, qs: jax.Array, cfg: SWAKDEConfig):
-    """Vmapped `swakde_query`: ``qs (B, d) float32`` → (B,) float32."""
-    return jax.vmap(lambda q: swakde_query(state, params, q, cfg))(qs)
+    """Fused batch queries: ``qs (B, d) float32`` → (B,) float32.
+
+    One hash matmul + one row gather for the whole batch
+    (`swakde_row_estimates_batch`) instead of a vmap over the per-query
+    pipeline; estimates are bit-identical to vmapping `swakde_query`."""
+    return swakde_row_estimates_batch(state, params, qs, cfg).mean(-1)
 
 
 def swakde_merge(a: SWAKDEState, b: SWAKDEState, cfg: SWAKDEConfig) -> SWAKDEState:
@@ -286,7 +341,6 @@ def batch_swakde_update(
     number of batch elements hashing to it (0..R)."""
     eh = cfg.eh_config()
     codes = lsh.hash_points(params, batch)                # (R, L)
-    from repro.kernels import ops as kernel_ops
     incr = kernel_ops.race_hist(codes, cfg.W)             # (L, W)
 
     def upd_cell(ts, num, v):

@@ -1,6 +1,6 @@
 """Pallas TPU kernels (compute hot-spots) + jnp oracles.
 
-Modules: srp_hash, race_update, cand_score, sketch_decode_attn; `ops` is the
-dispatching public API, `ref` holds the pure-jnp oracles.
+Modules: srp_hash, race_update, cand_score, batch_score, sketch_decode_attn;
+`ops` is the dispatching public API, `ref` holds the pure-jnp oracles.
 """
 from . import ops, ref  # noqa: F401

@@ -1,0 +1,110 @@
+"""Pallas TPU kernel: fused batched candidate scoring for the query engine.
+
+The batched query path (core.sann.sann_query_batch / sann_query_topk_batch)
+gathers, for a whole block of B queries at once, each query's candidate
+vectors — a ``(B, M, d)`` tensor.  This kernel scores the entire block in
+one pass:
+
+  * squared L2 via the MXU matmul identity ``‖q‖² + ‖c‖² − 2 qᵀc`` — one
+    batched ``(TB, d) × (TB, TM, d)`` contraction per grid step instead of
+    materialising the ``(TB, TM, d)`` difference tensor;
+  * a masked **fused top-k** (k = 1 ⇒ argmin) carried across the M tiles in
+    the revisited output block, so the full ``(B, M)`` distance matrix never
+    leaves VMEM.
+
+Grid: ``(B tiles, M tiles)`` with M innermost; the ``(TB, k)`` output block
+is revisited across the M tiles (TPU grids run sequentially, so the running
+top-k accumulation is safe — same pattern as `race_update.race_hist`).
+
+Tie-breaking: within one M tile, equal distances resolve to the lowest
+candidate index (like `lax.top_k` on the full matrix); across tiles, an
+earlier tile's candidate wins over an equal-distance later one.  The only
+divergence from the unfused oracle is therefore exact distance ties that
+span tile boundaries — duplicate slots in S-ANN are deduplicated *before*
+scoring, so the engine never depends on that order.
+
+Numerics: the matmul identity loses ~1e-6 absolute on d2 to cancellation
+(clamped at 0), vs the diff-based oracle `ref.batch_score_ref` — same
+tolerance class as `cand_score` (tests/test_kernels.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .dispatch import resolve_interpret
+
+
+def _kernel(q_ref, c_ref, ok_ref, od_ref, oi_ref, *, k: int, M: int, tm: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _():
+        od_ref[...] = jnp.full_like(od_ref, jnp.inf)
+        oi_ref[...] = jnp.zeros_like(oi_ref)
+
+    q = q_ref[...].astype(jnp.float32)                    # (TB, d)
+    c = c_ref[...].astype(jnp.float32)                    # (TB, TM, d)
+    ok = ok_ref[...] != 0                                 # (TB, TM)
+    qn = jnp.sum(q * q, axis=-1, keepdims=True)           # (TB, 1)
+    cn = jnp.sum(c * c, axis=-1)                          # (TB, TM)
+    # One batched MXU contraction: qc[b, m] = q[b] · c[b, m].
+    qc = jax.lax.dot_general(
+        q, c, (((1,), (2,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)               # (TB, TM)
+    d2 = jnp.maximum(qn + cn - 2.0 * qc, 0.0)
+    gidx = j * tm + jax.lax.broadcasted_iota(jnp.int32, d2.shape, 1)
+    d2 = jnp.where(ok & (gidx < M), d2, jnp.inf)          # mask + M padding
+
+    # Merge the tile into the running (TB, k) top-k held in the output block.
+    all_d = jnp.concatenate([od_ref[...], d2], axis=1)    # (TB, k + TM)
+    all_i = jnp.concatenate([oi_ref[...], gidx], axis=1)
+    neg, sel = jax.lax.top_k(-all_d, k)
+    od_ref[...] = -neg
+    oi_ref[...] = jnp.take_along_axis(all_i, sel, axis=1)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "block_b", "block_m", "interpret"))
+def batch_score_topk(
+    qs: jax.Array,       # (B, d)
+    cands: jax.Array,    # (B, M, d) — per-query candidate vectors
+    ok: jax.Array,       # (B, M) bool — score mask (False ⇒ distance inf)
+    k: int,
+    block_b: int = 128,
+    block_m: int = 256,
+    interpret: Optional[bool] = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Masked squared-L2 top-k per query: ``(d2 (B, k) ascending, idx (B, k)
+    int32 into M)``.  Fully-masked rows return d2 = inf, idx = 0."""
+    interpret = resolve_interpret(interpret)
+    B, M, d = cands.shape
+    if B == 0 or M == 0:   # empty batch/candidates: no grid to launch
+        return (jnp.full((B, k), jnp.inf, jnp.float32),
+                jnp.zeros((B, k), jnp.int32))
+    tb = min(block_b, B)
+    tm = min(block_m, M)
+    grid = (pl.cdiv(B, tb), pl.cdiv(M, tm))
+    out_d, out_i = pl.pallas_call(
+        functools.partial(_kernel, k=k, M=M, tm=tm),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tb, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((tb, tm, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((tb, tm), lambda i, j: (i, j)),
+        ],
+        out_specs=(
+            pl.BlockSpec((tb, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((tb, k), lambda i, j: (i, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((B, k), jnp.float32),
+            jax.ShapeDtypeStruct((B, k), jnp.int32),
+        ),
+        interpret=interpret,
+    )(qs, cands, ok.astype(jnp.int32))
+    return out_d, out_i

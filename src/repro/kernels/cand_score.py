@@ -7,10 +7,13 @@ distances computed in fp32 on the VPU, one tile of candidates per grid step.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from .dispatch import resolve_interpret
 
 
 def _kernel(q_ref, c_ref, o_ref):
@@ -25,8 +28,12 @@ def cand_score(
     q: jax.Array,        # (d,)
     cands: jax.Array,    # (M, d)
     block_m: int = 256,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> jax.Array:
+    # None = derive from the backend (interpret off on real TPUs), the same
+    # policy ops.py applies — a literal True default silently handed direct
+    # callers the Python-level Pallas emulator on TPU.
+    interpret = resolve_interpret(interpret)
     M, d = cands.shape
     tm = min(block_m, M)
     out = pl.pallas_call(

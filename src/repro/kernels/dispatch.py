@@ -1,0 +1,36 @@
+"""Kernel dispatch policy — the single source of truth.
+
+TPU backends run compiled Pallas kernels; on every other backend the
+Pallas interpreter is a Python-level emulator (correct but slow), so the
+pure-jnp oracles (`ref.py`) are preferred and interpret mode is only used
+when explicitly requested.  ``REPRO_FORCE_PALLAS=1`` forces the Pallas
+path off-TPU (interpret mode) — what tests/test_kernels.py uses to
+compare kernels against the oracles.
+
+Both `ops.py` (oracle-vs-kernel routing) and every kernel wrapper's
+``interpret=None`` default resolve through here, so the policy cannot
+drift between call sites.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def use_pallas() -> bool:
+    """Route through the Pallas kernel (vs the jnp oracle)?"""
+    if os.environ.get("REPRO_FORCE_PALLAS") == "1":
+        return True
+    return on_tpu()
+
+
+def resolve_interpret(interpret: Optional[bool]) -> bool:
+    """``None`` → derive from the backend: compiled on real TPUs,
+    interpret mode everywhere else."""
+    return (not on_tpu()) if interpret is None else interpret

@@ -1,6 +1,6 @@
 """Jitted public wrappers for the Pallas kernels.
 
-Dispatch policy:
+Dispatch policy (single source of truth: `dispatch.py`):
   * on TPU backends → compiled Pallas kernels;
   * on CPU → the pure-jnp oracle (`ref.py`) by default, because Pallas
     interpret mode is a Python-level emulator (correct but slow) — set
@@ -9,26 +9,20 @@ Dispatch policy:
 """
 from __future__ import annotations
 
-import os
-
 import jax
 import jax.numpy as jnp
 
+from . import batch_score as _bs
 from . import cand_score as _cs
 from . import race_update as _ru
 from . import ref
 from . import sketch_decode_attn as _sda
 from . import srp_hash as _sh
-
-
-def _use_pallas() -> bool:
-    if os.environ.get("REPRO_FORCE_PALLAS") == "1":
-        return True
-    return jax.default_backend() == "tpu"
+from .dispatch import resolve_interpret, use_pallas as _use_pallas
 
 
 def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
+    return resolve_interpret(None)
 
 
 def srp_hash(x: jax.Array, proj: jax.Array, mix: jax.Array, n_buckets: int) -> jax.Array:
@@ -64,6 +58,21 @@ def cand_score(q: jax.Array, cands: jax.Array) -> jax.Array:
     if _use_pallas():
         return _cs.cand_score(q, cands, interpret=_interpret())
     return ref.cand_score_ref(q, cands)
+
+
+def batch_score_topk(qs: jax.Array, cands: jax.Array, ok: jax.Array,
+                     k: int) -> tuple[jax.Array, jax.Array]:
+    """Fused batched scorer: masked squared-L2 top-k of ``cands (B, M, d)``
+    against ``qs (B, d)`` → ``(d2 (B, k) ascending, idx (B, k) int32)``.
+
+    k = 1 is the argmin of the (c, r)-query path.  TPU: one Pallas pass
+    (MXU matmul identity, running top-k across M tiles).  CPU: the
+    diff-based oracle — bit-identical to the per-query `cand_score` path,
+    which is what makes the fused engine exactly match the vmapped oracle
+    in tests/test_query_batched.py."""
+    if _use_pallas():
+        return _bs.batch_score_topk(qs, cands, ok, k, interpret=_interpret())
+    return ref.batch_score_topk_ref(qs, cands, ok, k)
 
 
 def sketch_decode_attn(q, k, v, block_ids, n_live, kv_len,

@@ -12,10 +12,13 @@ chunk (TPU grids execute sequentially, so accumulation is safe).
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from .dispatch import resolve_interpret
 
 
 def _kernel(codes_ref, o_ref, *, B: int, cb: int):
@@ -39,9 +42,11 @@ def race_hist(
     codes: jax.Array,      # (B, L) int32
     W: int,
     block_b: int = 256,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> jax.Array:
     """Histogram of codes per row: out[l, w] = #{b : codes[b, l] == w}."""
+    # None = derive from the backend, the same policy ops.py applies.
+    interpret = resolve_interpret(interpret)
     B, L = codes.shape
     cb = min(block_b, B)
     grid = (L, pl.cdiv(B, cb))

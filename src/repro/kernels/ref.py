@@ -38,6 +38,26 @@ def cand_score_ref(q: jax.Array, cands: jax.Array) -> jax.Array:
     return jnp.sum((c - q[None, :]) ** 2, axis=-1)
 
 
+def batch_score_ref(qs: jax.Array, cands: jax.Array) -> jax.Array:
+    """qs (B, d), cands (B, M, d) → squared L2 distances (B, M) in fp32.
+
+    Diff-based (no matmul identity): the batched form of `cand_score_ref`,
+    bit-identical to vmapping it over the B axis."""
+    q = qs.astype(jnp.float32)
+    c = cands.astype(jnp.float32)
+    return jnp.sum((c - q[:, None, :]) ** 2, axis=-1)
+
+
+def batch_score_topk_ref(qs: jax.Array, cands: jax.Array, ok: jax.Array,
+                         k: int) -> tuple[jax.Array, jax.Array]:
+    """Masked squared-L2 top-k per query (k = 1 ⇒ argmin): ``(d2 (B, k)
+    ascending, idx (B, k) int32 into M)``.  Masked entries score inf; ties
+    resolve to the lowest candidate index (`lax.top_k` semantics)."""
+    d2 = jnp.where(ok, batch_score_ref(qs, cands), jnp.inf)
+    neg, idx = jax.lax.top_k(-d2, k)
+    return -neg, idx.astype(jnp.int32)
+
+
 def sketch_decode_attn_ref(
     q: jax.Array,            # (Hkv, G, dh)
     k: jax.Array,            # (S, Hkv, dh)

@@ -19,11 +19,15 @@ index map clamps to block 0 and Mosaic elides revisited loads).
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
 from jax.experimental.pallas import tpu as pltpu
+
+from .dispatch import resolve_interpret
 
 
 def _kernel(
@@ -83,8 +87,10 @@ def sketch_decode_attn(
     kv_len: jax.Array,      # (1,) int32
     block_size: int = 512,
     softcap: float = 0.0,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> jax.Array:
+    # None = derive from the backend, the same policy ops.py applies.
+    interpret = resolve_interpret(interpret)
     Hkv, G, dh = q.shape
     S = k.shape[0]
     assert S % block_size == 0, (S, block_size)

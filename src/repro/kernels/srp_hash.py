@@ -11,10 +11,13 @@ Grid: 1-D over tiles of the batch dimension.  proj/mix are small enough
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from .dispatch import resolve_interpret
 
 _MIX = 2654435761  # python int: materialised inside the kernel trace
 
@@ -38,8 +41,10 @@ def srp_hash(
     mix: jax.Array,          # (L, k) uint32
     n_buckets: int,
     block_b: int = 128,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> jax.Array:
+    # None = derive from the backend, the same policy ops.py applies.
+    interpret = resolve_interpret(interpret)
     B, d = x.shape
     L, k = mix.shape
     tb = min(block_b, B)

@@ -216,7 +216,8 @@ def sharded_race_query_batch(state: race.RACEState, params, qs: jax.Array,
                              median_of_means: int = 0) -> jax.Array:
     """Sharded batched query ``qs (B, d)`` → (B,) float32.
 
-    Each device reads its rows' counters, the (B, L_local) blocks are
+    Each device runs the fused batched read (`race.race_row_reads` — one
+    hash matmul + one gather) on its row block, the (B, L_local) blocks are
     all-gathered into the full (B, L) value matrix in row order, and the
     single-device reduction `estimate_from_vals` runs replicated —
     bit-identical to `race_query_batch`."""
@@ -225,8 +226,7 @@ def sharded_race_query_batch(state: race.RACEState, params, qs: jax.Array,
     Lsh = _check_rows(params.L, _num_shards(ctx), "RACE")
 
     def body(st, p, qs):
-        codes = lsh.hash_points(_local_params(p, Lsh), qs)      # (B, Lsh)
-        vals = st.counts[jnp.arange(Lsh), codes].astype(jnp.float32)
+        vals = race.race_row_reads(st, _local_params(p, Lsh), qs)  # (B, Lsh)
         vals = lax.all_gather(vals, SHARD_AXIS, axis=1, tiled=True)  # (B, L)
         return race.estimate_from_vals(vals, median_of_means)
 
@@ -269,8 +269,10 @@ def sharded_swakde_query_batch(state: swakde.SWAKDEState, params,
                                ctx: ShardingCtx) -> jax.Array:
     """Sharded batched query ``qs (B, d)`` → (B,) float32 (unnormalised Ŷ).
 
-    Per-device row estimates → all-gather to (B, L) in row order → the same
-    mean the single-device estimator takes.  Bit-identical to
+    Per-device fused batched row estimates
+    (`swakde.swakde_row_estimates_batch` — one hash matmul + one gather,
+    grid-precompute when B ≥ W) → all-gather to (B, L) in row order → the
+    same mean the single-device estimator takes.  Bit-identical to
     `swakde_query_batch` (the EH-merge-style combine across devices reduces
     to concatenation because row cells are never split)."""
     if ctx.mesh is None:
@@ -279,9 +281,8 @@ def sharded_swakde_query_batch(state: swakde.SWAKDEState, params,
     cfg_local = dataclasses.replace(cfg, L=Lsh)
 
     def body(st, p, qs):
-        p = _local_params(p, Lsh)
-        vals = jax.vmap(
-            lambda q: swakde.swakde_row_estimates(st, p, q, cfg_local))(qs)
+        vals = swakde.swakde_row_estimates_batch(
+            st, _local_params(p, Lsh), qs, cfg_local)            # (B, Lsh)
         vals = lax.all_gather(vals, SHARD_AXIS, axis=1, tiled=True)  # (B, L)
         return vals.mean(-1)
 
@@ -347,26 +348,25 @@ def sharded_sann_query_batch(state: sann.SANNState, params, qs: jax.Array,
                              ctx: ShardingCtx) -> sann.SANNResult:
     """Sharded (c, r)-queries ``qs (B, d)`` → `SANNResult` with (B,) fields.
 
-    Each device gathers its tables' candidate blocks
-    (`sann_bucket_candidates`); all-gather concatenates them in shard order
-    — which *is* the single-device row-major candidate order — and the
-    single-device truncate-and-score (`sann_score_candidates`, 3L budget
-    with the global L) runs replicated.  Bit-identical to
-    `sann_query_batch`."""
+    Each device runs the fused batched bucket gather on its table block
+    (`sann_bucket_candidates_batch` — one hash matmul + one gather for the
+    whole batch); all-gather concatenates the (B, L_local·cap) blocks in
+    shard order — which *is* the single-device row-major candidate order —
+    and the batched truncate-and-score (`sann_score_candidates_batch`, 3L
+    budget with the global L, fused scorer kernel) runs replicated.
+    Bit-identical to `sann_query_batch`."""
     if ctx.mesh is None:
         return sann.sann_query_batch(state, params, qs, cfg)
     Lsh = _check_rows(cfg.L, _num_shards(ctx), "S-ANN")
     cfg_local = dataclasses.replace(cfg, L=Lsh)
 
     def body(st, p, qs):
-        p = _local_params(p, Lsh)
-        cand, ok = jax.vmap(
-            lambda q: sann.sann_bucket_candidates(st, p, q, cfg_local))(qs)
+        cand, ok = sann.sann_bucket_candidates_batch(
+            st, _local_params(p, Lsh), qs, cfg_local)
         cand = lax.all_gather(cand, SHARD_AXIS, axis=1, tiled=True)
         ok = lax.all_gather(ok, SHARD_AXIS, axis=1, tiled=True)
-        return jax.vmap(
-            lambda q, c, o: sann.sann_score_candidates(
-                st.points, c, o, q, 3 * cfg.L, cfg))(qs, cand, ok)
+        return sann.sann_score_candidates_batch(
+            st.points, cand, ok, qs, 3 * cfg.L, cfg)
 
     return _smap(
         body, ctx.mesh,
@@ -380,7 +380,8 @@ def sharded_sann_query_topk_batch(state: sann.SANNState, params,
                                   ctx: ShardingCtx, topk: int = 50):
     """Sharded top-k ``qs (B, d)`` → ``(ids (B, k), dists (B, k))`` with
     ``k = min(topk, L * bucket_cap)`` — the cross-device combine is a
-    top-k merge: per-shard `sann_query_topk` results are all-gathered,
+    top-k merge: per-shard fused `sann_query_topk_batch` results are
+    all-gathered,
     duplicate slot ids (a point stored in tables on two shards) are masked
     to inf, and a final top-k selects across shards.  Exact: every global
     top-k entry is in its own shard's local top-k, and distances are
@@ -409,9 +410,8 @@ def sharded_sann_query_topk_batch(state: sann.SANNState, params,
         return out_ids, -neg
 
     def body(st, p, qs):
-        p = _local_params(p, Lsh)
-        ids, dists = jax.vmap(
-            lambda q: sann.sann_query_topk(st, p, q, cfg_local, topk))(qs)
+        ids, dists = sann.sann_query_topk_batch(
+            st, _local_params(p, Lsh), qs, cfg_local, topk)
         ids = lax.all_gather(ids, SHARD_AXIS, axis=1, tiled=True)
         dists = lax.all_gather(dists, SHARD_AXIS, axis=1, tiled=True)
         return merge(ids, dists)

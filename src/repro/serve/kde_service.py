@@ -47,6 +47,11 @@ class KDEServiceConfig:
     # Batched-ingest chunk: one swakde_update_chunk call per chunk; each
     # distinct partial-chunk size triggers one extra jit trace.
     ingest_chunk: int = 1024
+    # Query block: queries run through the fused batch engine
+    # (core.swakde.swakde_query_batch — one hash matmul + one row gather
+    # per block, grid-precompute once block ≥ W) in blocks of this many
+    # rows; each distinct partial-block size triggers one extra jit trace.
+    query_block: int = 1024
     # Multi-device sharding: num_shards > 1 splits the L rows across that
     # many local devices (L must divide evenly); ``mesh`` overrides with a
     # prebuilt 1-D ("shard",) mesh.  Both unset → single-device.
@@ -97,18 +102,27 @@ class KDEService:
             for i in range(0, xs.shape[0], chunk):
                 self.state = self._update(self.state, xs[i:i + chunk])
 
+    def _query_blocks(self, state, qs: jnp.ndarray) -> np.ndarray:
+        qb = max(1, self.cfg.query_block)
+        out = [self._query(state, qs[i:i + qb])
+               for i in range(0, qs.shape[0], qb)]
+        if not out:                       # B = 0: one empty-engine call
+            return np.asarray(self._query(state, qs))
+        return np.asarray(out[0] if len(out) == 1 else jnp.concatenate(out))
+
     def query(self, queries: np.ndarray) -> np.ndarray:
-        """Batched unnormalised window-density estimates Ŷ (Thm 4.1)."""
-        out = self._query(self.state, jnp.asarray(queries, jnp.float32))
-        return np.asarray(out)
+        """Batched unnormalised window-density estimates Ŷ (Thm 4.1),
+        served through the fused batch engine in ``query_block`` blocks."""
+        return self._query_blocks(self.state,
+                                  jnp.asarray(queries, jnp.float32))
 
     def density(self, queries: np.ndarray) -> np.ndarray:
         """Normalised sliding-window density: Ŷ / min(t, N)."""
         with self._lock:  # snapshot state + t together vs concurrent ingest
             state = self.state
         denom = max(min(int(state.t), self.cfg.window), 1)
-        out = self._query(state, jnp.asarray(queries, jnp.float32))
-        return np.asarray(out) / float(denom)
+        out = self._query_blocks(state, jnp.asarray(queries, jnp.float32))
+        return out / float(denom)
 
     @property
     def steps(self) -> int:

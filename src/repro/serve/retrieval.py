@@ -46,6 +46,11 @@ class RetrievalConfig:
     # scatter (core.sann.sann_insert_batch).  Larger chunks amortise more;
     # each distinct partial-chunk size triggers one extra jit trace.
     ingest_chunk: int = 1024
+    # Query block: queries are served through the fused batch engine
+    # (core.sann.sann_query_batch) in blocks of this many rows — bounds the
+    # (block, 3L, dim) scoring footprint; each distinct partial-block size
+    # triggers one extra jit trace.
+    query_block: int = 1024
     # Multi-device sharding: num_shards > 1 splits the L tables across that
     # many local devices (L must divide evenly); ``mesh`` overrides with a
     # prebuilt 1-D ("shard",) mesh.  Both unset → single-device.
@@ -63,6 +68,7 @@ class RetrievalService:
         self.cfg, self.params, self.state = sann.sann_init(
             base, jax.random.PRNGKey(cfg.seed))
         self._chunk = cfg.ingest_chunk
+        self._query_block = max(1, cfg.query_block)
         self._key = jax.random.PRNGKey(cfg.seed + 1)
         self._lock = threading.Lock()
 
@@ -101,8 +107,18 @@ class RetrievalService:
             self.state = self._delete(self.state, jnp.asarray(embedding))
 
     def query(self, queries: np.ndarray) -> sann.SANNResult:
-        """Batched queries (paper §3.3) — embarrassingly parallel."""
-        return self._query(self.state, jnp.asarray(queries, jnp.float32))
+        """Batched queries (paper §3.3) through the fused batch engine, in
+        blocks of ``query_block`` rows (one hash matmul + one gather + one
+        fused scorer call per block)."""
+        qs = jnp.asarray(queries, jnp.float32)
+        state, qb = self.state, self._query_block
+        out = [self._query(state, qs[i:i + qb])
+               for i in range(0, qs.shape[0], qb)]
+        if not out:                       # B = 0: one empty-engine call
+            return self._query(state, qs)
+        if len(out) == 1:
+            return out[0]
+        return sann.SANNResult(*(jnp.concatenate(f) for f in zip(*out)))
 
     @property
     def stored(self) -> int:
