@@ -19,23 +19,47 @@ conflict-resolving update per chunk) for all three sketches:
 
 Emits ``name,us_per_call,derived`` CSV rows (benchmarks.run contract);
 ``derived`` carries points-per-second and the batched-over-sequential
-speedup at each chunk size.
+speedup at each chunk size.  Results are also merged into
+``BENCH_ingest.json`` (override with REPRO_BENCH_INGEST_OUT; shared with
+bench_pipeline.py — same schema style as BENCH_query.json) so later PRs
+have an ingest-perf trajectory to compare against.  REPRO_BENCH_TINY=1
+shrinks every size so the suite runs in seconds on CI CPUs.
 """
 from __future__ import annotations
+
+import os
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import lsh, race, sann, swakde
-from .common import syn_ppp, timeit
+from .common import syn_ppp, timeit, update_bench_json
 
-N_POINTS = 4096
-CHUNKS = (256, 1024, 4096)
-WINDOW_PTS = 2048  # SW-AKDE sliding window, in stream points
+TINY = os.environ.get("REPRO_BENCH_TINY") == "1"
+N_POINTS = 1024 if TINY else 4096
+CHUNKS = (256, 1024) if TINY else (256, 1024, 4096)
+WINDOW_PTS = 512 if TINY else 2048  # SW-AKDE sliding window, in stream points
+OUT_PATH = os.environ.get("REPRO_BENCH_INGEST_OUT", "BENCH_ingest.json")
+
+_json_rows: list[dict] = []
 
 
 def _pps(us: float) -> float:
     return N_POINTS * 1e6 / us
+
+
+def _emit(rows, name, sketch, variant, chunk, us, us_seq=None):
+    """CSV row + JSON mirror for one measurement (us_seq → speedup)."""
+    derived = f"pps={_pps(us):.0f}"
+    speedup = 1.0
+    if us_seq is not None:
+        speedup = us_seq / us
+        derived += f";speedup={speedup:.1f}"
+    rows.append((name, us, derived))
+    _json_rows.append({
+        "name": name, "sketch": sketch, "variant": variant, "chunk": chunk,
+        "us_per_call": us, "pps": _pps(us), "speedup": speedup,
+    })
 
 
 def bench_race(rows):
@@ -50,8 +74,7 @@ def bench_race(rows):
         return jax.lax.scan(step, st, stream)[0]
 
     us_seq = timeit(jax.jit(seq), st0, xs, repeats=5)
-    rows.append((f"ingest.race.seq.n{N_POINTS}", us_seq,
-                 f"pps={_pps(us_seq):.0f}"))
+    _emit(rows, f"ingest.race.seq.n{N_POINTS}", "race", "seq", 0, us_seq)
 
     for chunk in CHUNKS:
         def batched(st, stream, chunk=chunk):
@@ -60,8 +83,8 @@ def bench_race(rows):
             return jax.lax.scan(step, st, stream.reshape(-1, chunk, d))[0]
 
         us = timeit(jax.jit(batched), st0, xs, repeats=5)
-        rows.append((f"ingest.race.batch{chunk}", us,
-                     f"pps={_pps(us):.0f};speedup={us_seq/us:.1f}"))
+        _emit(rows, f"ingest.race.batch{chunk}", "race", "batch", chunk,
+              us, us_seq)
 
 
 def bench_swakde(rows):
@@ -74,8 +97,7 @@ def bench_swakde(rows):
     us_seq = timeit(
         jax.jit(lambda st, s: swakde.swakde_stream(st, params, s, cfg)),
         st0, xs, repeats=5)
-    rows.append((f"ingest.swakde.seq.n{N_POINTS}", us_seq,
-                 f"pps={_pps(us_seq):.0f}"))
+    _emit(rows, f"ingest.swakde.seq.n{N_POINTS}", "swakde", "seq", 0, us_seq)
 
     # Production batched path — Corollary 4.2: one EH timestep per chunk,
     # window measured in batches at the same point horizon.
@@ -91,16 +113,16 @@ def bench_swakde(rows):
             return jax.lax.scan(step, st, stream.reshape(-1, chunk, d))[0]
 
         us = timeit(jax.jit(batched), bst0, xs, repeats=5)
-        rows.append((f"ingest.swakde.batch{chunk}", us,
-                     f"pps={_pps(us):.0f};speedup={us_seq/us:.1f}"))
+        _emit(rows, f"ingest.swakde.batch{chunk}", "swakde", "batch", chunk,
+              us, us_seq)
 
     # Exact chunked replay: bit-identical to the per-point path (same
     # per-point timestamps), still one grid traversal per chunk.
     us = timeit(
         jax.jit(lambda st, s: swakde.swakde_update_chunk(st, params, s, cfg)),
         st0, xs, repeats=5)
-    rows.append((f"ingest.swakde.exact{N_POINTS}", us,
-                 f"pps={_pps(us):.0f};speedup={us_seq/us:.1f}"))
+    _emit(rows, f"ingest.swakde.exact{N_POINTS}", "swakde", "exact",
+          N_POINTS, us, us_seq)
 
 
 def bench_sann(rows):
@@ -115,8 +137,7 @@ def bench_sann(rows):
         jax.jit(lambda st, s, k:
                 sann.sann_insert_stream(st, params, s, k, cfg)),
         st0, xs, key, repeats=5)
-    rows.append((f"ingest.sann.seq.n{N_POINTS}", us_seq,
-                 f"pps={_pps(us_seq):.0f}"))
+    _emit(rows, f"ingest.sann.seq.n{N_POINTS}", "sann", "seq", 0, us_seq)
 
     for chunk in CHUNKS:
         us = timeit(
@@ -124,11 +145,14 @@ def bench_sann(rows):
                     sann.sann_insert_chunked(st, params, s, k, cfg,
                                              chunk=chunk)),
             st0, xs, key, repeats=5)
-        rows.append((f"ingest.sann.batch{chunk}", us,
-                     f"pps={_pps(us):.0f};speedup={us_seq/us:.1f}"))
+        _emit(rows, f"ingest.sann.batch{chunk}", "sann", "batch", chunk,
+              us, us_seq)
 
 
 def run(rows):
+    _json_rows.clear()
     bench_race(rows)
     bench_swakde(rows)
     bench_sann(rows)
+    update_bench_json(OUT_PATH, "ingest", _json_rows, tiny=TINY,
+                      chunk_sizes=list(CHUNKS))

@@ -1,0 +1,102 @@
+"""Pipelined vs sequential two-phase ingest (the serve-layer engine).
+
+`repro.serve.engine.SketchEngine` splits every ingest chunk into a pure
+*prepare* phase (hashing + per-chunk precomputation) and a sequential
+*commit* phase, and overlaps prepare of chunk k+1 with commit of chunk k
+on a dedicated prepare thread (double-buffering).  This suite measures the
+end-to-end service ingest throughput both ways — identical work, identical
+final state (tests/test_engine.py pins bit-identity); the only difference
+is the overlap:
+
+  pipeline.sann.*    — RetrievalService.  The headline regime: the chunk's
+                       packed sort (prepare) and the table segment scatter
+                       (commit) are both serial ops on XLA CPU, so the two
+                       phases genuinely run on separate cores.  On the
+                       2-core CI shape this measures ~1.2-1.3x.
+  pipeline.swakde.*  — KDEService.  The EH replay loop dominates commit and
+                       is internally parallel, so overlap buys little on
+                       2 cores (~1.0x) — reported for honesty; the gap is
+                       the motivation for the TPU-side ingest kernels on
+                       the roadmap.
+
+Steady-state methodology: the service is built and fully ingested once
+(compiles every jit, fills the ring), then the same stream is re-ingested
+``repeats`` times and the median wall time is reported.  Emits
+``name,us_per_call,derived`` CSV rows; results merge into
+``BENCH_ingest.json`` (same artifact as bench_ingest.py; override with
+REPRO_BENCH_INGEST_OUT).  REPRO_BENCH_TINY=1 shrinks sizes for CI.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from .common import update_bench_json
+
+TINY = os.environ.get("REPRO_BENCH_TINY") == "1"
+OUT_PATH = os.environ.get("REPRO_BENCH_INGEST_OUT", "BENCH_ingest.json")
+REPEATS = 3 if TINY else 5
+
+_json_rows: list[dict] = []
+
+
+def _ingest_time(svc, data, repeats: int) -> float:
+    """Median wall µs of a steady-state re-ingest (jits warm, ring full)."""
+    svc.ingest(data)                      # compile + fill
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        svc.ingest(data)                  # ingest == ingest_async + flush
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(ts))
+
+
+def _pair(rows, name, data, make_service):
+    n_points = data.shape[0]
+    us = {pipelined: _ingest_time(make_service(pipelined), data, REPEATS)
+          for pipelined in (False, True)}
+    for pipelined, variant in ((False, "sequential"), (True, "pipelined")):
+        u = us[pipelined]
+        pps = n_points * 1e6 / u
+        derived = f"pps={pps:.0f}"
+        speedup = us[False] / u
+        if variant == "pipelined":
+            derived += f";speedup={speedup:.2f}"
+        rows.append((f"pipeline.{name}.{variant}", u, derived))
+        _json_rows.append({
+            "name": f"pipeline.{name}.{variant}", "sketch": name,
+            "variant": variant, "n_points": n_points, "us_per_call": u,
+            "pps": pps, "speedup": speedup,
+        })
+
+
+def bench_sann(rows):
+    from repro.serve.retrieval import RetrievalConfig, RetrievalService
+    N = 4096 if TINY else 32768
+    d, L, k, eta, chunk, cap = ((16, 8, 3, 0.5, 512, 8) if TINY
+                                else (32, 32, 4, 0.6, 4096, 8))
+    data = np.random.default_rng(0).uniform(0, 1, (N, d)).astype(np.float32)
+    _pair(rows, "sann", data, lambda pipelined: RetrievalService(
+        RetrievalConfig(dim=d, n_max=N, eta=eta, r=0.5, c=2.0, w=1.0, L=L,
+                        k=k, bucket_cap=cap, ingest_chunk=chunk,
+                        pipelined=pipelined)))
+
+
+def bench_swakde(rows):
+    from repro.serve.kde_service import KDEService, KDEServiceConfig
+    N = 2048 if TINY else 16384
+    d, L, W, chunk, window = ((8, 4, 32, 256, 512) if TINY
+                              else (32, 8, 64, 1024, 8192))
+    data = np.random.default_rng(1).normal(0, 1, (N, d)).astype(np.float32)
+    _pair(rows, "swakde", data, lambda pipelined: KDEService(
+        KDEServiceConfig(dim=d, L=L, W=W, window=window, eh_eps=0.1,
+                         ingest_chunk=chunk, pipelined=pipelined)))
+
+
+def run(rows):
+    _json_rows.clear()
+    bench_sann(rows)
+    bench_swakde(rows)
+    update_bench_json(OUT_PATH, "ingest", _json_rows, tiny=TINY)

@@ -7,11 +7,36 @@ Monte-Carlo Gaussian-mixture protocol for KDE.
 """
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+
+def update_bench_json(path: str, suite: str, rows: list, **meta) -> None:
+    """Merge benchmark ``rows`` (dicts with a unique ``"name"``) into the
+    JSON file at ``path`` — the BENCH_*.json contract established by
+    bench_query.py: ``{"suite", "backend", "tiny", ..., "results": [...]}``.
+
+    Read-modify-write keyed by row name, so suites that share one artifact
+    (e.g. bench_ingest + bench_pipeline → BENCH_ingest.json) can run
+    independently and re-runs replace their own rows."""
+    payload: dict = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                payload = json.load(f)
+        except (OSError, ValueError):
+            payload = {}
+    fresh = {r["name"] for r in rows}
+    kept = [r for r in payload.get("results", []) if r["name"] not in fresh]
+    payload.update({"suite": suite, "backend": jax.default_backend(), **meta})
+    payload["results"] = kept + rows
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
 
 
 def timeit(fn, *args, repeats: int = 3, warmup: int = 1):

@@ -2,10 +2,13 @@
 an S-ANN retrieval service indexes the stream of its hidden states — the
 paper's sketch as first-class serving infrastructure.
 
-The service ingests through the chunked batched path (one hash matmul + one
-segment scatter per ``ingest_chunk`` rows — `core.sann.sann_insert_batch`):
-a synthetic document corpus is streamed in first (several chunks), then the
-decode loop streams its per-step states into the same index.
+The service ingests through the two-phase pipelined path (`serve.engine
+.SketchEngine`: prepare — hash matmul + sort — of chunk k+1 overlaps the
+commit of chunk k): the synthetic document corpus is submitted with
+``ingest_async`` and the decode loop starts immediately; queries during
+the bulk load see a committed prefix of the corpus, and ``flush()`` later
+guarantees the full corpus is in — the state is bit-identical to a
+synchronous ``ingest``.
 
 ``--num-shards N`` demos the sharded service (`repro.parallel
 .sketch_sharding`): the L hash tables are split across N devices — on a
@@ -65,19 +68,21 @@ def main():
     print(f"retrieval service: {retr.num_shards} shard(s), "
           f"ingest_chunk={args.ingest_chunk}")
 
-    # Pre-ingest a document corpus through the chunked batched path:
-    # ceil(corpus / ingest_chunk) sann_insert_batch calls, one hash matmul
-    # each — the serving-side bulk-load pattern.
+    # Submit the document corpus asynchronously: the engine's prepare
+    # thread hashes chunk k+1 while chunk k commits, and the decode loop
+    # below starts while the tail of the corpus is still loading.
     rng = np.random.default_rng(7)
     corpus = rng.normal(0, 1, (args.corpus, cfg.d_model)).astype(np.float32)
     corpus /= np.linalg.norm(corpus, axis=1, keepdims=True) + 1e-6
     t0 = time.time()
-    retr.ingest(corpus)
-    jax.block_until_ready(retr.state)   # ingest dispatches asynchronously
-    dt = time.time() - t0
-    print(f"bulk ingest: {args.corpus} docs in "
+    retr.ingest_async(corpus)
+    print(f"bulk load submitted: {args.corpus} docs in "
           f"{-(-args.corpus // args.ingest_chunk)} chunks "
-          f"({args.corpus / dt:.0f} docs/s), stored={retr.stored}")
+          f"(committed so far: {retr.version})")
+    retr.flush()                        # wait for every chunk to commit
+    dt = time.time() - t0
+    print(f"bulk ingest flushed: {args.corpus / dt:.0f} docs/s, "
+          f"stored={retr.stored}")
 
     tokens = jax.random.randint(jax.random.PRNGKey(1), (B, 1), 0, cfg.vocab)
     t0 = time.time()

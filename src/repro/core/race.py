@@ -56,17 +56,42 @@ def race_update(state: RACEState, params, x: jax.Array, sign: int = 1) -> RACESt
     return RACEState(counts=counts, n=saturating_add(state.n, sign))
 
 
+class RACEPrep(NamedTuple):
+    """Pure per-chunk precomputation (the *prepare* phase of the two-phase
+    ingest contract, DESIGN.md §10): everything about a chunk that does not
+    depend on sketch state, so preparing chunk k+1 can overlap committing
+    chunk k."""
+    hist: jax.Array    # (L, W) int32 — per-chunk bucket histogram
+    count: jax.Array   # () int32 — chunk size B
+
+
+def race_prepare_chunk(params, xs: jax.Array, n_buckets: int) -> RACEPrep:
+    """Prepare phase: hash ``xs (B, d)`` (one matmul) and histogram the codes
+    (`repro.kernels.ops.race_hist` — Pallas one-hot-compare on TPU,
+    scatter-add oracle on CPU).  State-independent and therefore pure: safe
+    to run ahead of (or concurrently with) any number of pending commits."""
+    codes = lsh.hash_points(params, xs)                      # (B, L)
+    return RACEPrep(hist=kernel_ops.race_hist(codes, n_buckets),
+                    count=jnp.int32(xs.shape[0]))
+
+
+def race_commit_chunk(state: RACEState, prep: RACEPrep,
+                      sign: int = 1) -> RACEState:
+    """Commit phase: fold a prepared chunk into the counters — the only
+    state-sequential part of a RACE update (one dense add)."""
+    counts = state.counts + jnp.int32(sign) * prep.hist
+    return RACEState(counts=counts,
+                     n=saturating_add(state.n, sign * prep.count))
+
+
 def race_update_batch(state: RACEState, params, xs: jax.Array, sign: int = 1) -> RACEState:
     """Batched turnstile update: xs (B, d), one hash matmul + one histogram.
 
-    Routes through `repro.kernels.ops.race_hist` (Pallas one-hot-compare
-    histogram on TPU, scatter-add oracle on CPU) instead of materialising a
-    (B, L, W) one-hot — counters are bit-identical to B single updates."""
-    codes = lsh.hash_points(params, xs)                      # (B, L)
-    hist = kernel_ops.race_hist(codes, state.counts.shape[1])
-    counts = state.counts + jnp.int32(sign) * hist
-    return RACEState(counts=counts,
-                     n=saturating_add(state.n, sign * xs.shape[0]))
+    Composition of `race_prepare_chunk` and `race_commit_chunk` (the same
+    ops, fused under one jit) — counters are bit-identical to B single
+    updates."""
+    prep = race_prepare_chunk(params, xs, state.counts.shape[1])
+    return race_commit_chunk(state, prep, sign)
 
 
 def estimate_from_vals(vals: jax.Array, median_of_means: int = 0) -> jax.Array:

@@ -39,6 +39,12 @@ Ingest paths:
     state is bit-identical to replaying ``sann_insert`` point by point
     (tests/test_batched_ingest.py), but costs O(1) XLA steps per chunk
     instead of O(chunk).
+  * ``sann_prepare_chunk`` / ``sann_commit_chunk`` — the two-phase form of
+    the same contract (DESIGN.md §10): prepare is the pure half (keep
+    decisions, prefix ranks, hashing, the sorted append structure), commit
+    rebases it on the live pointers; ``sann_insert_batch`` is their
+    composition, and the serving engine overlaps prepare of chunk k+1 with
+    commit of chunk k.
 """
 from __future__ import annotations
 
@@ -177,51 +183,56 @@ def sann_insert_stream(state: SANNState, params, xs: jax.Array, key: jax.Array,
     return state
 
 
-def sann_insert_batch(state: SANNState, params, xs: jax.Array, key: jax.Array,
-                      cfg: SANNConfig) -> SANNState:
-    """Batched ingest of a whole chunk ``xs (B, d)`` in O(1) XLA steps.
+class SANNPrep(NamedTuple):
+    """Pure per-chunk precomputation (the *prepare* phase of the two-phase
+    ingest contract, DESIGN.md §10): keep decisions, relative slot ranks,
+    hash codes and the sort-by-(row, code) append structure.  Everything
+    here depends only on (params, chunk, key) — never on sketch state — so
+    preparing chunk k+1 can overlap committing chunk k.  Slot ids and ring
+    positions are *relative* (ranks); the commit rebases them on the
+    state's write/table pointers."""
+    xs: jax.Array          # (B, d) float32 — the chunk (points to store)
+    keep: jax.Array        # (B,) bool — Bernoulli keep decisions
+    kept_rank: jax.Array   # (B,) int32 — exclusive prefix sum over keep
+    n_kept: jax.Array      # () int32
+    winner: jax.Array      # (B,) bool — keep & survives intra-chunk ring lap
+    s_l: jax.Array         # (B*L,) int32 — sorted append rows
+    s_c: jax.Array         # (B*L,) int32 — sorted append codes
+    s_b: jax.Array         # (B*L,) int32 — sorted append point index
+    rank: jax.Array        # (B*L,) int32 — within-bucket append rank
+    entry_win: jax.Array   # (B*L,) bool — append survives the ring cap
+    counts: jax.Array      # (L, n_buckets) int32 — per-bucket append counts
 
-    Bit-identical to ``sann_insert_stream`` under the same key (the chunk
-    shares the per-point ``jax.random.split`` schedule):
 
-      1. one Bernoulli draw per point from the split keys → ``keep`` mask;
-      2. slots via an exclusive prefix sum over kept points (the sequential
-         write pointer, vectorised), last-writer-wins when the ring wraps
-         within the chunk;
-      3. stale table entries pointing at recycled slots are tombstoned in
-         one masked pass (the batched form of the per-insert eviction);
-      4. ring-buffer appends: flatten (point, row) pairs, sort by
-         (row, code) so each bucket's appends are a contiguous run in
-         stream order, place rank r at ring position (ptr + r) % cap, and
-         resolve wrap collisions by max-rank (the last sequential writer).
+def sann_prepare_chunk(params, xs: jax.Array, key: jax.Array,
+                       cfg: SANNConfig) -> SANNPrep:
+    """Prepare phase for ``xs (B, d)``: the state-independent half of
+    `sann_insert_batch` —
+
+      1. one Bernoulli draw per point from the split keys → ``keep`` mask,
+         exclusive prefix ranks, and the last-writer-wins mask for chunks
+         that lap the ring (``winner``: the kept points within one full lap
+         of the chunk's end — a pure function of ranks and capacity);
+      2. one hash matmul for the whole chunk;
+      3. the ring-buffer append structure: flatten (point, row) pairs, sort
+         by (row, code) so each bucket's appends are a contiguous run in
+         stream order, with per-bucket append counts and the cap-survivor
+         mask (``rank >= seg_total - bucket_cap``).
     """
     B = xs.shape[0]
     cap = cfg.capacity
     keys = jax.random.split(key, B)
     keep = jax.vmap(lambda k: jax.random.bernoulli(k, cfg.keep_prob))(keys)
 
-    # --- slot assignment: prefix sum over kept points -----------------------
+    # --- slot ranks: prefix sum over kept points ---------------------------
     kept_rank = (jnp.cumsum(keep) - keep).astype(jnp.int32)  # exclusive
-    slot = (state.write_ptr + kept_rank) % cap               # (B,)
     n_kept = keep.sum().astype(jnp.int32)
     # Last writer per slot wins (matters only when the chunk laps the ring);
     # ranks assign slots round-robin, so the shadowed writers are exactly
     # the kept points more than one full lap from the end.
     winner = keep & (kept_rank >= n_kept - cap)
-    win_slot = jnp.where(winner, slot, cap)                  # OOB → dropped
 
-    points = state.points.at[win_slot].set(xs, mode="drop")
-    # Slots recycled this chunk form the ring interval
-    # [write_ptr + max(0, n_kept - cap), write_ptr + n_kept).
-    ring_off = (jnp.arange(cap, dtype=jnp.int32) - state.write_ptr) % cap
-    overwritten = ring_off < n_kept
-    valid = state.valid | overwritten
-
-    # --- tombstone stale references to every slot recycled this chunk ------
-    stale = (state.tables >= 0) & overwritten[jnp.maximum(state.tables, 0)]
-    tables = jnp.where(stale, jnp.int32(-1), state.tables)
-
-    # --- ring-buffer appends: sort-by-(row, code) segment scatter ----------
+    # --- ring-buffer appends: sort-by-(row, code) segment structure --------
     codes = lsh.hash_points(params, xs)                      # (B, L)
     l_idx = jnp.broadcast_to(jnp.arange(cfg.L, dtype=jnp.int32), (B, cfg.L))
     bucket_key = l_idx * cfg.n_buckets + codes               # (B, L)
@@ -252,9 +263,6 @@ def sann_insert_batch(state: SANNState, params, xs: jax.Array, key: jax.Array,
     rank = pos_idx - lax.cummax(jnp.where(seg_start, pos_idx, 0))
     s_l = jnp.minimum(s_key // cfg.n_buckets, cfg.L - 1)     # clamp sentinel
     s_c = s_key % cfg.n_buckets
-    ring_pos = (state.table_ptr[s_l, s_c] + rank) % cfg.bucket_cap
-    flat_target = (s_l * cfg.n_buckets + s_c) * cfg.bucket_cap + ring_pos
-    tsize = jnp.int32(tables.size)
     # Per-bucket append counts (also the table_ptr advance).  Within a
     # bucket the appends at ring positions r, r+cap, ... shadow each other;
     # the survivors are the last `bucket_cap` ranks.
@@ -262,22 +270,77 @@ def sann_insert_batch(state: SANNState, params, xs: jax.Array, key: jax.Array,
         l_idx, codes].add(kept_flat.reshape(B, cfg.L).astype(jnp.int32))
     seg_total = counts[s_l, s_c]
     entry_win = s_kept & (rank >= seg_total - cfg.bucket_cap)
+    return SANNPrep(xs=xs, keep=keep, kept_rank=kept_rank, n_kept=n_kept,
+                    winner=winner, s_l=s_l, s_c=s_c, s_b=s_b, rank=rank,
+                    entry_win=entry_win, counts=counts)
+
+
+def sann_commit_chunk(state: SANNState, prep: SANNPrep,
+                      cfg: SANNConfig) -> SANNState:
+    """Commit phase: rebase a prepared chunk on the state's pointers and
+    apply the dense updates — the state-sequential half of
+    `sann_insert_batch`:
+
+      1. slots = write_ptr + prepared ranks (mod capacity); point-store and
+         valid-mask scatters;
+      2. stale table entries pointing at slots recycled this chunk are
+         tombstoned in one masked pass (the batched per-insert eviction);
+      3. ring-buffer appends land at (table_ptr + prepared rank) % cap via
+         one segment scatter; table_ptr advances by the prepared counts.
+    """
+    B = prep.xs.shape[0]
+    cap = cfg.capacity
+    slot = (state.write_ptr + prep.kept_rank) % cap          # (B,)
+    win_slot = jnp.where(prep.winner, slot, cap)             # OOB → dropped
+
+    points = state.points.at[win_slot].set(prep.xs, mode="drop")
+    # Slots recycled this chunk form the ring interval
+    # [write_ptr + max(0, n_kept - cap), write_ptr + n_kept).
+    ring_off = (jnp.arange(cap, dtype=jnp.int32) - state.write_ptr) % cap
+    overwritten = ring_off < prep.n_kept
+    valid = state.valid | overwritten
+
+    # --- tombstone stale references to every slot recycled this chunk ------
+    stale = (state.tables >= 0) & overwritten[jnp.maximum(state.tables, 0)]
+    tables = jnp.where(stale, jnp.int32(-1), state.tables)
+
+    # --- ring-buffer appends: prepared segment scatter ---------------------
+    ring_pos = (state.table_ptr[prep.s_l, prep.s_c] + prep.rank) \
+        % cfg.bucket_cap
+    flat_target = (prep.s_l * cfg.n_buckets + prep.s_c) * cfg.bucket_cap \
+        + ring_pos
+    tsize = jnp.int32(tables.size)
     # A loser point's entries are appended then tombstoned by the later
     # overwrite of its slot — net effect: the ring cell holds -1.
-    val = jnp.where(winner[s_b], slot[s_b], jnp.int32(-1))
+    val = jnp.where(prep.winner[prep.s_b], slot[prep.s_b], jnp.int32(-1))
     tables = tables.reshape(-1).at[
-        jnp.where(entry_win, flat_target, tsize)].set(
+        jnp.where(prep.entry_win, flat_target, tsize)].set(
         val, mode="drop").reshape(tables.shape)
-    table_ptr = state.table_ptr + counts
+    table_ptr = state.table_ptr + prep.counts
 
-    newly = winner & ~state.valid[jnp.where(winner, slot, 0)]
+    newly = prep.winner & ~state.valid[jnp.where(prep.winner, slot, 0)]
     return SANNState(
         points=points, valid=valid,
-        write_ptr=(state.write_ptr + n_kept) % cap,
+        write_ptr=(state.write_ptr + prep.n_kept) % cap,
         n_seen=saturating_add(state.n_seen, B),
         n_stored=state.n_stored + newly.sum(),
         tables=tables, table_ptr=table_ptr,
     )
+
+
+def sann_insert_batch(state: SANNState, params, xs: jax.Array, key: jax.Array,
+                      cfg: SANNConfig) -> SANNState:
+    """Batched ingest of a whole chunk ``xs (B, d)`` in O(1) XLA steps.
+
+    Bit-identical to ``sann_insert_stream`` under the same key (the chunk
+    shares the per-point ``jax.random.split`` schedule).  Composition of
+    `sann_prepare_chunk` (keep decisions + hashing + sort-by-(row, code)
+    append structure, pure) and `sann_commit_chunk` (pointer rebase + dense
+    scatters, sequential) — the same ops, fused under one jit when called
+    directly.
+    """
+    return sann_commit_chunk(state, sann_prepare_chunk(params, xs, key, cfg),
+                             cfg)
 
 
 def sann_insert_chunked(state: SANNState, params, xs: jax.Array,

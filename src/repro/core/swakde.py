@@ -25,6 +25,11 @@ Ingest paths:
     read and written **once per chunk** instead of once per point, and the
     result is bit-identical to the per-point path
     (tests/test_batched_ingest.py).
+  * ``swakde_prepare_chunk`` / ``swakde_commit_chunk`` — the two-phase form
+    of the same contract (DESIGN.md §10): prepare is the pure hash + sort
+    half (timestamps as chunk-relative offsets), commit the sequential EH
+    replay; ``swakde_update_chunk`` is their composition, and the serving
+    engine overlaps prepare of chunk k+1 with commit of chunk k.
 """
 from __future__ import annotations
 
@@ -103,31 +108,33 @@ def swakde_stream(state: SWAKDEState, params, xs: jax.Array, cfg: SWAKDEConfig) 
     return state
 
 
-def swakde_update_chunk(state: SWAKDEState, params, xs: jax.Array,
-                        cfg: SWAKDEConfig) -> SWAKDEState:
-    """Consume a whole chunk ``xs (C, d)`` in one step, bit-identical to C
-    calls of ``swakde_update``.
+class SWAKDEPrep(NamedTuple):
+    """Pure per-chunk precomputation (the *prepare* phase of the two-phase
+    ingest contract, DESIGN.md §10): the hash matmul plus the per-row
+    sort-into-cell-segments structure.  Depends only on (params, chunk) —
+    never on sketch state — so preparing chunk k+1 can overlap committing
+    chunk k.  Per-add timestamps are stored as *offsets* within the chunk
+    (the stable-sort order); the commit rebases them on the state clock."""
+    order: jax.Array      # (L, C) int32 — per-row stable sort order of codes
+    seg_code: jax.Array   # (L, SW) int32 — cell code per segment (W = pad)
+    seg_len: jax.Array    # (L, SW) int32 — points hitting each segment
+    seg_first: jax.Array  # (L, SW) int32 — first sorted position of segment
 
-    Per row: sort the chunk's codes so each hit cell's points form a
-    contiguous run (stream order preserved by the stable sort), gather the
-    ≤ min(C, W) hit cells once, replay each cell's adds at the points' own
-    timestamps via vmapped ``eh_add`` (a while-loop bounded by the largest
-    per-cell hit count), and scatter the cells back.  The (L, W, levels,
-    slots) grid is traversed once per chunk instead of once per point.
-    """
-    eh = cfg.eh_config()
+
+def swakde_prepare_chunk(params, xs: jax.Array,
+                         cfg: SWAKDEConfig) -> SWAKDEPrep:
+    """Prepare phase for ``xs (C, d)``: one hash matmul, then per row a
+    stable sort of the chunk's codes into ≤ min(C, W) cell segments (each
+    hit cell's points form a contiguous run in stream order).  All of it is
+    state-independent — the embarrassingly parallel half of an update."""
     C = xs.shape[0]
     SW = min(C, cfg.W)                       # max distinct cells hit per row
     codes = lsh.hash_points(params, xs)      # (C, L)
-    t0 = state.t
     pos = jnp.arange(C, dtype=jnp.int32)
 
-    def row_update(codes_l, ts_row, num_row):
-        # codes_l (C,), ts_row (W, levels, slots), num_row (W, levels)
+    def row_prep(codes_l):
         order = jnp.argsort(codes_l, stable=True)
         sc = codes_l[order]
-        # per-add timestamps; saturating like the per-point path's t counter
-        add_ts = saturating_add(t0, order.astype(jnp.int32))
         is_start = jnp.concatenate([jnp.ones((1,), bool), sc[1:] != sc[:-1]])
         seg_id = jnp.cumsum(is_start).astype(jnp.int32) - 1   # (C,) < SW
         seg_len = jnp.zeros((SW,), jnp.int32).at[seg_id].add(1, mode="drop")
@@ -135,6 +142,28 @@ def swakde_update_chunk(state: SWAKDEState, params, xs: jax.Array,
             sc, mode="drop")
         seg_first = jnp.full((SW,), C, jnp.int32).at[seg_id].min(
             pos, mode="drop")
+        return order.astype(jnp.int32), seg_code, seg_len, seg_first
+
+    order, seg_code, seg_len, seg_first = jax.vmap(row_prep)(codes.T)
+    return SWAKDEPrep(order=order, seg_code=seg_code, seg_len=seg_len,
+                      seg_first=seg_first)
+
+
+def swakde_commit_chunk(state: SWAKDEState, prep: SWAKDEPrep,
+                        cfg: SWAKDEConfig) -> SWAKDEState:
+    """Commit phase: replay a prepared chunk into the EH grid — the
+    state-sequential half.  Per row: gather the hit cells once, replay each
+    cell's adds at the points' own timestamps (``state.t`` + sort offset,
+    saturating like the per-point path) via vmapped ``eh_add`` (a while-loop
+    bounded by the largest per-cell hit count), and scatter the cells back.
+    The (L, W, levels, slots) grid is read and written once per chunk."""
+    eh = cfg.eh_config()
+    C = prep.order.shape[1]
+    t0 = state.t
+
+    def row_update(order, seg_code, seg_len, seg_first, ts_row, num_row):
+        # per-add timestamps; saturating like the per-point path's t counter
+        add_ts = saturating_add(t0, order)
         gcode = jnp.minimum(seg_code, cfg.W - 1)     # clamp padding segments
         cell_ts = ts_row[gcode]                      # (SW, levels, slots)
         cell_num = num_row[gcode]                    # (SW, levels)
@@ -160,8 +189,22 @@ def swakde_update_chunk(state: SWAKDEState, params, xs: jax.Array,
         num_row = num_row.at[seg_code].set(cell_num, mode="drop")
         return ts_row, num_row
 
-    ts, num = jax.vmap(row_update)(codes.T, state.ts, state.num)
+    ts, num = jax.vmap(row_update)(prep.order, prep.seg_code, prep.seg_len,
+                                   prep.seg_first, state.ts, state.num)
     return SWAKDEState(ts=ts, num=num, t=saturating_add(state.t, C))
+
+
+def swakde_update_chunk(state: SWAKDEState, params, xs: jax.Array,
+                        cfg: SWAKDEConfig) -> SWAKDEState:
+    """Consume a whole chunk ``xs (C, d)`` in one step, bit-identical to C
+    calls of ``swakde_update``.
+
+    Composition of `swakde_prepare_chunk` (hash + sort-into-segments, pure)
+    and `swakde_commit_chunk` (EH replay, sequential) — the same ops, fused
+    under one jit when called directly.
+    """
+    return swakde_commit_chunk(state, swakde_prepare_chunk(params, xs, cfg),
+                               cfg)
 
 
 def swakde_stream_batched(state: SWAKDEState, params, xs: jax.Array,
@@ -244,6 +287,29 @@ def swakde_row_estimates_batch(state: SWAKDEState, params, qs: jax.Array,
     cell_ts = state.ts[rows, codes]                     # (B, L, levels, slots)
     cell_num = state.num[rows, codes]                   # (B, L, levels)
     return eh_query_cells(cell_ts, cell_num, state.t - 1, cfg.eh_config())
+
+
+def swakde_row_estimates_from_grid(grid: jax.Array, params, qs: jax.Array,
+                                   cfg: SWAKDEConfig) -> jax.Array:
+    """Read batched per-row window counts from a precomputed estimate table:
+    ``grid (L, W)`` (from `swakde_grid_estimates`), ``qs (B, d)`` → (B, L).
+
+    One hash matmul + one gather — no EH arithmetic at all.  Because the
+    grid is pure given (state, t) and per-cell arithmetic matches
+    `eh_query` exactly, reads are bit-identical to
+    `swakde_row_estimates_batch` on the state the grid was built from.
+    This is the query-side snapshot-cache path (`repro.serve.engine`): the
+    serving layer caches the grid per committed state (invalidated on
+    commit), so B < W query batches hit the table too."""
+    codes = lsh.hash_points(params, qs)                 # (B, L)
+    return grid[jnp.arange(cfg.L)[None, :], codes]
+
+
+def swakde_query_from_grid(grid: jax.Array, params, qs: jax.Array,
+                           cfg: SWAKDEConfig) -> jax.Array:
+    """Batched Ŷ estimates served from a cached grid: ``qs (B, d)`` → (B,)
+    float32, bit-identical to `swakde_query_batch` on the grid's state."""
+    return swakde_row_estimates_from_grid(grid, params, qs, cfg).mean(-1)
 
 
 def swakde_query(state: SWAKDEState, params, q: jax.Array, cfg: SWAKDEConfig) -> jax.Array:

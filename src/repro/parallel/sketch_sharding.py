@@ -30,6 +30,14 @@ per-shard computation *is* the single-device computation on a row/table
 block, so sharded state equals single-device state block-for-block
 (tests/test_distributed.py asserts this bitwise on 8 host devices).
 
+The two-phase ingest contract (DESIGN.md §10) is sharded the same way:
+``sharded_*_prepare_chunk`` runs the pure prepare per shard (prep pytrees
+stay row/table-sharded; S-ANN's keep decisions are replicated by
+construction) and ``sharded_*_commit_chunk`` folds them in —
+``sharded_commit(sharded_prepare(...))`` is bit-identical to the fused
+sharded ingest call, which is what lets `repro.serve.engine` overlap
+preparing chunk k+1 with committing chunk k on a mesh too.
+
 The mesh is a 1-D ``("shard",)`` mesh built with the existing
 `ShardingCtx`/`make_ctx` machinery (`make_sketch_ctx`); ``ctx.mesh is
 None`` short-circuits every function here back to the plain single-device
@@ -211,6 +219,46 @@ def sharded_race_update_batch(state: race.RACEState, params, xs: jax.Array,
         out_specs=_race_state_specs(ctx))(state, params, xs)
 
 
+def _race_prep_specs(ctx: ShardingCtx):
+    return race.RACEPrep(hist=ctx.spec("sketch_rows", None), count=ctx.spec())
+
+
+def sharded_race_prepare_chunk(params, xs: jax.Array, n_buckets: int,
+                               ctx: ShardingCtx) -> race.RACEPrep:
+    """Sharded prepare phase: each device hashes the (replicated) chunk with
+    its row block of the LSH params and histograms its own rows — pure, no
+    state input, so it can run ahead of pending commits.  The prep pytree
+    stays row-sharded, ready for `sharded_race_commit_chunk`."""
+    if ctx.mesh is None:
+        return race.race_prepare_chunk(params, xs, n_buckets)
+    Lsh = _check_rows(params.L, _num_shards(ctx), "RACE")
+
+    def body(p, xs):
+        return race.race_prepare_chunk(_local_params(p, Lsh), xs, n_buckets)
+
+    return _smap(
+        body, ctx.mesh,
+        in_specs=(_param_specs(params, ctx), ctx.spec()),
+        out_specs=_race_prep_specs(ctx))(params, xs)
+
+
+def sharded_race_commit_chunk(state: race.RACEState, prep: race.RACEPrep,
+                              ctx: ShardingCtx, sign: int = 1) -> race.RACEState:
+    """Sharded commit phase: fold a row-sharded prep into the row-sharded
+    counters.  ``sharded_commit(sharded_prepare(...))`` is bit-identical to
+    `sharded_race_update_batch` (same per-shard ops)."""
+    if ctx.mesh is None:
+        return race.race_commit_chunk(state, prep, sign)
+
+    def body(st, pr):
+        return race.race_commit_chunk(st, pr, sign)
+
+    return _smap(
+        body, ctx.mesh,
+        in_specs=(_race_state_specs(ctx), _race_prep_specs(ctx)),
+        out_specs=_race_state_specs(ctx))(state, prep)
+
+
 def sharded_race_query_batch(state: race.RACEState, params, qs: jax.Array,
                              ctx: ShardingCtx,
                              median_of_means: int = 0) -> jax.Array:
@@ -262,6 +310,107 @@ def sharded_swakde_update_chunk(state: swakde.SWAKDEState, params,
         in_specs=(_swakde_state_specs(ctx), _param_specs(params, ctx),
                   ctx.spec()),
         out_specs=_swakde_state_specs(ctx))(state, params, xs)
+
+
+def _swakde_prep_specs(ctx: ShardingCtx):
+    row = ctx.spec("sketch_rows", None)
+    return swakde.SWAKDEPrep(order=row, seg_code=row, seg_len=row,
+                             seg_first=row)
+
+
+def sharded_swakde_prepare_chunk(params, xs: jax.Array,
+                                 cfg: swakde.SWAKDEConfig,
+                                 ctx: ShardingCtx) -> swakde.SWAKDEPrep:
+    """Sharded prepare phase: each device hashes the (replicated) chunk with
+    its row block and builds its rows' sort-into-segments structure — pure,
+    no state input.  The prep stays row-sharded for
+    `sharded_swakde_commit_chunk`."""
+    if ctx.mesh is None:
+        return swakde.swakde_prepare_chunk(params, xs, cfg)
+    Lsh = _check_rows(cfg.L, _num_shards(ctx), "SW-AKDE")
+    cfg_local = dataclasses.replace(cfg, L=Lsh)
+
+    def body(p, xs):
+        return swakde.swakde_prepare_chunk(_local_params(p, Lsh), xs,
+                                           cfg_local)
+
+    return _smap(
+        body, ctx.mesh,
+        in_specs=(_param_specs(params, ctx), ctx.spec()),
+        out_specs=_swakde_prep_specs(ctx))(params, xs)
+
+
+def sharded_swakde_commit_chunk(state: swakde.SWAKDEState,
+                                prep: swakde.SWAKDEPrep,
+                                cfg: swakde.SWAKDEConfig,
+                                ctx: ShardingCtx) -> swakde.SWAKDEState:
+    """Sharded commit phase: each device replays its row block's prepared
+    segments into its EH rows (the shared clock advances identically on
+    every device).  ``sharded_commit(sharded_prepare(...))`` is
+    bit-identical to `sharded_swakde_update_chunk`."""
+    if ctx.mesh is None:
+        return swakde.swakde_commit_chunk(state, prep, cfg)
+    Lsh = _check_rows(cfg.L, _num_shards(ctx), "SW-AKDE")
+    cfg_local = dataclasses.replace(cfg, L=Lsh)
+
+    def body(st, pr):
+        return swakde.swakde_commit_chunk(st, pr, cfg_local)
+
+    return _smap(
+        body, ctx.mesh,
+        in_specs=(_swakde_state_specs(ctx), _swakde_prep_specs(ctx)),
+        out_specs=_swakde_state_specs(ctx))(state, prep)
+
+
+def sharded_swakde_grid_estimates(state: swakde.SWAKDEState,
+                                  cfg: swakde.SWAKDEConfig,
+                                  ctx: ShardingCtx) -> jax.Array:
+    """Sharded full-grid EH window counts → (L, W) float32, row-sharded.
+
+    Each device runs `swakde.swakde_grid_estimates` over its row block; the
+    result concatenates shard blocks in row order, so reads from it are
+    bit-identical to the single-device table.  This is the query-side
+    snapshot-cache producer for the sharded KDE service."""
+    if ctx.mesh is None:
+        return swakde.swakde_grid_estimates(state, cfg)
+    Lsh = _check_rows(cfg.L, _num_shards(ctx), "SW-AKDE")
+    cfg_local = dataclasses.replace(cfg, L=Lsh)
+
+    def body(st):
+        return swakde.swakde_grid_estimates(st, cfg_local)
+
+    return _smap(
+        body, ctx.mesh,
+        in_specs=(_swakde_state_specs(ctx),),
+        out_specs=ctx.spec("sketch_rows", None))(state)
+
+
+def sharded_swakde_query_from_grid(grid: jax.Array, params, qs: jax.Array,
+                                   cfg: swakde.SWAKDEConfig,
+                                   ctx: ShardingCtx) -> jax.Array:
+    """Sharded cached-grid queries: ``grid (L, W)`` row-sharded (from
+    `sharded_swakde_grid_estimates`), ``qs (B, d)`` → (B,) float32.
+
+    Per device: hash with the local row block, gather the local grid rows,
+    all-gather to (B, L) in row order, take the same mean the single-device
+    estimator takes — bit-identical to `swakde.swakde_query_from_grid` and
+    therefore to `sharded_swakde_query_batch` on the grid's state."""
+    if ctx.mesh is None:
+        return swakde.swakde_query_from_grid(grid, params, qs, cfg)
+    Lsh = _check_rows(cfg.L, _num_shards(ctx), "SW-AKDE")
+    cfg_local = dataclasses.replace(cfg, L=Lsh)
+
+    def body(g, p, qs):
+        vals = swakde.swakde_row_estimates_from_grid(
+            g, _local_params(p, Lsh), qs, cfg_local)             # (B, Lsh)
+        vals = lax.all_gather(vals, SHARD_AXIS, axis=1, tiled=True)  # (B, L)
+        return vals.mean(-1)
+
+    return _smap(
+        body, ctx.mesh,
+        in_specs=(ctx.spec("sketch_rows", None), _param_specs(params, ctx),
+                  ctx.spec()),
+        out_specs=ctx.spec())(grid, params, qs)
 
 
 def sharded_swakde_query_batch(state: swakde.SWAKDEState, params,
@@ -320,6 +469,60 @@ def sharded_sann_insert_batch(state: sann.SANNState, params, xs: jax.Array,
         in_specs=(_sann_state_specs(ctx), _param_specs(params, ctx),
                   ctx.spec(), ctx.spec()),
         out_specs=_sann_state_specs(ctx))(state, params, xs, key)
+
+
+def _sann_prep_specs(ctx: ShardingCtx):
+    r = ctx.spec()                       # replicated: keep decisions + chunk
+    t = ctx.spec("sketch_tables")        # flat (B * L,) append structure
+    return sann.SANNPrep(
+        xs=r, keep=r, kept_rank=r, n_kept=r, winner=r,
+        s_l=t, s_c=t, s_b=t, rank=t, entry_win=t,
+        counts=ctx.spec("sketch_tables", None))
+
+
+def sharded_sann_prepare_chunk(params, xs: jax.Array, key: jax.Array,
+                               cfg: sann.SANNConfig,
+                               ctx: ShardingCtx) -> sann.SANNPrep:
+    """Sharded prepare phase: every device draws the *same* keep decisions
+    from the same key (replicated outputs, identical by construction) and
+    builds the sort-by-(row, code) append structure for its own table block
+    (table-sharded outputs) — pure, no state input.  Ready for
+    `sharded_sann_commit_chunk`."""
+    if ctx.mesh is None:
+        return sann.sann_prepare_chunk(params, xs, key, cfg)
+    Lsh = _check_rows(cfg.L, _num_shards(ctx), "S-ANN")
+    cfg_local = dataclasses.replace(cfg, L=Lsh)
+
+    def body(p, xs, key):
+        return sann.sann_prepare_chunk(_local_params(p, Lsh), xs, key,
+                                       cfg_local)
+
+    return _smap(
+        body, ctx.mesh,
+        in_specs=(_param_specs(params, ctx), ctx.spec(), ctx.spec()),
+        out_specs=_sann_prep_specs(ctx))(params, xs, key)
+
+
+def sharded_sann_commit_chunk(state: sann.SANNState, prep: sann.SANNPrep,
+                              cfg: sann.SANNConfig,
+                              ctx: ShardingCtx) -> sann.SANNState:
+    """Sharded commit phase: every device rebases the replicated slot ranks
+    on the replicated pointers (identical point-store/counter updates
+    everywhere) and scatters its own table block's prepared appends.
+    ``sharded_commit(sharded_prepare(...))`` is bit-identical to
+    `sharded_sann_insert_batch`."""
+    if ctx.mesh is None:
+        return sann.sann_commit_chunk(state, prep, cfg)
+    Lsh = _check_rows(cfg.L, _num_shards(ctx), "S-ANN")
+    cfg_local = dataclasses.replace(cfg, L=Lsh)
+
+    def body(st, pr):
+        return sann.sann_commit_chunk(st, pr, cfg_local)
+
+    return _smap(
+        body, ctx.mesh,
+        in_specs=(_sann_state_specs(ctx), _sann_prep_specs(ctx)),
+        out_specs=_sann_state_specs(ctx))(state, prep)
 
 
 def sharded_sann_delete(state: sann.SANNState, params, x: jax.Array,

@@ -1,0 +1,294 @@
+"""Shared streaming-service runtime: two-phase pipelined ingest + snapshot
+queries (DESIGN.md §10).
+
+Every sketch service is the same state machine: a stream of embedding
+chunks folds into immutable sketch state under a lock, while concurrent
+queries read a snapshot of that state.  `SketchEngine` owns that machinery
+exactly once — `RetrievalService` and `KDEService` are thin subclasses that
+plug in the sketch-specific *prepare* / *commit* pair:
+
+  * **prepare** (`core.*.{sann,race,swakde}_prepare_chunk`) is pure: the
+    hash matmul plus all per-chunk precomputation (keep decisions, sort
+    orders, per-cell segments).  It never reads sketch state, so the engine
+    runs it on a dedicated thread, one chunk ahead of the commits
+    (double-buffering: prepare of chunk k+1 overlaps commit of chunk k —
+    the streaming regime of Coleman & Shrivastava's RACE sketch, where
+    hashing is the embarrassingly parallel half of an update).
+  * **commit** (`core.*.*_commit_chunk`) is the only state-sequential part:
+    it rebases the prepared chunk on the current pointers/clock and applies
+    the dense update.  Commits are serialized by the engine's lock and are
+    the only writers of ``self.state``.
+
+Consistency contract: ``self.state`` is only ever replaced *atomically*
+under the lock with a fully committed value, so a query snapshot is always
+the exact state after some committed prefix of the submitted stream —
+never a torn mix of chunks (tests/test_engine.py).  ``flush()`` after any
+number of ``ingest_async()`` calls leaves the service in exactly the state
+the synchronous ``ingest()`` path produces (it *is* the same path:
+``ingest == ingest_async + flush``, one chunk loop, one lock).
+
+Query-side snapshot caching: every commit bumps a version counter;
+`cached()` memoises pure functions of a snapshot (e.g. the SW-AKDE
+(L, W) grid-estimate table) keyed by that version, so repeated query
+batches between commits skip the recompute and any commit invalidates the
+cache automatically.
+"""
+from __future__ import annotations
+
+import collections
+import threading
+import traceback
+from typing import Any, Callable, Optional
+from concurrent.futures import ThreadPoolExecutor
+
+import jax
+import jax.numpy as jnp
+
+# Queue marker telling the ingest worker to exit (see SketchEngine.close).
+_STOP = object()
+
+
+class SketchEngine:
+    """Two-phase streaming-ingest runtime shared by the sketch services.
+
+    Subclass contract (all other plumbing lives here, once):
+
+      * set ``self.state`` (an immutable pytree) before first use;
+      * ``_make_chunk_item(chunk)`` — called in submission order under the
+        submit lock; returns the argument tuple for ``_prepare`` (this is
+        where a per-chunk PRNG key schedule is drawn, so the schedule is
+        deterministic across sync/async ingest);
+      * ``_prepare(*item)`` — jitted pure prepare phase (state-independent);
+      * ``_commit(state, prep)`` — jitted commit phase.
+
+    Knobs: ``ingest_chunk`` rows per prepare/commit pair, ``query_block``
+    rows per fused query call, ``pipelined=False`` disables the
+    double-buffered overlap (prepare and commit run strictly in sequence —
+    the benchmark baseline; results are bit-identical either way).
+    """
+
+    state: Any
+
+    def __init__(self, ingest_chunk: int, query_block: int = 1024,
+                 pipelined: bool = True):
+        self._chunk = max(1, int(ingest_chunk))
+        self._query_block = max(1, int(query_block))
+        self._pipelined = bool(pipelined)
+        # _lock guards state + version + snapshot cache; _submit_lock orders
+        # chunk submission (key draws happen in queue order).
+        self._lock = threading.Lock()
+        self._submit_lock = threading.Lock()
+        self._version = 0
+        self._snap_cache: dict = {}
+        self._queue: collections.deque = collections.deque()
+        self._cv = threading.Condition()
+        self._pending = 0
+        self._worker: Optional[threading.Thread] = None
+        self._ingest_error: Optional[str] = None
+        self._closed = False
+        # One dedicated prepare thread: the CPU PJRT client serializes
+        # executables dispatched from a single thread, so the overlap of
+        # prepare(k+1) with commit(k) needs a second dispatch thread (the
+        # ingest worker blocks on the commit while this pool blocks on the
+        # prepare).
+        self._prep_pool = (ThreadPoolExecutor(max_workers=1)
+                           if self._pipelined else None)
+
+    # --- subclass hooks ----------------------------------------------------
+
+    def _make_chunk_item(self, chunk: jax.Array) -> tuple:
+        return (chunk,)
+
+    def _prepare(self, *item):
+        raise NotImplementedError
+
+    def _commit(self, state, prep):
+        raise NotImplementedError
+
+    # --- ingest ------------------------------------------------------------
+
+    def ingest(self, data) -> None:
+        """Synchronous chunked ingest: submit + wait.  Exactly
+        ``ingest_async(data)`` followed by ``flush()`` — one code path."""
+        self.ingest_async(data)
+        self.flush()
+
+    def ingest_async(self, data) -> None:
+        """Queue a block of rows for background two-phase ingest and return
+        immediately.  Chunks commit in submission order; concurrent queries
+        observe some committed prefix.  Call ``flush()`` to wait."""
+        xs = jnp.asarray(data, jnp.float32)
+        if xs.shape[0] == 0:
+            return
+        with self._submit_lock:
+            if self._closed:
+                raise RuntimeError(f"{type(self).__name__} is closed")
+            items = [self._make_chunk_item(xs[i:i + self._chunk])
+                     for i in range(0, xs.shape[0], self._chunk)]
+            with self._cv:
+                self._queue.extend(items)
+                self._pending += len(items)
+                if self._worker is None:
+                    self._worker = threading.Thread(
+                        target=self._worker_loop, daemon=True,
+                        name=f"{type(self).__name__}-ingest")
+                    self._worker.start()
+                self._cv.notify_all()
+
+    def flush(self) -> None:
+        """Block until every queued chunk is committed (and the state is
+        materialised).  Re-raises any background ingest failure since the
+        last flush — delivered to exactly one caller when several threads
+        flush concurrently.  Failure semantics are fail-stop/at-most-once:
+        once a chunk fails, the chunks queued behind it are *discarded*
+        (never committed out of order, so snapshots stay committed
+        prefixes) until the error is consumed here; the caller decides
+        what to re-submit.  After a clean flush, the state equals what
+        synchronous ingest of the same stream would have produced."""
+        with self._cv:
+            while self._pending:
+                self._cv.wait()
+            err, self._ingest_error = self._ingest_error, None
+        if err is not None:
+            raise RuntimeError(f"background ingest failed:\n{err}")
+        with self._lock:
+            st = self.state
+        jax.block_until_ready(st)
+
+    def close(self) -> None:
+        """Commit everything already queued, then stop the worker thread
+        and the prepare pool.  Idempotent; the engine rejects new ingests
+        afterwards (queries keep working).  Call ``flush()`` first if you
+        need background failures re-raised."""
+        with self._submit_lock:
+            if self._closed:
+                return
+            self._closed = True
+            with self._cv:
+                worker = self._worker
+                if worker is not None:
+                    self._queue.append(_STOP)
+                    self._cv.notify_all()
+        if worker is not None:
+            worker.join()
+        if self._prep_pool is not None:
+            self._prep_pool.shutdown(wait=True)
+            self._prep_pool = None
+
+    def _worker_loop(self) -> None:
+        """THE chunk loop: double-buffered prepare/commit over the live
+        queue.  While this thread blocks on chunk k's prepare/commit, the
+        prepare pool computes chunk k+1 — including chunks that were
+        queued after k started (the lookahead pulls from the live queue,
+        so one-chunk-per-call producers still pipeline)."""
+        ahead: Optional[tuple] = None       # (item, future) prepared ahead
+        while True:
+            if ahead is not None:
+                item, fut = ahead
+                ahead = None
+            else:
+                with self._cv:
+                    while not self._queue:
+                        self._cv.wait()
+                    item = self._queue.popleft()
+                if item is _STOP:
+                    return
+                fut = None
+            try:
+                # Fail-stop: after a failure, drop queued chunks (instead
+                # of committing a stream with a hole in it) until flush()
+                # consumes the error.
+                if self._ingest_error is None:
+                    if fut is None:
+                        fut = self._submit_prepare(item)
+                    # schedule the lookahead before blocking on this chunk
+                    if self._prep_pool is not None:
+                        with self._cv:
+                            nxt = (self._queue.popleft()
+                                   if self._queue and
+                                   self._queue[0] is not _STOP else None)
+                        if nxt is not None:
+                            ahead = (nxt, self._submit_prepare(nxt))
+                    prep = fut.result() if hasattr(fut, "result") else fut
+                    self._commit_one(prep)
+            except BaseException:
+                with self._cv:
+                    self._ingest_error = traceback.format_exc()
+            finally:
+                with self._cv:
+                    self._pending -= 1
+                    self._cv.notify_all()
+
+    def _submit_prepare(self, item: tuple):
+        """Dispatch a chunk's prepare: on the pool when pipelined (so it
+        overlaps this thread's commit), inline otherwise."""
+        if self._prep_pool is not None:
+            return self._prep_pool.submit(self._prepare_ready, item)
+        return self._prepare_ready(item)
+
+    def _prepare_ready(self, item: tuple):
+        return jax.block_until_ready(self._prepare(*item))
+
+    def _commit_one(self, prep) -> None:
+        with self._lock:
+            self.state = st = self._commit(self.state, prep)
+            self._version += 1
+        # Pace the pipeline outside the lock: queries snapshot the (futures
+        # of the) new state immediately; the worker waits here while the
+        # prepare pool hashes the next chunk.
+        jax.block_until_ready(st)
+
+    # --- snapshots, caching, queries ---------------------------------------
+
+    def snapshot(self):
+        """Atomically read ``(state, version)`` — the lock-consistent way to
+        serve a query batch against one committed prefix."""
+        with self._lock:
+            return self.state, self._version
+
+    @property
+    def version(self) -> int:
+        """Commits applied so far (every commit invalidates `cached`)."""
+        with self._lock:
+            return self._version
+
+    def cached(self, name: str, version: int, compute: Callable[[], Any]):
+        """Memoise a pure function of the snapshot at ``version`` (e.g. the
+        SW-AKDE grid-estimate table).  A commit bumps the version, so stale
+        entries are never served; concurrent same-version computes are
+        benign (identical values, last install wins)."""
+        with self._lock:
+            ent = self._snap_cache.get(name)
+            if ent is not None and ent[0] == version:
+                return ent[1]
+        val = compute()                      # outside the lock: may be slow
+        with self._lock:
+            ent = self._snap_cache.get(name)
+            if ent is None or ent[0] <= version:
+                self._snap_cache[name] = (version, val)
+        return val
+
+    def _mutate_state(self, fn: Callable[[Any], Any]) -> None:
+        """Apply an out-of-band state update (e.g. a turnstile delete)
+        atomically; bumps the version so snapshot caches invalidate.  Note:
+        applies to the current committed prefix — chunks still queued
+        behind it commit afterwards."""
+        with self._lock:
+            self.state = fn(self.state)
+            self._version += 1
+
+    def _query_blocks(self, fn: Callable[[jax.Array], Any], qs: jax.Array):
+        """Run ``fn`` over ``qs`` in ``query_block``-row blocks and
+        concatenate the result pytrees (B = 0 → one empty-engine call)."""
+        qb = self._query_block
+        out = [fn(qs[i:i + qb]) for i in range(0, qs.shape[0], qb)]
+        if not out:
+            return fn(qs)
+        if len(out) == 1:
+            return out[0]
+        return jax.tree.map(lambda *parts: jnp.concatenate(parts), *out)
+
+
+# The runtime is sketch-agnostic; the serving layer refers to it by either
+# name (the engine *is* the streaming service base class).
+StreamingService = SketchEngine

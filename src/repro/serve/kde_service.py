@@ -1,20 +1,31 @@
-"""SW-AKDE density service: streaming sliding-window KDE with batched
+"""SW-AKDE density service: streaming sliding-window KDE with pipelined
 ingest and batched queries (paper §4).
 
 The serving-side integration of the paper's second sketch, mirroring
 `repro.serve.retrieval.RetrievalService`: points arrive as a stream of
-embeddings, the service maintains the sliding-window EH grid via the
-chunked batched-update path (`core.swakde.swakde_update_chunk` — one hash
-matmul + one grid traversal per chunk), and answers batched density
-queries — e.g. drift monitoring over a decode-time activation stream, or
-novelty scoring of incoming requests.
+embeddings, the service maintains the sliding-window EH grid, and answers
+batched density queries — e.g. drift monitoring over a decode-time
+activation stream, or novelty scoring of incoming requests.
+
+Runtime: the service is a `repro.serve.engine.SketchEngine` — the shared
+streaming runtime owns the lock, the chunk loop, the two-phase pipelined
+ingest (`core.swakde.swakde_prepare_chunk` hashing + sorting chunk k+1 on
+the prepare thread while `swakde_commit_chunk` replays chunk k into the EH
+grid) and the background queue (``ingest_async`` / ``flush``).
+
+Query-side snapshot cache: the (L, W) grid-estimate table
+(`core.swakde.swakde_grid_estimates`) is pure given the committed state, so
+the service caches it per commit version (``cache_grid=True``) and serves
+*every* query batch — including B < W — as one hash matmul + one table
+gather, bit-identical to the uncached fused path.  Any commit invalidates
+the cache (tests/test_engine.py pins this).
 
 Multi-device: set ``num_shards`` (or pass a ``mesh``) to split the L
-sketch rows across devices via `repro.parallel.sketch_sharding` — each
-device replays chunks into its row block of the EH grid and queries
-all-gather the per-row estimates; results stay bit-identical to the
-single-device service.  ``mesh=None, num_shards<=1`` (the default) keeps
-today's single-device path untouched.
+sketch rows across devices via `repro.parallel.sketch_sharding` — both
+ingest phases run per row shard and queries all-gather the per-row
+estimates; results stay bit-identical to the single-device service.
+``mesh=None, num_shards<=1`` (the default) keeps the single-device path
+untouched.
 
 This is a thin, stateful orchestration layer over repro.core.swakde; all
 math lives there (and is what the paper's Theorem 4.1 guarantee covers).
@@ -22,7 +33,6 @@ math lives there (and is what the paper's Theorem 4.1 guarantee covers).
 from __future__ import annotations
 
 import dataclasses
-import threading
 from typing import Optional
 
 import jax
@@ -31,6 +41,7 @@ import numpy as np
 
 from repro.core import lsh, swakde
 from repro.parallel import sketch_sharding as ss
+from repro.serve.engine import SketchEngine
 
 
 @dataclasses.dataclass
@@ -44,14 +55,22 @@ class KDEServiceConfig:
     k: int = 2               # concatenation power p
     w: float = 4.0           # p-stable bucket width (pstable only)
     seed: int = 0
-    # Batched-ingest chunk: one swakde_update_chunk call per chunk; each
-    # distinct partial-chunk size triggers one extra jit trace.
+    # Batched-ingest chunk: one prepare/commit pair per chunk; each distinct
+    # partial-chunk size triggers one extra jit trace.
     ingest_chunk: int = 1024
-    # Query block: queries run through the fused batch engine
-    # (core.swakde.swakde_query_batch — one hash matmul + one row gather
-    # per block, grid-precompute once block ≥ W) in blocks of this many
-    # rows; each distinct partial-block size triggers one extra jit trace.
+    # Two-phase pipelining: prepare chunk k+1 on the engine's prepare thread
+    # while chunk k commits.  False = strictly sequential phases (identical
+    # results; the ingest-benchmark baseline).
+    pipelined: bool = True
+    # Query block: queries are answered in blocks of this many rows; each
+    # distinct partial-block size triggers one extra jit trace.
     query_block: int = 1024
+    # Snapshot cache: memoise the (L, W) grid-estimate table per committed
+    # state (invalidated on every commit) and serve all query batches from
+    # it — one hash matmul + one gather per block, no EH arithmetic.
+    # False = recompute through the fused engine every call (bit-identical
+    # results either way).
+    cache_grid: bool = True
     # Multi-device sharding: num_shards > 1 splits the L rows across that
     # many local devices (L must divide evenly); ``mesh`` overrides with a
     # prebuilt 1-D ("shard",) mesh.  Both unset → single-device.
@@ -59,8 +78,10 @@ class KDEServiceConfig:
     mesh: Optional[object] = None   # jax.sharding.Mesh
 
 
-class KDEService:
-    """Thread-safe streaming sliding-window KDE with batched queries."""
+class KDEService(SketchEngine):
+    """Thread-safe streaming sliding-window KDE with pipelined ingest,
+    batched queries and a per-commit grid snapshot cache (shared runtime:
+    `repro.serve.engine.SketchEngine`)."""
 
     def __init__(self, cfg: KDEServiceConfig):
         self.cfg = cfg
@@ -75,53 +96,73 @@ class KDEService:
                                            w=cfg.w, n_buckets=cfg.W)
         else:
             raise ValueError(cfg.hash_family)
+        super().__init__(ingest_chunk=cfg.ingest_chunk,
+                         query_block=cfg.query_block,
+                         pipelined=cfg.pipelined)
         self.state = swakde.swakde_init(self.sketch_cfg)
-        self._lock = threading.Lock()
 
         self._ctx = ss.make_service_ctx(cfg.mesh, cfg.num_shards)
         if self._ctx.mesh is not None:
             self.state, self.params = ss.shard_swakde(self.state, self.params,
                                                       self._ctx)
-        self._update = jax.jit(
-            lambda st, xs: ss.sharded_swakde_update_chunk(
-                st, self.params, xs, self.sketch_cfg, self._ctx))
-        self._query = jax.jit(
+        self._prepare_fn = jax.jit(
+            lambda xs: ss.sharded_swakde_prepare_chunk(
+                self.params, xs, self.sketch_cfg, self._ctx))
+        self._commit_fn = jax.jit(
+            lambda st, prep: ss.sharded_swakde_commit_chunk(
+                st, prep, self.sketch_cfg, self._ctx))
+        self._query_fn = jax.jit(
             lambda st, qs: ss.sharded_swakde_query_batch(
                 st, self.params, qs, self.sketch_cfg, self._ctx))
+        self._grid_fn = jax.jit(
+            lambda st: ss.sharded_swakde_grid_estimates(
+                st, self.sketch_cfg, self._ctx))
+        self._grid_query_fn = jax.jit(
+            lambda grid, qs: ss.sharded_swakde_query_from_grid(
+                grid, self.params, qs, self.sketch_cfg, self._ctx))
+
+    # --- engine hooks (two-phase ingest) -----------------------------------
+
+    def _prepare(self, chunk: jax.Array) -> swakde.SWAKDEPrep:
+        return self._prepare_fn(chunk)
+
+    def _commit(self, state: swakde.SWAKDEState, prep: swakde.SWAKDEPrep):
+        return self._commit_fn(state, prep)
+
+    # --- serving API -------------------------------------------------------
 
     @property
     def num_shards(self) -> int:
         """Devices the rows are split across (1 = single-device path)."""
         return ss.ctx_num_shards(self._ctx)
 
-    def ingest(self, points: np.ndarray) -> None:
-        """Stream a block of points through the chunked batched update."""
-        xs = jnp.asarray(points, jnp.float32)
-        chunk = self.cfg.ingest_chunk
-        with self._lock:
-            for i in range(0, xs.shape[0], chunk):
-                self.state = self._update(self.state, xs[i:i + chunk])
-
-    def _query_blocks(self, state, qs: jnp.ndarray) -> np.ndarray:
-        qb = max(1, self.cfg.query_block)
-        out = [self._query(state, qs[i:i + qb])
-               for i in range(0, qs.shape[0], qb)]
-        if not out:                       # B = 0: one empty-engine call
-            return np.asarray(self._query(state, qs))
-        return np.asarray(out[0] if len(out) == 1 else jnp.concatenate(out))
+    def _query_snapshot(self, qs: jnp.ndarray):
+        """One lock-consistent snapshot serving every block of ``qs``:
+        returns ``(state, estimates)``.  With ``cache_grid`` the block
+        reads come from the per-version grid table (computed at most once
+        per commit); otherwise from the fused engine on the snapshot."""
+        state, version = self.snapshot()
+        if self.cfg.cache_grid:
+            grid = self.cached("grid", version,
+                               lambda: jax.block_until_ready(
+                                   self._grid_fn(state)))
+            out = self._query_blocks(
+                lambda b: self._grid_query_fn(grid, b), qs)
+        else:
+            out = self._query_blocks(lambda b: self._query_fn(state, b), qs)
+        return state, np.asarray(out)
 
     def query(self, queries: np.ndarray) -> np.ndarray:
-        """Batched unnormalised window-density estimates Ŷ (Thm 4.1),
-        served through the fused batch engine in ``query_block`` blocks."""
-        return self._query_blocks(self.state,
-                                  jnp.asarray(queries, jnp.float32))
+        """Batched unnormalised window-density estimates Ŷ (Thm 4.1) against
+        one committed snapshot, in ``query_block`` blocks."""
+        _, out = self._query_snapshot(jnp.asarray(queries, jnp.float32))
+        return out
 
     def density(self, queries: np.ndarray) -> np.ndarray:
-        """Normalised sliding-window density: Ŷ / min(t, N)."""
-        with self._lock:  # snapshot state + t together vs concurrent ingest
-            state = self.state
+        """Normalised sliding-window density: Ŷ / min(t, N) — the state and
+        the clock come from the *same* snapshot."""
+        state, out = self._query_snapshot(jnp.asarray(queries, jnp.float32))
         denom = max(min(int(state.t), self.cfg.window), 1)
-        out = self._query_blocks(state, jnp.asarray(queries, jnp.float32))
         return out / float(denom)
 
     @property

@@ -6,12 +6,18 @@ sublinear S-ANN sketch and answers batched (c, r)-ANN queries — e.g. for
 retrieval-augmented decoding, the per-step query batch is the batch of
 current decoder hidden states.
 
+Runtime: the service is a `repro.serve.engine.SketchEngine` — the shared
+streaming runtime owns the lock, the chunk loop, the two-phase pipelined
+ingest (`core.sann.sann_prepare_chunk` hashing chunk k+1 on the prepare
+thread while `sann_commit_chunk` folds chunk k in), the background queue
+(``ingest_async`` / ``flush``) and the versioned query snapshots.  Queries
+always read one committed prefix of the stream (never a torn state).
+
 Multi-device: set ``num_shards`` (or pass a ``mesh``) to split the L hash
-tables across devices via `repro.parallel.sketch_sharding` — ingest runs
-the PR-1 batched kernel per table shard, queries all-gather candidate
-blocks, and results stay bit-identical to the single-device service.
-``mesh=None, num_shards<=1`` (the default) keeps today's single-device
-path untouched.
+tables across devices via `repro.parallel.sketch_sharding` — both ingest
+phases run per table shard, queries all-gather candidate blocks, and
+results stay bit-identical to the single-device service.  ``mesh=None,
+num_shards<=1`` (the default) keeps the single-device path untouched.
 
 This is a thin, stateful orchestration layer over repro.core.sann; all math
 lives there (and is what the paper's guarantees cover).
@@ -19,7 +25,6 @@ lives there (and is what the paper's guarantees cover).
 from __future__ import annotations
 
 import dataclasses
-import threading
 from typing import Optional
 
 import jax
@@ -28,6 +33,7 @@ import numpy as np
 
 from repro.core import sann
 from repro.parallel import sketch_sharding as ss
+from repro.serve.engine import SketchEngine
 
 
 @dataclasses.dataclass
@@ -42,10 +48,14 @@ class RetrievalConfig:
     k: Optional[int] = 8
     bucket_cap: int = 16
     seed: int = 0
-    # Batched-ingest chunk: each chunk is one hash matmul + one segment
-    # scatter (core.sann.sann_insert_batch).  Larger chunks amortise more;
-    # each distinct partial-chunk size triggers one extra jit trace.
+    # Batched-ingest chunk: each chunk is one prepare (hash matmul + sort)
+    # plus one commit (segment scatter).  Larger chunks amortise more; each
+    # distinct partial-chunk size triggers one extra jit trace.
     ingest_chunk: int = 1024
+    # Two-phase pipelining: prepare chunk k+1 on the engine's prepare thread
+    # while chunk k commits.  False = strictly sequential phases (identical
+    # results; the ingest-benchmark baseline).
+    pipelined: bool = True
     # Query block: queries are served through the fused batch engine
     # (core.sann.sann_query_batch) in blocks of this many rows — bounds the
     # (block, 3L, dim) scoring footprint; each distinct partial-block size
@@ -58,67 +68,75 @@ class RetrievalConfig:
     mesh: Optional[object] = None   # jax.sharding.Mesh
 
 
-class RetrievalService:
-    """Thread-safe streaming ANN index with batched ingest and queries."""
+class RetrievalService(SketchEngine):
+    """Thread-safe streaming ANN index with pipelined ingest and batched
+    queries (shared runtime: `repro.serve.engine.SketchEngine`)."""
 
     def __init__(self, cfg: RetrievalConfig):
         base = sann.SANNConfig(
             dim=cfg.dim, n_max=cfg.n_max, eta=cfg.eta, r=cfg.r, c=cfg.c,
             w=cfg.w, L=cfg.L, k=cfg.k, bucket_cap=cfg.bucket_cap)
-        self.cfg, self.params, self.state = sann.sann_init(
+        self.cfg, self.params, state = sann.sann_init(
             base, jax.random.PRNGKey(cfg.seed))
-        self._chunk = cfg.ingest_chunk
-        self._query_block = max(1, cfg.query_block)
+        super().__init__(ingest_chunk=cfg.ingest_chunk,
+                         query_block=cfg.query_block,
+                         pipelined=cfg.pipelined)
+        self.state = state
         self._key = jax.random.PRNGKey(cfg.seed + 1)
-        self._lock = threading.Lock()
 
         self._ctx = ss.make_service_ctx(cfg.mesh, cfg.num_shards)
         if self._ctx.mesh is not None:
             self.state, self.params = ss.shard_sann(self.state, self.params,
                                                     self._ctx)
-        self._insert = jax.jit(
-            lambda st, xs, key: ss.sharded_sann_insert_batch(
-                st, self.params, xs, key, self.cfg, self._ctx))
-        self._query = jax.jit(
+        self._prepare_fn = jax.jit(
+            lambda xs, key: ss.sharded_sann_prepare_chunk(
+                self.params, xs, key, self.cfg, self._ctx))
+        self._commit_fn = jax.jit(
+            lambda st, prep: ss.sharded_sann_commit_chunk(
+                st, prep, self.cfg, self._ctx))
+        self._query_fn = jax.jit(
             lambda st, qs: ss.sharded_sann_query_batch(
                 st, self.params, qs, self.cfg, self._ctx))
-        self._delete = jax.jit(
+        self._delete_fn = jax.jit(
             lambda st, x: ss.sharded_sann_delete(
                 st, self.params, x, self.cfg, self._ctx))
+
+    # --- engine hooks (two-phase ingest) -----------------------------------
+
+    def _make_chunk_item(self, chunk: jax.Array) -> tuple:
+        # Per-chunk key schedule, drawn in submission order (under the
+        # engine's submit lock) — the same schedule whether the chunks are
+        # ingested synchronously or via ingest_async.
+        self._key, sub = jax.random.split(self._key)
+        return (chunk, sub)
+
+    def _prepare(self, chunk: jax.Array, key: jax.Array) -> sann.SANNPrep:
+        return self._prepare_fn(chunk, key)
+
+    def _commit(self, state: sann.SANNState, prep: sann.SANNPrep):
+        return self._commit_fn(state, prep)
+
+    # --- serving API -------------------------------------------------------
 
     @property
     def num_shards(self) -> int:
         """Devices the tables are split across (1 = single-device path)."""
         return ss.ctx_num_shards(self._ctx)
 
-    def ingest(self, embeddings: np.ndarray) -> None:
-        """Stream a block of embeddings through the batched insert path,
-        one `sann_insert_batch` call per `ingest_chunk` rows."""
-        xs = jnp.asarray(embeddings, jnp.float32)
-        with self._lock:
-            for i in range(0, xs.shape[0], self._chunk):
-                self._key, sub = jax.random.split(self._key)
-                self.state = self._insert(self.state, xs[i:i + self._chunk],
-                                          sub)
-
     def delete(self, embedding: np.ndarray) -> None:
-        """Turnstile deletion (paper §3.4)."""
-        with self._lock:
-            self.state = self._delete(self.state, jnp.asarray(embedding))
+        """Turnstile deletion (paper §3.4) — applied atomically to the
+        current committed prefix (queued async chunks commit after it)."""
+        x = jnp.asarray(embedding)
+        self._mutate_state(lambda st: self._delete_fn(st, x))
 
     def query(self, queries: np.ndarray) -> sann.SANNResult:
         """Batched queries (paper §3.3) through the fused batch engine, in
         blocks of ``query_block`` rows (one hash matmul + one gather + one
-        fused scorer call per block)."""
+        fused scorer call per block) — all blocks against one lock-consistent
+        snapshot of the committed state."""
         qs = jnp.asarray(queries, jnp.float32)
-        state, qb = self.state, self._query_block
-        out = [self._query(state, qs[i:i + qb])
-               for i in range(0, qs.shape[0], qb)]
-        if not out:                       # B = 0: one empty-engine call
-            return self._query(state, qs)
-        if len(out) == 1:
-            return out[0]
-        return sann.SANNResult(*(jnp.concatenate(f) for f in zip(*out)))
+        state, _ = self.snapshot()
+        return self._query_blocks(lambda b: self._query_fn(state, b), qs)
 
     @property
     def stored(self) -> int:

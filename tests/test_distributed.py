@@ -257,6 +257,83 @@ def test_sharded_sann_matches_single_device():
     assert "SANN_SHARDED_OK" in out
 
 
+def test_sharded_two_phase_matches_single_device():
+    """Sharded prepare→commit (both phases under shard_map) is bit-identical
+    to the fused sharded ingest and to single-device, for all three
+    sketches; the sharded grid-estimate table (the KDE service's snapshot
+    cache) matches the single-device table and its reads match the fused
+    query path."""
+    out = _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import lsh, race, sann, swakde
+        from repro.parallel import sketch_sharding as ss
+
+        ctx = ss.make_sketch_ctx(ss.make_sketch_mesh(8))
+        d = 10
+        xs = jax.random.normal(jax.random.PRNGKey(1), (230, d))
+
+        # RACE: two chunks through sharded prepare -> commit
+        L, W = 16, 32
+        params = lsh.init_srp(jax.random.PRNGKey(0), d, L=L, k=2, n_buckets=W)
+        ref = race.race_update_batch(race.race_init(L, W), params, xs[:130])
+        ref = race.race_update_batch(ref, params, xs[130:], sign=-1)
+        st, p = ss.shard_race(race.race_init(L, W), params, ctx)
+        st = ss.sharded_race_commit_chunk(
+            st, ss.sharded_race_prepare_chunk(p, xs[:130], W, ctx), ctx)
+        st = ss.sharded_race_commit_chunk(
+            st, ss.sharded_race_prepare_chunk(p, xs[130:], W, ctx), ctx,
+            sign=-1)
+        assert (np.asarray(st.counts) == np.asarray(ref.counts)).all()
+        assert int(st.n) == int(ref.n)
+
+        # SW-AKDE: prepare-ahead (both preps before any commit), then the
+        # sharded grid table vs single-device + fused query reads
+        cfg = swakde.SWAKDEConfig(L=8, W=32, window=120, eh_eps=0.15)
+        params = lsh.init_srp(jax.random.PRNGKey(2), d, L=8, k=2,
+                              n_buckets=32)
+        ref = swakde.swakde_init(cfg)
+        for i in range(0, 230, 100):   # uneven final chunk on purpose
+            ref = swakde.swakde_update_chunk(ref, params, xs[i:i+100], cfg)
+        st, p = ss.shard_swakde(swakde.swakde_init(cfg), params, ctx)
+        preps = [ss.sharded_swakde_prepare_chunk(p, xs[i:i+100], cfg, ctx)
+                 for i in range(0, 230, 100)]
+        for prep in preps:
+            st = ss.sharded_swakde_commit_chunk(st, prep, cfg, ctx)
+        for a, b in zip(jax.tree.leaves(st), jax.tree.leaves(ref)):
+            assert (np.asarray(a) == np.asarray(b)).all()
+        grid = ss.sharded_swakde_grid_estimates(st, cfg, ctx)
+        np.testing.assert_array_equal(
+            np.asarray(grid), np.asarray(swakde.swakde_grid_estimates(ref,
+                                                                      cfg)))
+        qs = xs[:7]
+        np.testing.assert_array_equal(
+            np.asarray(ss.sharded_swakde_query_from_grid(grid, p, qs, cfg,
+                                                         ctx)),
+            np.asarray(swakde.swakde_query_batch(ref, params, qs, cfg)))
+
+        # S-ANN: sharded prepare -> commit under ring wrap vs single-device
+        cfg = sann.SANNConfig(dim=d, n_max=600, eta=0.1, r=0.8, c=2.0,
+                              w=1.6, L=16, k=4, capacity_slack=0.5)
+        cfg, params, st0 = sann.sann_init(cfg, jax.random.PRNGKey(3))
+        stream = jnp.asarray(np.random.default_rng(4).uniform(
+            0, 1, (600, d)).astype(np.float32))
+        ckeys = jax.random.split(jax.random.PRNGKey(5), 3)
+        ref = st0
+        for i, k in zip(range(0, 600, 200), ckeys):
+            ref = sann.sann_insert_batch(ref, params, stream[i:i+200], k,
+                                         cfg)
+        st, p = ss.shard_sann(st0, params, ctx)
+        for i, k in zip(range(0, 600, 200), ckeys):
+            prep = ss.sharded_sann_prepare_chunk(p, stream[i:i+200], k, cfg,
+                                                 ctx)
+            st = ss.sharded_sann_commit_chunk(st, prep, cfg, ctx)
+        for nm, a, b in zip(ref._fields, st, ref):
+            assert (np.asarray(a) == np.asarray(b)).all(), nm
+        print("TWO_PHASE_SHARDED_OK")
+    """)
+    assert "TWO_PHASE_SHARDED_OK" in out
+
+
 def test_sharded_services_match_single_device():
     out = _run("""
         import numpy as np

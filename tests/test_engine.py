@@ -1,0 +1,258 @@
+"""Shared streaming-engine semantics (repro.serve.engine):
+
+  * pipelined (double-buffered) ingest is bit-identical to sequential
+    two-phase ingest and to the direct core chunk loop;
+  * ``flush()`` after ``ingest_async()`` leaves exactly the state the
+    synchronous ``ingest()`` path produces;
+  * concurrent queries against a background ingest never observe a torn
+    state — every result is valid for *some* committed prefix of the
+    stream (the lock-consistency satellite: query paths snapshot state
+    under the engine lock);
+  * the SW-AKDE grid snapshot cache is reused between commits and
+    invalidated by any commit (stale-cache regression);
+  * background ingest failures surface on flush().
+"""
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import sann, swakde
+from repro.serve.kde_service import KDEService, KDEServiceConfig
+from repro.serve.retrieval import RetrievalConfig, RetrievalService
+
+_RETR_KW = dict(dim=8, n_max=1000, eta=0.2, r=0.4, c=2.0, w=1.0, L=6, k=3,
+                ingest_chunk=64)
+_KDE_KW = dict(dim=8, L=6, W=32, window=150, eh_eps=0.2, ingest_chunk=50)
+
+
+def _states_equal(a, b):
+    return all(
+        bool((np.asarray(x) == np.asarray(y)).all())
+        for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+def _data(n=500, d=8, seed=0):
+    return np.random.default_rng(seed).uniform(0, 1, (n, d)).astype(
+        np.float32)
+
+
+# ---------------------------------------------------------------------------
+# Pipelined == sequential == async+flush
+# ---------------------------------------------------------------------------
+
+def test_retrieval_pipelined_sequential_async_identical():
+    data = _data()
+    svcs = [RetrievalService(RetrievalConfig(**_RETR_KW)),
+            RetrievalService(RetrievalConfig(**_RETR_KW, pipelined=False)),
+            RetrievalService(RetrievalConfig(**_RETR_KW))]
+    svcs[0].ingest(data)
+    svcs[1].ingest(data)
+    svcs[2].ingest_async(data)
+    svcs[2].flush()
+    assert _states_equal(svcs[0].state, svcs[1].state)
+    assert _states_equal(svcs[0].state, svcs[2].state)
+
+    # ... and identical to the direct core chunk loop under the service's
+    # per-chunk key schedule.
+    ref = sann.sann_init(sann.SANNConfig(
+        dim=8, n_max=1000, eta=0.2, r=0.4, c=2.0, w=1.0, L=6, k=3),
+        jax.random.PRNGKey(0))[2]
+    key = jax.random.PRNGKey(1)
+    for i in range(0, 500, 64):
+        key, sub = jax.random.split(key)
+        ref = sann.sann_insert_batch(ref, svcs[0].params,
+                                     jnp.asarray(data[i:i + 64]), sub,
+                                     svcs[0].cfg)
+    assert _states_equal(svcs[0].state, ref)
+
+
+def test_kde_pipelined_sequential_async_identical():
+    data = _data(seed=1)
+    svcs = [KDEService(KDEServiceConfig(**_KDE_KW)),
+            KDEService(KDEServiceConfig(**_KDE_KW, pipelined=False)),
+            KDEService(KDEServiceConfig(**_KDE_KW))]
+    svcs[0].ingest(data)
+    svcs[1].ingest(data)
+    svcs[2].ingest_async(data)
+    svcs[2].flush()
+    assert _states_equal(svcs[0].state, svcs[1].state)
+    assert _states_equal(svcs[0].state, svcs[2].state)
+    direct = swakde.swakde_stream(
+        swakde.swakde_init(svcs[0].sketch_cfg), svcs[0].params,
+        jnp.asarray(data), svcs[0].sketch_cfg)
+    assert _states_equal(svcs[0].state, direct)
+    # cached-grid reads == uncached fused engine reads, bit-for-bit
+    qs = data[:7] + 0.01
+    uncached = KDEService(KDEServiceConfig(**_KDE_KW, cache_grid=False))
+    uncached.ingest(data)
+    np.testing.assert_array_equal(svcs[0].query(qs), uncached.query(qs))
+
+
+def test_empty_ingest_and_empty_query():
+    svc = RetrievalService(RetrievalConfig(**_RETR_KW))
+    svc.ingest(np.zeros((0, 8), np.float32))
+    svc.flush()
+    assert svc.version == 0
+    res = svc.query(np.zeros((0, 8), np.float32))
+    assert np.asarray(res.index).shape == (0,)
+    kde = KDEService(KDEServiceConfig(**_KDE_KW))
+    kde.ingest(np.zeros((0, 8), np.float32))
+    assert kde.query(np.zeros((0, 8), np.float32)).shape == (0,)
+
+
+# ---------------------------------------------------------------------------
+# Concurrency: background ingest + queries see committed prefixes only
+# ---------------------------------------------------------------------------
+
+def test_kde_concurrent_queries_see_committed_prefixes():
+    data = _data(n=400, seed=2)
+    qs = data[:5] + 0.01
+    svc = KDEService(KDEServiceConfig(**_KDE_KW))
+    chunk = svc.cfg.ingest_chunk
+
+    # expected query result after every committed prefix (0..n_chunks)
+    st = swakde.swakde_init(svc.sketch_cfg)
+    prefix_res = [np.asarray(swakde.swakde_query_batch(
+        st, svc.params, jnp.asarray(qs), svc.sketch_cfg))]
+    for i in range(0, 400, chunk):
+        st = swakde.swakde_update_chunk(st, svc.params,
+                                        jnp.asarray(data[i:i + chunk]),
+                                        svc.sketch_cfg)
+        prefix_res.append(np.asarray(swakde.swakde_query_batch(
+            st, svc.params, jnp.asarray(qs), svc.sketch_cfg)))
+
+    svc.ingest_async(data)
+    done = False
+    for _ in range(10_000):
+        out = svc.query(qs)
+        matches = [k for k, r in enumerate(prefix_res)
+                   if np.array_equal(out, r)]
+        assert matches, f"torn state: {out} matches no committed prefix"
+        if svc.version == len(prefix_res) - 1:
+            done = True
+            break
+    assert done, "background ingest never finished"
+    svc.flush()
+    np.testing.assert_array_equal(svc.query(qs), prefix_res[-1])
+
+
+def test_retrieval_concurrent_queries_see_committed_prefixes():
+    data = _data(n=320, seed=3)
+    qs = data[:6] + 0.01
+    svc = RetrievalService(RetrievalConfig(**_RETR_KW))
+    chunk = svc._chunk
+
+    st = sann.sann_init(sann.SANNConfig(
+        dim=8, n_max=1000, eta=0.2, r=0.4, c=2.0, w=1.0, L=6, k=3),
+        jax.random.PRNGKey(0))[2]
+    key = jax.random.PRNGKey(1)
+    prefix_res = [jax.tree.map(np.asarray, sann.sann_query_batch(
+        st, svc.params, jnp.asarray(qs), svc.cfg))]
+    for i in range(0, 320, chunk):
+        key, sub = jax.random.split(key)
+        st = sann.sann_insert_batch(st, svc.params,
+                                    jnp.asarray(data[i:i + chunk]), sub,
+                                    svc.cfg)
+        prefix_res.append(jax.tree.map(np.asarray, sann.sann_query_batch(
+            st, svc.params, jnp.asarray(qs), svc.cfg)))
+
+    def matches(res, exp):
+        return all(np.array_equal(np.asarray(a), b)
+                   for a, b in zip(res, exp))
+
+    svc.ingest_async(data)
+    done = False
+    for _ in range(10_000):
+        res = svc.query(qs)
+        ks = [k for k, exp in enumerate(prefix_res) if matches(res, exp)]
+        assert ks, "torn state: query result matches no committed prefix"
+        if svc.version == len(prefix_res) - 1:
+            done = True
+            break
+    assert done, "background ingest never finished"
+    svc.flush()
+    assert matches(svc.query(qs), prefix_res[-1])
+
+
+# ---------------------------------------------------------------------------
+# Snapshot cache: reuse between commits, invalidation on commit
+# ---------------------------------------------------------------------------
+
+def test_grid_cache_reused_and_invalidated_on_commit():
+    data = _data(n=300, seed=4)
+    qs = data[:5]
+    svc = KDEService(KDEServiceConfig(**_KDE_KW))
+    calls = []
+    orig = svc._grid_fn
+    svc._grid_fn = lambda st: (calls.append(1), orig(st))[1]
+
+    svc.ingest(data[:200])
+    q1 = svc.query(qs)
+    q1b = svc.query(qs)
+    assert len(calls) == 1          # second batch served from the cache
+    np.testing.assert_array_equal(q1, q1b)
+
+    svc.ingest(data[200:])          # commit → must invalidate the cache
+    q2 = svc.query(qs)
+    assert len(calls) == 2, "stale grid cache served after a commit"
+    direct = np.asarray(swakde.swakde_query_batch(
+        svc.state, svc.params, jnp.asarray(qs), svc.sketch_cfg))
+    np.testing.assert_array_equal(q2, direct)
+    assert not np.array_equal(q1, q2)  # the new mass is visible
+
+    # density() shares the same snapshot/cache machinery
+    d2 = svc.density(qs)
+    assert len(calls) == 2
+    np.testing.assert_allclose(
+        d2, direct / max(min(int(svc.state.t), svc.cfg.window), 1))
+
+
+def test_delete_invalidates_snapshot_cache():
+    data = _data(n=200, seed=5)
+    svc = RetrievalService(RetrievalConfig(**_RETR_KW))
+    svc.ingest(data)
+    v = svc.version
+    svc.delete(data[0])
+    assert svc.version == v + 1
+    res = svc.query(data[:1])
+    # the deleted vector can no longer be returned at distance ~0
+    assert float(np.asarray(res.distance)[0]) > 1e-4 or not bool(
+        np.asarray(res.found)[0])
+
+
+# ---------------------------------------------------------------------------
+# Failure propagation
+# ---------------------------------------------------------------------------
+
+def test_background_ingest_error_surfaces_on_flush():
+    svc = KDEService(KDEServiceConfig(**_KDE_KW))
+
+    def boom(*_):
+        raise ValueError("prepare exploded")
+
+    svc._prepare = boom
+    svc.ingest_async(_data(n=60, seed=6))
+    with pytest.raises(RuntimeError, match="prepare exploded"):
+        svc.flush()
+    # fail-stop: the failed submission's remaining chunks were discarded,
+    # not committed around the hole — the state is still a committed prefix
+    assert svc.steps == 0
+    # the engine recovers once the fault is gone: later ingests work again
+    del svc._prepare            # restore the class method
+    svc.ingest(_data(n=60, seed=7))
+    assert svc.steps == 60
+
+
+def test_close_commits_queued_then_rejects_new_work():
+    data = _data(n=200, seed=8)
+    svc = KDEService(KDEServiceConfig(**_KDE_KW))
+    svc.ingest_async(data)
+    svc.close()                  # drains the queue, then stops the worker
+    assert svc.steps == 200
+    svc.close()                  # idempotent
+    with pytest.raises(RuntimeError, match="closed"):
+        svc.ingest_async(data)
+    assert svc.query(data[:3]).shape == (3,)   # queries keep working
