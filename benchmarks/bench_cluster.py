@@ -1,0 +1,120 @@
+"""Merge-based cluster ingest throughput (repro.serve.cluster).
+
+`ClusterService` scales ingest by hash-partitioning the stream across N
+worker `SketchEngine`s — each with its own commit worker + prepare thread
+— and merging per-worker states on the ``merge_every`` cadence (and at
+query time).  This suite measures end-to-end cluster ingest (submit every
+partition + flush every worker + the cadence merge) at 1/2/4 workers:
+
+  cluster.sann.w{N}  — ClusterRetrievalService (S-ANN): prepare (packed
+                       sort) and commit (segment scatter) both serial per
+                       worker, so extra workers map onto extra cores.
+  cluster.race.w{N}  — ClusterRACEService: the commit is one dense add —
+                       already memory-bound on CPU, so worker scaling is
+                       reported for honesty, not for a headline.
+
+Each row also reports ``merge_us`` — the cost of one coordinator merge of
+the final worker states (what a query pays when the merged cache is stale,
+i.e. at most every ``merge_every`` worker commits).
+
+On the 2-core CI shape expect w2 ≈ 1.1-1.4x for S-ANN and w4 ≈ w2 (no
+spare cores); the point of the suite is the *scaling shape* and honest
+merge costs, not absolute numbers.  Steady-state methodology as in
+bench_pipeline.py: build + ingest once (compile), then re-ingest
+``repeats`` times and take the median.  Emits ``name,us_per_call,derived``
+CSV rows; results merge into ``BENCH_ingest.json`` (same artifact as
+bench_ingest/bench_pipeline; override with REPRO_BENCH_INGEST_OUT).
+REPRO_BENCH_TINY=1 shrinks sizes for CI.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from .common import update_bench_json
+
+TINY = os.environ.get("REPRO_BENCH_TINY") == "1"
+OUT_PATH = os.environ.get("REPRO_BENCH_INGEST_OUT", "BENCH_ingest.json")
+REPEATS = 3 if TINY else 5
+WORKER_COUNTS = (1, 2, 4)
+
+_json_rows: list[dict] = []
+
+
+def _ingest_time(cluster, data, repeats: int) -> float:
+    """Median wall µs of a steady-state re-ingest (jits warm)."""
+    cluster.ingest(data)                  # compile + warm every worker
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        cluster.ingest(data)              # partition + submit + flush + merge
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(ts))
+
+
+def _merge_time(cluster, repeats: int) -> float:
+    """Median wall µs of one coordinator merge of the current states."""
+    ts = []
+    for _ in range(repeats):
+        with cluster._mlock:
+            cluster._merged_versions = None      # force a re-merge
+        t0 = time.perf_counter()
+        cluster.merged_state()
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(ts))
+
+
+def _series(rows, name, data, make_cluster):
+    n_points = data.shape[0]
+    base_us = None
+    for workers in WORKER_COUNTS:
+        cl = make_cluster(workers)
+        us = _ingest_time(cl, data, REPEATS)
+        merge_us = _merge_time(cl, REPEATS) if workers > 1 else 0.0
+        cl.close()
+        if base_us is None:
+            base_us = us
+        pps = n_points * 1e6 / us
+        speedup = base_us / us
+        derived = f"pps={pps:.0f};speedup={speedup:.2f};merge_us={merge_us:.0f}"
+        rows.append((f"cluster.{name}.w{workers}", us, derived))
+        _json_rows.append({
+            "name": f"cluster.{name}.w{workers}", "sketch": name,
+            "variant": "cluster", "workers": workers, "n_points": n_points,
+            "us_per_call": us, "pps": pps, "speedup": speedup,
+            "merge_us": merge_us,
+        })
+
+
+def bench_sann(rows):
+    from repro.serve.cluster import ClusterRetrievalService
+    from repro.serve.retrieval import RetrievalConfig
+    N = 4096 if TINY else 32768
+    d, L, k, eta, chunk, cap = ((16, 8, 3, 0.5, 512, 8) if TINY
+                                else (32, 32, 4, 0.6, 4096, 8))
+    data = np.random.default_rng(0).uniform(0, 1, (N, d)).astype(np.float32)
+    cfg = RetrievalConfig(dim=d, n_max=N, eta=eta, r=0.5, c=2.0, w=1.0, L=L,
+                          k=k, bucket_cap=cap, ingest_chunk=chunk)
+    _series(rows, "sann", data,
+            lambda w: ClusterRetrievalService(cfg, num_workers=w,
+                                              merge_every=8))
+
+
+def bench_race(rows):
+    from repro.serve.cluster import ClusterRACEService
+    from repro.serve.race_service import RACEServiceConfig
+    N = 4096 if TINY else 65536
+    d, L, W, chunk = (16, 8, 32, 512) if TINY else (32, 32, 128, 4096)
+    data = np.random.default_rng(1).normal(0, 1, (N, d)).astype(np.float32)
+    cfg = RACEServiceConfig(dim=d, L=L, W=W, ingest_chunk=chunk)
+    _series(rows, "race", data,
+            lambda w: ClusterRACEService(cfg, num_workers=w, merge_every=8))
+
+
+def run(rows):
+    _json_rows.clear()
+    bench_sann(rows)
+    bench_race(rows)
+    update_bench_json(OUT_PATH, "cluster", _json_rows, tiny=TINY)

@@ -15,8 +15,21 @@ synchronous ``ingest``.
 CPU-only box the devices are virtual (forced via XLA_FLAGS before jax
 initialises), and results are bit-identical to the single-device service.
 
+``--num-workers K`` demos the merge-based cluster (`repro.serve.cluster
+.ClusterRetrievalService`): the corpus is hash-partitioned across K worker
+engines ingesting concurrently, and queries run against the coordinator's
+`sann_merge`-combined sketch.
+
+``--snapshot-dir DIR`` demos durability (`repro.persist`): every ingest
+chunk is WAL-logged at enqueue time and the engine snapshots its state in
+the background; re-running with the same DIR recovers the previous run's
+index bit-identically (snapshot + WAL-tail replay) before ingesting more.
+
 Run: PYTHONPATH=src python examples/serve_retrieval.py [--steps 24]
      PYTHONPATH=src python examples/serve_retrieval.py --num-shards 4
+     PYTHONPATH=src python examples/serve_retrieval.py --num-workers 2
+     PYTHONPATH=src python examples/serve_retrieval.py \
+         --snapshot-dir /tmp/retr_snap   # run twice: 2nd run recovers
 """
 import argparse
 import os
@@ -33,6 +46,16 @@ def parse_args():
     ap.add_argument("--num-shards", type=int, default=0,
                     help="shard the L hash tables across this many devices "
                          "(0/1 = single-device)")
+    ap.add_argument("--num-workers", type=int, default=0,
+                    help="hash-partition ingest across this many worker "
+                         "engines with a merge-based coordinator "
+                         "(0/1 = single engine)")
+    ap.add_argument("--snapshot-dir", default=None,
+                    help="durability directory (WAL + snapshots); an "
+                         "existing one is recovered before ingesting")
+    ap.add_argument("--max-pending", type=int, default=0,
+                    help="admission control: bound queued-but-uncommitted "
+                         "rows (0 = unbounded)")
     return ap.parse_args()
 
 
@@ -54,6 +77,7 @@ def main():
     from repro.configs import registry
     from repro.models import model as model_lib
     from repro.serve import kv_cache, serve_step as serve_lib
+    from repro.serve.cluster import ClusterRetrievalService
     from repro.serve.retrieval import RetrievalConfig, RetrievalService
 
     cfg = registry.get_smoke_config("qwen3-4b")
@@ -62,11 +86,25 @@ def main():
     cache = kv_cache.init_cache(cfg, B=B, s_max=S_max)
     step = jax.jit(serve_lib.make_serve_step(cfg))
 
-    retr = RetrievalService(RetrievalConfig(
+    retr_cfg = RetrievalConfig(
         dim=cfg.d_model, n_max=10_000, eta=0.3, r=0.35, c=2.0,
-        ingest_chunk=args.ingest_chunk, num_shards=args.num_shards))
-    print(f"retrieval service: {retr.num_shards} shard(s), "
-          f"ingest_chunk={args.ingest_chunk}")
+        ingest_chunk=args.ingest_chunk, num_shards=args.num_shards,
+        max_pending=args.max_pending or None,
+        snapshot_dir=args.snapshot_dir)
+    if args.num_workers > 1:
+        retr = ClusterRetrievalService(retr_cfg,
+                                       num_workers=args.num_workers)
+        print(f"cluster retrieval service: {args.num_workers} workers "
+              f"(hash-partitioned ingest, merge-based coordinator)")
+    else:
+        retr = RetrievalService(retr_cfg)
+        print(f"retrieval service: {retr.num_shards} shard(s), "
+              f"ingest_chunk={args.ingest_chunk}")
+    if args.snapshot_dir:
+        replayed = retr.recover()   # no-op on an empty directory
+        print(f"durability at {args.snapshot_dir}: recovered "
+              f"{replayed} WAL record(s), "
+              f"{getattr(retr, 'stored', 0)} vectors live")
 
     # Submit the document corpus asynchronously: the engine's prepare
     # thread hashes chunk k+1 while chunk k commits, and the decode loop

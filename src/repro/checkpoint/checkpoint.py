@@ -30,8 +30,27 @@ def _flatten(tree):
     return keys, [l for _, l in leaves], treedef
 
 
-def save(path: str | pathlib.Path, tree: Any, step: int) -> None:
-    """Atomic synchronous save."""
+def fsync_path(p: str | pathlib.Path) -> None:
+    """fsync a file or directory by path — the POSIX dirent-durability
+    idiom (a new/renamed file is only crash-durable once its parent
+    directory is fsynced too).  Shared with the WAL (`repro.persist.wal`)."""
+    fd = os.open(p, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def save(path: str | pathlib.Path, tree: Any, step: int,
+         fsync: bool = False) -> None:
+    """Atomic synchronous save.
+
+    ``fsync=True`` additionally fsyncs the data/manifest files before their
+    renames and the directory after — required when a caller treats a
+    completed save as surviving *power loss* (e.g. the WAL-compaction rule
+    in `repro.serve.engine`, which deletes log records once a snapshot
+    covering them is durable).  The default (flush-only) survives process
+    death."""
     path = pathlib.Path(path)
     path.mkdir(parents=True, exist_ok=True)
     keys, leaves, _ = _flatten(tree)
@@ -48,30 +67,53 @@ def save(path: str | pathlib.Path, tree: Any, step: int) -> None:
     fd, tmp = tempfile.mkstemp(dir=path, suffix=".tmp.npz")
     os.close(fd)
     np.savez(tmp, **arrays)   # savez appends .npz unless it already ends so
+    if fsync:
+        fsync_path(pathlib.Path(tmp))
     os.replace(tmp, path / "shard_0.npz")
     mtmp = path / "manifest.json.tmp"
     mtmp.write_text(json.dumps(manifest))
+    if fsync:
+        fsync_path(mtmp)
     os.replace(mtmp, path / "manifest.json")
+    if fsync:
+        fsync_path(path)          # the renames themselves ...
+        fsync_path(path.parent)   # ... and this step dir's own dirent
 
 
 class AsyncCheckpointer:
     """Background-thread writer: snapshot on the caller thread (device_get),
-    serialize on the worker — the step loop resumes immediately."""
+    serialize on the worker — the step loop resumes immediately.
+
+    A failed background write is re-raised on the next ``wait()`` / ``save()``
+    instead of dying silently in the worker thread — callers that rely on a
+    checkpoint being durable (e.g. the WAL-compaction path in
+    `repro.serve.engine`) must see the failure."""
 
     def __init__(self):
         self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
 
-    def save(self, path, tree, step: int) -> None:
+    def _run(self, path, tree, step: int, fsync: bool) -> None:
+        try:
+            save(path, tree, step, fsync=fsync)
+        except BaseException as e:      # surfaced on the next wait()
+            self._error = e
+
+    def save(self, path, tree, step: int, fsync: bool = False) -> None:
         self.wait()
         host_tree = jax.tree.map(lambda l: np.asarray(jax.device_get(l)), tree)
         self._thread = threading.Thread(
-            target=save, args=(path, host_tree, step), daemon=True)
+            target=self._run, args=(path, host_tree, step, fsync),
+            daemon=True)
         self._thread.start()
 
     def wait(self) -> None:
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise RuntimeError("async checkpoint write failed") from err
 
 
 def latest_step(root: str | pathlib.Path) -> Optional[int]:

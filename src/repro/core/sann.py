@@ -45,6 +45,14 @@ Ingest paths:
     rebases it on the live pointers; ``sann_insert_batch`` is their
     composition, and the serving engine overlaps prepare of chunk k+1 with
     commit of chunk k.
+
+Multi-worker merge (DESIGN.md §11.4): ``sann_merge`` unions two sketches
+built over disjoint streams — under the paper's n^-eta uniform sampling a
+union of independent samples is exactly a sample of the union stream.
+Stored points carry logical arrival stamps (`SANNState.stamps`) so the
+merge can interleave the two ring buffers deterministically and re-derive
+the hash tables through the same sort-by-(row, code) append structure the
+ingest path uses.
 """
 from __future__ import annotations
 
@@ -108,6 +116,26 @@ class SANNState(NamedTuple):
     n_stored: jax.Array     # () int32 — live stored points (== valid.sum())
     tables: jax.Array       # (L, n_buckets, bucket_cap) int32 slot ids, -1 empty
     table_ptr: jax.Array    # (L, n_buckets) int32 cyclic bucket pointers
+    stamps: jax.Array       # (capacity,) int32 — logical arrival time of each
+    #   stored point (its stream index, = n_seen at arrival; saturating like
+    #   n_seen, -1 for never-written slots).  Ingest never reads it; it is
+    #   what lets `sann_merge` interleave two disjoint-stream sketches in a
+    #   deterministic logical-time order.
+
+
+def sann_empty_state(cfg: SANNConfig) -> SANNState:
+    """Allocate an empty sketch for a *resolved* config (shapes documented
+    on `SANNState`)."""
+    return SANNState(
+        points=jnp.zeros((cfg.capacity, cfg.dim), jnp.float32),
+        valid=jnp.zeros((cfg.capacity,), bool),
+        write_ptr=jnp.zeros((), jnp.int32),
+        n_seen=jnp.zeros((), jnp.int32),
+        n_stored=jnp.zeros((), jnp.int32),
+        tables=jnp.full((cfg.L, cfg.n_buckets, cfg.bucket_cap), -1, jnp.int32),
+        table_ptr=jnp.zeros((cfg.L, cfg.n_buckets), jnp.int32),
+        stamps=jnp.full((cfg.capacity,), -1, jnp.int32),
+    )
 
 
 def sann_init(cfg: SANNConfig, key: jax.Array):
@@ -119,16 +147,7 @@ def sann_init(cfg: SANNConfig, key: jax.Array):
     float32."""
     cfg = cfg.resolved()
     params = lsh.init_pstable(key, cfg.dim, cfg.L, cfg.k, cfg.w, cfg.n_buckets)
-    state = SANNState(
-        points=jnp.zeros((cfg.capacity, cfg.dim), jnp.float32),
-        valid=jnp.zeros((cfg.capacity,), bool),
-        write_ptr=jnp.zeros((), jnp.int32),
-        n_seen=jnp.zeros((), jnp.int32),
-        n_stored=jnp.zeros((), jnp.int32),
-        tables=jnp.full((cfg.L, cfg.n_buckets, cfg.bucket_cap), -1, jnp.int32),
-        table_ptr=jnp.zeros((cfg.L, cfg.n_buckets), jnp.int32),
-    )
-    return cfg, params, state
+    return cfg, params, sann_empty_state(cfg)
 
 
 def sann_insert(state: SANNState, params, x: jax.Array, key: jax.Array,
@@ -148,6 +167,8 @@ def sann_insert(state: SANNState, params, x: jax.Array, key: jax.Array,
 
     points = state.points.at[slot].set(jnp.where(keep, x, state.points[slot]))
     valid = state.valid.at[slot].set(jnp.where(keep, True, state.valid[slot]))
+    stamps = state.stamps.at[slot].set(
+        jnp.where(keep, state.n_seen, state.stamps[slot]))
 
     codes = lsh.hash_points(params, x)                          # (L,)
     rows = jnp.arange(cfg.L)
@@ -163,7 +184,7 @@ def sann_insert(state: SANNState, params, x: jax.Array, key: jax.Array,
         % cfg.capacity,
         n_seen=saturating_add(state.n_seen, 1),
         n_stored=state.n_stored + jnp.where(keep & ~evict, 1, 0),
-        tables=tables, table_ptr=table_ptr,
+        tables=tables, table_ptr=table_ptr, stamps=stamps,
     )
 
 
@@ -219,10 +240,24 @@ def sann_prepare_chunk(params, xs: jax.Array, key: jax.Array,
          stream order, with per-bucket append counts and the cap-survivor
          mask (``rank >= seg_total - bucket_cap``).
     """
+    keys = jax.random.split(key, xs.shape[0])
+    keep = jax.vmap(lambda k: jax.random.bernoulli(k, cfg.keep_prob))(keys)
+    return sann_prepare_given_keep(params, xs, keep, cfg)
+
+
+def sann_prepare_given_keep(params, xs: jax.Array, keep: jax.Array,
+                            cfg: SANNConfig) -> SANNPrep:
+    """`sann_prepare_chunk` with the keep mask supplied by the caller
+    (everything after the Bernoulli draws: prefix ranks, last-writer mask,
+    one hash matmul, the sort-by-(row, code) append structure).
+
+    This is the entry point for arrival sequences whose sampling already
+    happened — `sann_merge` feeds it the stamp-interleaved union of two
+    sketches' stored points (all pre-sampled, so ``keep`` = their validity
+    mask), reusing the exact append/eviction machinery of the ingest path.
+    """
     B = xs.shape[0]
     cap = cfg.capacity
-    keys = jax.random.split(key, B)
-    keep = jax.vmap(lambda k: jax.random.bernoulli(k, cfg.keep_prob))(keys)
 
     # --- slot ranks: prefix sum over kept points ---------------------------
     kept_rank = (jnp.cumsum(keep) - keep).astype(jnp.int32)  # exclusive
@@ -318,13 +353,20 @@ def sann_commit_chunk(state: SANNState, prep: SANNPrep,
         val, mode="drop").reshape(tables.shape)
     table_ptr = state.table_ptr + prep.counts
 
+    # Logical arrival stamps: point i in the chunk arrived at stream time
+    # n_seen + i (the same saturating accumulation the per-point path's
+    # n_seen chain produces).
+    arrival = saturating_add(state.n_seen,
+                             jnp.arange(B, dtype=jnp.int32))
+    stamps = state.stamps.at[win_slot].set(arrival, mode="drop")
+
     newly = prep.winner & ~state.valid[jnp.where(prep.winner, slot, 0)]
     return SANNState(
         points=points, valid=valid,
         write_ptr=(state.write_ptr + prep.n_kept) % cap,
         n_seen=saturating_add(state.n_seen, B),
         n_stored=state.n_stored + newly.sum(),
-        tables=tables, table_ptr=table_ptr,
+        tables=tables, table_ptr=table_ptr, stamps=stamps,
     )
 
 
@@ -366,6 +408,61 @@ def sann_insert_chunked(state: SANNState, params, xs: jax.Array,
         state = sann_insert_batch(state, params, xs[n_full * chunk:],
                                   ckeys[n_full], cfg)
     return state
+
+
+def sann_merge(a: SANNState, b: SANNState, params, cfg: SANNConfig) -> SANNState:
+    """Union of two S-ANN sketches built (with *identical* params and cfg)
+    over **disjoint** streams — the multi-worker combine.
+
+    Under the paper's n^-eta uniform sampling, a union of independently
+    sampled substreams is exactly a sample of the union stream, so merging
+    is semantically just "one sketch that saw both streams".  Mechanically:
+
+      1. **interleave by logical timestamp**: the stored points of both
+         sketches are ordered by their arrival stamps (`SANNState.stamps`),
+         ties broken a-before-b — a fixed, deterministic interleaving of
+         the two streams (for K-way merges, fold left in worker order);
+      2. **re-derive the tables**: the interleaved union is replayed as one
+         pre-sampled chunk through the existing sort-by-(row, code) append
+         structure (`sann_prepare_given_keep` + `sann_commit_chunk` from an
+         empty state) — one hash matmul over ≤ 2·capacity points;
+      3. **tombstone-consistent eviction**: if the union exceeds
+         ``capacity``, the ring keeps the newest ``capacity`` points by
+         stamp and the evicted (oldest) points' table entries come out as
+         -1 — exactly the eviction rule of the ingest path.
+
+    Counters combine saturating (``n_seen``, like every ingest path);
+    ``n_stored``/``write_ptr``/``valid`` are re-derived from the union.
+    When neither input has ever evicted or wrapped, the merged sketch is
+    bit-identical (modulo ``stamps``, which keep their per-stream clocks)
+    to a single sketch fed the interleaved stream with the same keep
+    decisions (tests/test_cluster.py); with eviction, the *live point set*
+    and query answers still match, but slot ids rotate by the evicted
+    count.  Associative at the stored-set level: the newest-``capacity``
+    rule commutes with folding (tests/test_distributed.py).
+    """
+    cap = cfg.capacity
+    pts = jnp.concatenate([a.points, b.points])              # (2*cap, d)
+    valid = jnp.concatenate([a.valid, b.valid])
+    stamps = jnp.concatenate([a.stamps, b.stamps])
+    # Stable order: valid entries first, by ascending stamp; ties keep input
+    # order (a's entries, then b's — and slot order within one sketch, which
+    # is arrival order between two stamps of the same value post-saturation).
+    order = jnp.lexsort((stamps, ~valid))
+    xs = pts[order]
+    keep = valid[order]
+    st_sorted = stamps[order]
+
+    prep = sann_prepare_given_keep(params, xs, keep, cfg)
+    merged = sann_commit_chunk(sann_empty_state(cfg), prep, cfg)
+    # The commit stamped slots with their union-chunk offsets; restore the
+    # true per-stream arrival stamps so later merges interleave correctly.
+    slot = prep.kept_rank % cap
+    win_slot = jnp.where(prep.winner, slot, cap)
+    return merged._replace(
+        stamps=merged.stamps.at[win_slot].set(st_sorted, mode="drop"),
+        n_seen=saturating_add(a.n_seen, b.n_seen),
+    )
 
 
 def sann_delete(state: SANNState, params, x: jax.Array, cfg: SANNConfig,
@@ -517,7 +614,8 @@ def sann_query_batch(state: SANNState, params, qs: jax.Array, cfg: SANNConfig) -
 def sann_bytes(cfg: SANNConfig) -> int:
     """Concrete sketch footprint for the Fig.-5 memory-scaling benchmark."""
     cfg = cfg.resolved()
-    pts = cfg.capacity * cfg.dim * 4 + cfg.capacity  # points + valid
+    # points + valid + arrival stamps
+    pts = cfg.capacity * cfg.dim * 4 + cfg.capacity + cfg.capacity * 4
     tbl = cfg.L * cfg.n_buckets * (cfg.bucket_cap + 1) * 4
     return pts + tbl
 

@@ -59,6 +59,7 @@ from jax.sharding import Mesh, NamedSharding
 
 from repro.core import lsh, race, sann, swakde
 from repro.core.race import race_merge  # noqa: F401  (re-export: merge API)
+from repro.core.sann import sann_merge  # noqa: F401  (re-export)
 from repro.core.swakde import swakde_merge  # noqa: F401  (re-export)
 
 from .sharding import ShardingCtx, make_ctx
@@ -174,7 +175,8 @@ def _sann_state_specs(ctx: ShardingCtx):
     return sann.SANNState(
         points=r, valid=r, write_ptr=r, n_seen=r, n_stored=r,
         tables=ctx.spec("sketch_tables", None, None),
-        table_ptr=ctx.spec("sketch_tables", None))
+        table_ptr=ctx.spec("sketch_tables", None),
+        stamps=r)
 
 
 def shard_race(state: race.RACEState, params, ctx: ShardingCtx):
@@ -523,6 +525,29 @@ def sharded_sann_commit_chunk(state: sann.SANNState, prep: sann.SANNPrep,
         body, ctx.mesh,
         in_specs=(_sann_state_specs(ctx), _sann_prep_specs(ctx)),
         out_specs=_sann_state_specs(ctx))(state, prep)
+
+
+def sharded_sann_merge(a: sann.SANNState, b: sann.SANNState, params,
+                       cfg: sann.SANNConfig, ctx: ShardingCtx) -> sann.SANNState:
+    """Sharded disjoint-stream union (`core.sann.sann_merge`): the
+    stamp-interleaved union of the replicated point stores is computed
+    identically on every device, and each device re-derives its own table
+    block by hashing the union with its row block of the LSH params —
+    exactly the sharded-ingest decomposition, so the merged sharded state
+    equals the single-device merge block-for-block."""
+    if ctx.mesh is None:
+        return sann.sann_merge(a, b, params, cfg)
+    Lsh = _check_rows(cfg.L, _num_shards(ctx), "S-ANN")
+    cfg_local = dataclasses.replace(cfg, L=Lsh)
+
+    def body(sa, sb, p):
+        return sann.sann_merge(sa, sb, _local_params(p, Lsh), cfg_local)
+
+    return _smap(
+        body, ctx.mesh,
+        in_specs=(_sann_state_specs(ctx), _sann_state_specs(ctx),
+                  _param_specs(params, ctx)),
+        out_specs=_sann_state_specs(ctx))(a, b, params)
 
 
 def sharded_sann_delete(state: sann.SANNState, params, x: jax.Array,

@@ -1,0 +1,50 @@
+"""Durability subsystem: snapshots + write-ahead log for the streaming
+engines (DESIGN.md §11).
+
+Two cooperating pieces, wired into `repro.serve.engine.SketchEngine`:
+
+  * `snapshot` — full sketch-state checkpoints over the atomic/async
+    `repro.checkpoint` layer, labelled by the engine's operation sequence
+    number;
+  * `wal` — a chunk-granular write-ahead log appended at ``ingest_async``
+    enqueue time, so the stream tail past the newest snapshot is always
+    replayable through the engine's own prepare/commit path.
+
+``recover()`` (on the engine) = load latest snapshot + replay the WAL
+tail; the result is bit-identical to the uninterrupted run
+(tests/test_persist.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from . import snapshot, wal  # noqa: F401
+from .wal import KIND_CHUNK, KIND_DELETE, WALRecord, WriteAheadLog  # noqa: F401
+
+
+@dataclasses.dataclass(frozen=True)
+class DurabilityConfig:
+    """Durability knobs for a `SketchEngine`.
+
+    ``dir`` — root directory (snapshots in ``step_<seq>/``, WAL segments in
+    ``wal/``).  ``snapshot_every`` — background snapshot cadence in
+    committed operations (chunks + logged mutations); smaller = shorter
+    recovery replay, more checkpoint I/O.  ``fsync`` — fsync every WAL
+    append (power-loss durability) instead of flush-only (process-death
+    durability; also applied to snapshots, which license WAL compaction).
+    ``keep_snapshots`` — completed snapshots retained after compaction
+    (min 1: the newest snapshot is what recovery starts from once its WAL
+    records are compacted away)."""
+    dir: str
+    snapshot_every: int = 64
+    fsync: bool = False
+    keep_snapshots: int = 2
+
+    def __post_init__(self):
+        if self.snapshot_every < 1:
+            raise ValueError(f"snapshot_every={self.snapshot_every} (< 1)")
+        if self.keep_snapshots < 1:
+            raise ValueError(
+                f"keep_snapshots={self.keep_snapshots}: the newest snapshot "
+                "must survive pruning — its covered WAL records are already "
+                "compacted away")

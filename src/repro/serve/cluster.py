@@ -1,0 +1,469 @@
+"""Merge-based multi-worker streaming cluster (DESIGN.md §11.4–11.5).
+
+Scales ingest past one engine: N worker `SketchEngine`s (the existing
+single-engine services, unchanged) ingest **hash-partitioned substreams**
+concurrently — each worker has its own commit worker + prepare thread, so
+K workers drive up to 2K cores — and a coordinator combines the per-worker
+sketch states through the merge algebra the cores already expose:
+
+  * RACE      — `core.race.race_merge` (exact counter addition): cluster
+                estimates are *bit-identical* to a single engine over the
+                whole stream, any partition.
+  * SW-AKDE   — `core.swakde.swakde_merge` (canonical DGIM bucket-union):
+                bit-identical while nothing has expired from the window;
+                once worker windows expire, estimate-level (per-input eps')
+                like any EH merge.  Worker clocks tick per *local* point —
+                size worker windows as window/K for a balanced partition.
+  * S-ANN     — `core.sann.sann_merge` (stamp-interleaved union under the
+                paper's n^-eta sampling: a union of independently sampled
+                substreams is exactly a sample of the union stream).
+                Workers share LSH params (same seed) but salt their keep
+                decisions (`ingest_salt`), and the merged sketch equals a
+                single engine fed the canonical interleaving
+                (tests/test_cluster.py).
+
+Merge cadence: the coordinator folds worker snapshots into a cached merged
+state whenever the summed worker commit count has advanced by
+``merge_every`` since the last merge (checked at submit/flush time), and
+*at query time* whenever the cache is stale — so queries always see every
+committed chunk, and ``merge_every`` only tunes how much merge latency is
+paid inline by queries vs amortised into ingest.  Worker snapshots are
+lock-consistent committed prefixes; the merged view is a committed prefix
+per worker.
+
+The cluster exposes the same ``ingest`` / ``ingest_async`` / ``flush`` /
+query API as the single-engine services, plus per-worker durability:
+with ``snapshot_dir`` set, worker w persists under ``<dir>/worker_<w>``
+and ``recover()`` recovers every worker (bit-identically) and re-merges.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import json
+import pathlib
+import threading
+from typing import Callable, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import race, sann, swakde
+from repro.parallel import sketch_sharding as ss
+from repro.serve.engine import SketchEngine
+from repro.serve.kde_service import KDEService, KDEServiceConfig
+from repro.serve.race_service import RACEService, RACEServiceConfig
+from repro.serve.retrieval import RetrievalConfig, RetrievalService
+
+_MIX0 = np.uint64(0x9E3779B97F4A7C15)   # splitmix64 golden-ratio constant
+_MIX1 = np.uint64(0xFF51AFD7ED558CCD)
+_MIX2 = np.uint64(0xC4CEB9FE1A85EC53)
+
+
+def hash_partition(xs: np.ndarray, num_workers: int) -> np.ndarray:
+    """Deterministic content-hash worker assignment: ``xs (B, d) float32``
+    → worker ids ``(B,) int64`` in [0, num_workers).
+
+    Hashes the raw float32 bit patterns (splitmix64-style mix over a
+    per-dimension-weighted sum), so the partition is a pure function of the
+    row's bytes — stable across runs, processes and recovery replays, and
+    independent of arrival order (the property the S-ANN "union of samples"
+    merge argument needs: each point's owner is fixed, so substreams are
+    disjoint)."""
+    if num_workers <= 1:
+        return np.zeros(len(xs), np.int64)
+    b = np.ascontiguousarray(np.asarray(xs, np.float32)).view(np.uint32)
+    with np.errstate(over="ignore"):
+        w = (_MIX0 * (np.arange(b.shape[1], dtype=np.uint64) * np.uint64(2)
+                      + np.uint64(1)))
+        h = (b.astype(np.uint64) * w[None, :]).sum(axis=1)
+        h ^= h >> np.uint64(33)
+        h *= _MIX1
+        h ^= h >> np.uint64(33)
+        h *= _MIX2
+        h ^= h >> np.uint64(33)
+    return (h % np.uint64(num_workers)).astype(np.int64)
+
+
+class ClusterService:
+    """Coordinator over N worker engines + a merge function (base class;
+    use the sketch-specific subclasses below).
+
+    ``make_worker(w)`` must build workers with *identical* sketch params
+    (same seed) — the precondition of every merge.  ``merge_states`` folds
+    a list of worker states into one (worker order fixes the canonical
+    interleaving for S-ANN).  ``merge_every`` is the proactive merge
+    cadence in summed worker commits."""
+
+    def __init__(self, make_worker: Callable[[int], SketchEngine],
+                 num_workers: int, merge_every: int,
+                 merge_states: Callable[[Sequence], object],
+                 snapshot_dir: Optional[str] = None):
+        if num_workers < 1:
+            raise ValueError(f"num_workers={num_workers}")
+        if snapshot_dir is not None:
+            self._check_cluster_dir(snapshot_dir, num_workers)
+        self.workers: List[SketchEngine] = [make_worker(w)
+                                            for w in range(num_workers)]
+        self._merge_every = max(1, int(merge_every))
+        self._merge_fn = jax.jit(merge_states)
+        self._mlock = threading.Lock()
+        self._merged = None
+        self._merged_versions: Optional[tuple] = None
+        self._merged_meta: Optional[dict] = None
+        self._last_merge_total = 0
+
+    @staticmethod
+    def _check_cluster_dir(snapshot_dir: str, num_workers: int) -> None:
+        """Refuse to open a durable cluster directory with a different
+        worker count than it was written with: hash ownership is a
+        function of the count, so a mismatched reopen would silently drop
+        the missing workers' WAL-logged data (and mis-route new points).
+        The count is pinned in ``cluster.json`` on first open."""
+        root = pathlib.Path(snapshot_dir)
+        root.mkdir(parents=True, exist_ok=True)
+        meta_path = root / "cluster.json"
+        # A root holding single-engine durable state (root-level WAL or
+        # snapshots) must not be quietly re-pinned as a cluster dir — the
+        # workers would open empty worker_* subdirs and the existing index
+        # would be silently absent after "recovery".  (The engine-level
+        # cluster.json guard covers the converse direction.)
+        if any(root.glob("step_*")) or (root / "wal").exists():
+            raise RuntimeError(
+                f"{snapshot_dir!r} holds single-engine durable state "
+                "(root-level snapshots/WAL); a cluster persists under "
+                "worker_* subdirectories and cannot recover it.  Use a "
+                "fresh directory, or reopen with the single-engine "
+                "service.")
+        existing = sorted(p.name for p in root.glob("worker_*") if p.is_dir())
+        if meta_path.exists():
+            saved = json.loads(meta_path.read_text()).get("num_workers")
+        elif existing:
+            saved = len(existing)        # legacy dir without metadata
+        else:
+            saved = None
+        if saved is not None and saved != num_workers:
+            raise RuntimeError(
+                f"cluster durability dir {snapshot_dir!r} was written with "
+                f"num_workers={saved}, reopened with {num_workers}: hash "
+                "partition ownership depends on the worker count, so "
+                "recovery would silently lose the other workers' data.  "
+                "Reopen with the original count.")
+        if saved is None:
+            meta_path.write_text(json.dumps({"num_workers": num_workers}))
+
+    # --- ingest ------------------------------------------------------------
+
+    def ingest(self, data) -> None:
+        """Hash-partition ``data`` across the workers and wait for every
+        chunk to commit (``ingest_async`` + ``flush``)."""
+        self.ingest_async(data)
+        self.flush()
+
+    def ingest_async(self, data) -> None:
+        """Hash-partition ``data (B, d)`` and submit each worker's substream
+        to its background ingest queue (order-preserving within a worker).
+
+        Submission interleaves one engine-chunk per worker, round-robin:
+        with ``max_pending`` admission control on, a backpressured worker
+        then only stalls the cluster once *its own* bound is hit with every
+        other queue already fed — submitting whole substreams in worker
+        order would instead park the caller inside worker 0's bound while
+        workers 1..K-1 sit idle (head-of-line blocking).  Per-worker chunk
+        boundaries are identical either way, so states are unchanged."""
+        xs = np.asarray(data, np.float32)
+        if xs.shape[0] == 0:
+            return
+        pid = hash_partition(xs, len(self.workers))
+        parts = [xs[pid == w] for w in range(len(self.workers))]
+        offs = [0] * len(self.workers)
+        pending = True
+        while pending:
+            pending = False
+            for w, worker in enumerate(self.workers):
+                if offs[w] < parts[w].shape[0]:
+                    chunk = worker._chunk
+                    worker.ingest_async(parts[w][offs[w]:offs[w] + chunk])
+                    offs[w] += chunk
+                    pending = pending or offs[w] < parts[w].shape[0]
+        self._maybe_merge()
+
+    def flush(self) -> None:
+        """Wait for every worker's queued chunks to commit (re-raising any
+        worker's background failure), then apply the merge cadence."""
+        for w in self.workers:
+            w.flush()
+        self._maybe_merge()
+
+    def close(self) -> None:
+        """Close every worker; the first failure is re-raised *after* the
+        remaining workers have still been closed (no leaked WAL handles or
+        threads behind an early error)."""
+        first: Optional[BaseException] = None
+        for w in self.workers:
+            try:
+                w.close()
+            except BaseException as e:
+                first = first or e
+        if first is not None:
+            raise first
+
+    def recover(self) -> int:
+        """Recover every worker from its durability directory (snapshot +
+        WAL replay, bit-identical per worker) and rebuild the merged view.
+        Returns the total number of WAL records replayed."""
+        n = sum(w.recover() for w in self.workers)
+        self._refresh()
+        return n
+
+    # --- merged view ---------------------------------------------------------
+
+    @property
+    def versions(self) -> tuple:
+        """Per-worker commit versions (the merge-cadence clock)."""
+        return tuple(w.version for w in self.workers)
+
+    @property
+    def version(self) -> int:
+        """Summed worker commit count."""
+        return sum(self.versions)
+
+    def _maybe_merge(self) -> None:
+        if self.version - self._last_merge_total >= self._merge_every:
+            self._refresh()
+
+    def _refresh(self):
+        """Fold the workers' current committed snapshots into the merged
+        cache (no-op when the cache already matches the snapshots).
+        Returns the consistent ``(state, meta, versions)`` triple."""
+        snaps = [w.snapshot() for w in self.workers]
+        states = [s for s, _ in snaps]
+        vers = tuple(v for _, v in snaps)
+        with self._mlock:
+            if self._merged_versions == vers:
+                return self._merged, self._merged_meta, vers
+            merged = (states[0] if len(states) == 1
+                      else jax.block_until_ready(self._merge_fn(states)))
+            meta = self._meta(states)
+            if (self._merged_versions is None
+                    or sum(self._merged_versions) <= sum(vers)):
+                # Install only if not older than the cache: a racing
+                # _refresh whose snapshots were taken later may already
+                # have installed a newer merge (worker versions are
+                # monotone, so the sum orders snapshots).  Either way this
+                # caller gets its own consistent triple.
+                self._merged = merged
+                self._merged_versions = vers
+                self._merged_meta = meta
+                self._last_merge_total = sum(vers)
+            return merged, meta, vers
+
+    def merged_snapshot(self):
+        """``(state, meta, versions)`` of one consistent merge covering
+        every worker commit: the cached merge when fresh, else a
+        query-time merge of the unmerged tails.  Numerator and any
+        normalising scalars of one answer must come from a single call —
+        state and meta are written together under the merge lock."""
+        vers = self.versions
+        with self._mlock:
+            if self._merged_versions == vers:
+                return self._merged, self._merged_meta, vers
+        return self._refresh()
+
+    def merged_state(self):
+        """The merged sketch alone (see `merged_snapshot`)."""
+        return self.merged_snapshot()[0]
+
+    def _meta(self, states) -> Optional[dict]:
+        """Subclass hook: scalars to capture alongside a merge (same
+        snapshot the merged state came from)."""
+        return None
+
+    def _query_state(self, st, queries):
+        """Run worker 0's jitted query function over ``st`` in its
+        ``query_block`` blocks — the shared read path of every subclass's
+        query API (worker params are identical, so any worker's query fn
+        serves the merged sketch)."""
+        qs = jnp.asarray(queries, jnp.float32)
+        w0 = self.workers[0]
+        return w0._query_blocks(lambda b: w0._query_fn(st, b), qs)
+
+    @property
+    def sketch_bytes(self) -> int:
+        """Total sketch footprint across the workers (N replicas of the
+        same allocation)."""
+        return sum(w.sketch_bytes for w in self.workers)
+
+
+# ---------------------------------------------------------------------------
+# Sketch-specific clusters
+# ---------------------------------------------------------------------------
+
+def _worker_cfg(cfg, w: int, **extra):
+    """Per-worker config: same seed (identical params), per-worker
+    durability subdirectory, plus sketch-specific fields via ``extra``."""
+    sub = (None if getattr(cfg, "snapshot_dir", None) is None
+           else f"{cfg.snapshot_dir}/worker_{w}")
+    return dataclasses.replace(cfg, snapshot_dir=sub, **extra)
+
+
+class ClusterRetrievalService(ClusterService):
+    """N-worker S-ANN cluster: hash-partitioned ingest, `sann_merge`-based
+    coordinator, single-service query API (`query`, `delete`)."""
+
+    def __init__(self, cfg: RetrievalConfig, num_workers: int = 2,
+                 merge_every: int = 8):
+        def make(w: int) -> RetrievalService:
+            # Same seed → identical LSH params (merge precondition); the
+            # salt decorrelates the workers' Bernoulli keep decisions.
+            return RetrievalService(_worker_cfg(cfg, w, ingest_salt=w))
+
+        super().__init__(
+            make, num_workers, merge_every,
+            lambda states: functools.reduce(
+                lambda a, b: ss.sharded_sann_merge(
+                    a, b, self.workers[0].params, self.workers[0].cfg,
+                    self.workers[0]._ctx),
+                states),
+            snapshot_dir=cfg.snapshot_dir)
+
+    def query(self, queries: np.ndarray) -> sann.SANNResult:
+        """Batched (c, r)-queries against the merged sketch, in the worker
+        engine's ``query_block`` blocks."""
+        return self._query_state(self.merged_state(), queries)
+
+    def delete(self, embedding: np.ndarray) -> None:
+        """Turnstile delete-by-value, broadcast to every worker.
+
+        `sann_delete` tombstones every stored point within ``tol`` of the
+        value, so a near-copy with different float bits can live on *any*
+        worker (hash ownership is per bit pattern) — routing to the exact
+        owner alone would miss it.  Broadcasting reproduces single-engine
+        semantics exactly; workers without a match apply a no-op."""
+        x = np.asarray(embedding, np.float32)
+        for worker in self.workers:
+            worker.delete(x)
+
+    @property
+    def stored(self) -> int:
+        """Live stored points in the merged sketch (post union-eviction)."""
+        return int(self.merged_state().n_stored)
+
+
+class ClusterKDEService(ClusterService):
+    """N-worker SW-AKDE cluster: hash-partitioned ingest, EH bucket-union
+    coordinator.  Worker windows tick per local point — configure
+    ``window`` as the per-worker span (≈ global window / K for a balanced
+    partition); estimates are bit-identical to one engine until window
+    expiry, estimate-level after (DESIGN.md §11.5)."""
+
+    def __init__(self, cfg: KDEServiceConfig, num_workers: int = 2,
+                 merge_every: int = 8):
+        super().__init__(
+            lambda w: KDEService(_worker_cfg(cfg, w)), num_workers,
+            merge_every,
+            lambda states: functools.reduce(
+                lambda a, b: swakde.swakde_merge(
+                    a, b, self.workers[0].sketch_cfg),
+                states),
+            snapshot_dir=cfg.snapshot_dir)
+        self.cfg = cfg
+        # cache_grid over the merged sketch: the (L, W) grid-estimate table
+        # is pure given the merged state, so it is cached per merged
+        # versions tuple (same invalidation clock as the merge cache).
+        self._grid = None
+        self._grid_versions: Optional[tuple] = None
+
+    def _meta(self, states):
+        # Captured from the *same* snapshots the merged state came from:
+        # the density denominator is the number of points the merged grid
+        # can still see — each worker contributes its last
+        # min(t_w, window) steps (worker windows tick on local clocks), so
+        # the coverages sum; summing raw clocks would overestimate density
+        # by up to K once the windows saturate.
+        return {"coverage": int(sum(min(int(s.t), self.cfg.window)
+                                    for s in states))}
+
+    def _merged_grid(self, st, vers):
+        """The (L, W) grid-estimate table of merged state ``st`` (computed
+        at most once per merged versions tuple; concurrent same-version
+        computes are benign, last install wins)."""
+        with self._mlock:
+            if self._grid_versions == vers:
+                return self._grid
+        grid = jax.block_until_ready(self.workers[0]._grid_fn(st))
+        with self._mlock:
+            self._grid, self._grid_versions = grid, vers
+        return grid
+
+    def _estimates(self, st, vers, queries) -> np.ndarray:
+        """Batched Ŷ against one merged snapshot — from the per-merge grid
+        cache when ``cache_grid`` is on (bit-identical either way), else
+        the fused engine."""
+        qs = jnp.asarray(queries, jnp.float32)
+        if self.cfg.cache_grid:
+            grid = self._merged_grid(st, vers)
+            w0 = self.workers[0]
+            return np.asarray(w0._query_blocks(
+                lambda b: w0._grid_query_fn(grid, b), qs))
+        return np.asarray(self._query_state(st, qs))
+
+    def query(self, queries: np.ndarray) -> np.ndarray:
+        """Batched unnormalised window-density estimates Ŷ against the
+        merged grid."""
+        st, _, vers = self.merged_snapshot()
+        return self._estimates(st, vers, queries)
+
+    def density(self, queries: np.ndarray) -> np.ndarray:
+        """Normalised density: Ŷ / (summed per-worker window coverage) —
+        the coverage and the estimates come from the *same* merged
+        snapshot."""
+        st, meta, vers = self.merged_snapshot()
+        out = self._estimates(st, vers, queries)
+        return out / max((meta or {}).get("coverage", 0), 1)
+
+    @property
+    def steps(self) -> int:
+        """Stream steps consumed across all workers."""
+        return sum(w.steps for w in self.workers)
+
+
+class ClusterRACEService(ClusterService):
+    """N-worker RACE cluster: hash-partitioned ingest, exact counter-sum
+    coordinator — cluster estimates are bit-identical to a single engine
+    over the whole stream (tests/test_cluster.py)."""
+
+    def __init__(self, cfg: RACEServiceConfig, num_workers: int = 2,
+                 merge_every: int = 8):
+        super().__init__(
+            lambda w: RACEService(_worker_cfg(cfg, w)), num_workers,
+            merge_every,
+            lambda states: functools.reduce(race.race_merge, states),
+            snapshot_dir=cfg.snapshot_dir)
+        self.cfg = cfg
+
+    def query(self, queries: np.ndarray) -> np.ndarray:
+        """Batched unnormalised KDE estimates against the merged counters."""
+        return np.asarray(self._query_state(self.merged_state(), queries))
+
+    def kde(self, queries: np.ndarray) -> np.ndarray:
+        """Normalised density — counters and ``n`` from the *same* merged
+        snapshot."""
+        st = self.merged_state()
+        out = np.asarray(self._query_state(st, queries))
+        return out / max(float(np.asarray(st.n)), 1.0)
+
+    def delete(self, embeddings: np.ndarray) -> None:
+        """Turnstile decrements, routed to each row's hash owner."""
+        xs = np.atleast_2d(np.asarray(embeddings, np.float32))
+        pid = hash_partition(xs, len(self.workers))
+        for w, worker in enumerate(self.workers):
+            rows = xs[pid == w]
+            if rows.shape[0]:
+                worker.delete(rows)
+
+    @property
+    def count(self) -> int:
+        """Signed stream size across all workers."""
+        return sum(w.count for w in self.workers)

@@ -1,11 +1,11 @@
 """Shared streaming-service runtime: two-phase pipelined ingest + snapshot
-queries (DESIGN.md §10).
+queries (DESIGN.md §10), durable via snapshot + WAL (DESIGN.md §11).
 
 Every sketch service is the same state machine: a stream of embedding
 chunks folds into immutable sketch state under a lock, while concurrent
 queries read a snapshot of that state.  `SketchEngine` owns that machinery
-exactly once — `RetrievalService` and `KDEService` are thin subclasses that
-plug in the sketch-specific *prepare* / *commit* pair:
+exactly once — `RetrievalService`, `KDEService` and `RACEService` are thin
+subclasses that plug in the sketch-specific *prepare* / *commit* pair:
 
   * **prepare** (`core.*.{sann,race,swakde}_prepare_chunk`) is pure: the
     hash matmul plus all per-chunk precomputation (keep decisions, sort
@@ -27,6 +27,21 @@ number of ``ingest_async()`` calls leaves the service in exactly the state
 the synchronous ``ingest()`` path produces (it *is* the same path:
 ``ingest == ingest_async + flush``, one chunk loop, one lock).
 
+Admission control: ``max_pending`` bounds the rows queued behind the
+commit worker; ``ingest_async`` blocks (backpressure) instead of letting
+the queue grow without bound.  One chunk is always admitted, so progress
+is guaranteed even when a single chunk exceeds the bound.
+
+Durability (`repro.persist`): with a `DurabilityConfig`, every operation
+gets a global sequence number, chunks are appended to a chunk-granular
+write-ahead log *at enqueue time* (before the commit worker can see
+them), and the commit worker writes background state snapshots every
+``snapshot_every`` operations (WAL segments behind a durable snapshot are
+compacted away).  ``recover()`` = load the newest snapshot + replay the
+WAL tail through this same prepare/commit path — bit-identical to the
+uninterrupted run, because per-chunk PRNG keys are a pure function of the
+chunk's sequence number (the ``_make_chunk_item(chunk, seq)`` contract).
+
 Query-side snapshot caching: every commit bumps a version counter;
 `cached()` memoises pure functions of a snapshot (e.g. the SW-AKDE
 (L, W) grid-estimate table) keyed by that version, so repeated query
@@ -36,6 +51,7 @@ cache automatically.
 from __future__ import annotations
 
 import collections
+import pathlib
 import threading
 import traceback
 from typing import Any, Callable, Optional
@@ -43,9 +59,24 @@ from concurrent.futures import ThreadPoolExecutor
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+
+from repro import persist
+from repro.checkpoint.checkpoint import AsyncCheckpointer
 
 # Queue marker telling the ingest worker to exit (see SketchEngine.close).
 _STOP = object()
+
+
+def durability_from(cfg) -> Optional[persist.DurabilityConfig]:
+    """Shared service-config → DurabilityConfig mapping: any config with a
+    ``snapshot_dir`` (plus ``snapshot_every`` / ``wal_fsync``) opts into
+    the snapshot + WAL subsystem; ``snapshot_dir=None`` stays volatile."""
+    if getattr(cfg, "snapshot_dir", None) is None:
+        return None
+    return persist.DurabilityConfig(dir=cfg.snapshot_dir,
+                                    snapshot_every=cfg.snapshot_every,
+                                    fsync=cfg.wal_fsync)
 
 
 class SketchEngine:
@@ -54,28 +85,38 @@ class SketchEngine:
     Subclass contract (all other plumbing lives here, once):
 
       * set ``self.state`` (an immutable pytree) before first use;
-      * ``_make_chunk_item(chunk)`` — called in submission order under the
-        submit lock; returns the argument tuple for ``_prepare`` (this is
-        where a per-chunk PRNG key schedule is drawn, so the schedule is
-        deterministic across sync/async ingest);
+      * ``_make_chunk_item(chunk, seq)`` — called in submission order under
+        the submit lock; returns the argument tuple for ``_prepare``.  Any
+        per-chunk randomness must be a pure function of ``seq`` (e.g.
+        ``jax.random.fold_in(base_key, seq)``) so the schedule is identical
+        across sync/async ingest *and* across crash recovery replay;
       * ``_prepare(*item)`` — jitted pure prepare phase (state-independent);
-      * ``_commit(state, prep)`` — jitted commit phase.
+      * ``_commit(state, prep)`` — jitted commit phase;
+      * optionally ``_apply_wal_record(kind, arrays)`` for service-logged
+        mutations (e.g. deletes) and ``_place_state(state)`` to re-shard a
+        host-restored snapshot.
 
     Knobs: ``ingest_chunk`` rows per prepare/commit pair, ``query_block``
     rows per fused query call, ``pipelined=False`` disables the
     double-buffered overlap (prepare and commit run strictly in sequence —
-    the benchmark baseline; results are bit-identical either way).
+    the benchmark baseline; results are bit-identical either way),
+    ``max_pending`` bounds queued-but-uncommitted rows (None = unbounded),
+    ``durability`` enables the snapshot + WAL subsystem.
     """
 
     state: Any
 
     def __init__(self, ingest_chunk: int, query_block: int = 1024,
-                 pipelined: bool = True):
+                 pipelined: bool = True,
+                 max_pending: Optional[int] = None,
+                 durability: Optional[persist.DurabilityConfig] = None):
         self._chunk = max(1, int(ingest_chunk))
         self._query_block = max(1, int(query_block))
         self._pipelined = bool(pipelined)
+        self._max_pending = (None if max_pending is None
+                             else max(1, int(max_pending)))
         # _lock guards state + version + snapshot cache; _submit_lock orders
-        # chunk submission (key draws happen in queue order).
+        # chunk submission (seq numbers + WAL appends happen in queue order).
         self._lock = threading.Lock()
         self._submit_lock = threading.Lock()
         self._version = 0
@@ -83,9 +124,34 @@ class SketchEngine:
         self._queue: collections.deque = collections.deque()
         self._cv = threading.Condition()
         self._pending = 0
+        self._pending_rows = 0
         self._worker: Optional[threading.Thread] = None
         self._ingest_error: Optional[str] = None
         self._closed = False
+        self._poisoned = False
+        # Durability: global operation sequence (chunks + logged mutations).
+        # _seq = next seq to assign, _committed_seq = ops applied to state.
+        self._seq = 0
+        self._committed_seq = 0
+        self._dur = durability
+        self._wal: Optional[persist.WriteAheadLog] = None
+        self._ckpt: Optional[AsyncCheckpointer] = None
+        self._needs_recover = False
+        self._snap_inflight: Optional[int] = None
+        self._last_snap_seq = 0
+        if durability is not None:
+            if (pathlib.Path(durability.dir) / "cluster.json").exists():
+                raise RuntimeError(
+                    f"{durability.dir!r} is a cluster durability directory "
+                    "(its state lives under worker_* subdirectories); a "
+                    "single engine cannot recover it — reopen with the "
+                    "cluster service at the original worker count.")
+            self._wal = persist.WriteAheadLog(
+                pathlib.Path(durability.dir) / "wal", fsync=durability.fsync)
+            self._ckpt = AsyncCheckpointer()
+            self._needs_recover = (
+                persist.snapshot.latest_seq(durability.dir) is not None
+                or self._wal.has_records())
         # One dedicated prepare thread: the CPU PJRT client serializes
         # executables dispatched from a single thread, so the overlap of
         # prepare(k+1) with commit(k) needs a second dispatch thread (the
@@ -96,7 +162,7 @@ class SketchEngine:
 
     # --- subclass hooks ----------------------------------------------------
 
-    def _make_chunk_item(self, chunk: jax.Array) -> tuple:
+    def _make_chunk_item(self, chunk: jax.Array, seq: int) -> tuple:
         return (chunk,)
 
     def _prepare(self, *item):
@@ -104,6 +170,16 @@ class SketchEngine:
 
     def _commit(self, state, prep):
         raise NotImplementedError
+
+    def _apply_wal_record(self, kind: int, arrays: dict) -> None:
+        """Replay a service-logged mutation record (see `_durable_mutate`).
+        Subclasses that log mutations must override."""
+        raise NotImplementedError(f"unknown WAL record kind {kind}")
+
+    def _place_state(self, state):
+        """Re-place a host-restored snapshot onto the engine's devices/mesh
+        (identity by default; sharded services override)."""
+        return state
 
     # --- ingest ------------------------------------------------------------
 
@@ -115,25 +191,79 @@ class SketchEngine:
 
     def ingest_async(self, data) -> None:
         """Queue a block of rows for background two-phase ingest and return
-        immediately.  Chunks commit in submission order; concurrent queries
-        observe some committed prefix.  Call ``flush()`` to wait."""
-        xs = jnp.asarray(data, jnp.float32)
+        (mostly) immediately.  Chunks commit in submission order; concurrent
+        queries observe some committed prefix.  With ``max_pending`` set,
+        blocks while the queue holds that many uncommitted rows
+        (admission-control backpressure).  With durability, each chunk is
+        WAL-logged before it becomes visible to the commit worker.  Call
+        ``flush()`` to wait for the commits."""
+        if self._wal is not None:
+            # Durable path: keep a host copy so WAL records slice host
+            # memory (byte-identical to the device chunks) instead of
+            # paying a device→host read per chunk under the submit lock —
+            # converting on whichever side the input already lives on, so
+            # neither host nor device inputs pay a redundant round trip.
+            if isinstance(data, np.ndarray):
+                host = np.asarray(data, np.float32)
+                xs = jnp.asarray(host)
+            else:
+                xs = jnp.asarray(data, jnp.float32)
+                host = np.asarray(xs)
+        else:
+            host, xs = None, jnp.asarray(data, jnp.float32)
         if xs.shape[0] == 0:
             return
         with self._submit_lock:
-            if self._closed:
-                raise RuntimeError(f"{type(self).__name__} is closed")
-            items = [self._make_chunk_item(xs[i:i + self._chunk])
-                     for i in range(0, xs.shape[0], self._chunk)]
-            with self._cv:
-                self._queue.extend(items)
-                self._pending += len(items)
-                if self._worker is None:
-                    self._worker = threading.Thread(
-                        target=self._worker_loop, daemon=True,
-                        name=f"{type(self).__name__}-ingest")
-                    self._worker.start()
-                self._cv.notify_all()
+            self._check_ingestable()
+            for i in range(0, xs.shape[0], self._chunk):
+                c = xs[i:i + self._chunk]
+                if self._max_pending is not None:
+                    with self._cv:
+                        while self._pending_rows >= self._max_pending:
+                            self._cv.wait()
+                seq = self._seq
+                item = self._make_chunk_item(c, seq)
+                if self._wal is not None:
+                    # WAL-before-publish: the record is durable before the
+                    # commit worker can see the chunk.  A failed append
+                    # (e.g. ENOSPC) leaves seq assignment and the log in
+                    # sync, but chunks of this call logged *before* the
+                    # failure are already accepted — so the engine poisons
+                    # itself rather than invite a blind resubmit that
+                    # would double-ingest them; recover() replays exactly
+                    # the accepted prefix.
+                    try:
+                        self._wal.append([(seq, persist.KIND_CHUNK,
+                                           {"xs": host[i:i + self._chunk]})])
+                    except BaseException:
+                        self._poisoned = True
+                        raise
+                self._seq = seq + 1
+                with self._cv:
+                    self._queue.append((item, int(c.shape[0])))
+                    self._pending += 1
+                    self._pending_rows += int(c.shape[0])
+                    if self._worker is None:
+                        self._worker = threading.Thread(
+                            target=self._worker_loop, daemon=True,
+                            name=f"{type(self).__name__}-ingest")
+                        self._worker.start()
+                    self._cv.notify_all()
+
+    def _check_ingestable(self) -> None:
+        if self._closed:
+            raise RuntimeError(f"{type(self).__name__} is closed")
+        if self._needs_recover:
+            raise RuntimeError(
+                f"durable state found under {self._dur.dir!r}: call "
+                "recover() before ingesting (or point durability at an "
+                "empty directory)")
+        if self._poisoned:
+            raise RuntimeError(
+                "ingest failed on a durable engine: WAL-logged chunks were "
+                "dropped by fail-stop, so in-memory state no longer tracks "
+                "the log.  Open a fresh engine on the same directory and "
+                "recover() — the WAL replays every accepted chunk.")
 
     def flush(self) -> None:
         """Block until every queued chunk is committed (and the state is
@@ -156,10 +286,10 @@ class SketchEngine:
         jax.block_until_ready(st)
 
     def close(self) -> None:
-        """Commit everything already queued, then stop the worker thread
-        and the prepare pool.  Idempotent; the engine rejects new ingests
-        afterwards (queries keep working).  Call ``flush()`` first if you
-        need background failures re-raised."""
+        """Commit everything already queued, then stop the worker thread,
+        the prepare pool and the durability writers.  Idempotent; the
+        engine rejects new ingests afterwards (queries keep working).
+        Call ``flush()`` first if you need background failures re-raised."""
         with self._submit_lock:
             if self._closed:
                 return
@@ -174,6 +304,12 @@ class SketchEngine:
         if self._prep_pool is not None:
             self._prep_pool.shutdown(wait=True)
             self._prep_pool = None
+        try:
+            if self._ckpt is not None:
+                self._ckpt.wait()       # re-raises a failed background save
+        finally:
+            if self._wal is not None:
+                self._wal.close()       # ... without leaking the handle
 
     def _worker_loop(self) -> None:
         """THE chunk loop: double-buffered prepare/commit over the live
@@ -181,19 +317,20 @@ class SketchEngine:
         prepare pool computes chunk k+1 — including chunks that were
         queued after k started (the lookahead pulls from the live queue,
         so one-chunk-per-call producers still pipeline)."""
-        ahead: Optional[tuple] = None       # (item, future) prepared ahead
+        ahead: Optional[tuple] = None       # (entry, future) prepared ahead
         while True:
             if ahead is not None:
-                item, fut = ahead
+                entry, fut = ahead
                 ahead = None
             else:
                 with self._cv:
                     while not self._queue:
                         self._cv.wait()
-                    item = self._queue.popleft()
-                if item is _STOP:
+                    entry = self._queue.popleft()
+                if entry is _STOP:
                     return
                 fut = None
+            item, rows = entry
             try:
                 # Fail-stop: after a failure, drop queued chunks (instead
                 # of committing a stream with a hole in it) until flush()
@@ -208,15 +345,25 @@ class SketchEngine:
                                    if self._queue and
                                    self._queue[0] is not _STOP else None)
                         if nxt is not None:
-                            ahead = (nxt, self._submit_prepare(nxt))
+                            ahead = (nxt, self._submit_prepare(nxt[0]))
                     prep = fut.result() if hasattr(fut, "result") else fut
                     self._commit_one(prep)
             except BaseException:
                 with self._cv:
                     self._ingest_error = traceback.format_exc()
+                    # A durable engine cannot keep accepting work after a
+                    # failed commit: the failed/dropped chunks are already
+                    # WAL-logged (= accepted), so continuing would let seq
+                    # assignment and snapshot labels drift from the log.
+                    # Volatile engines keep the old retry-after-flush
+                    # semantics; durable ones direct the caller to
+                    # recover(), which replays every logged chunk.
+                    if self._dur is not None:
+                        self._poisoned = True
             finally:
                 with self._cv:
                     self._pending -= 1
+                    self._pending_rows -= rows
                     self._cv.notify_all()
 
     def _submit_prepare(self, item: tuple):
@@ -233,10 +380,132 @@ class SketchEngine:
         with self._lock:
             self.state = st = self._commit(self.state, prep)
             self._version += 1
+            self._committed_seq += 1
+            seq = self._committed_seq
         # Pace the pipeline outside the lock: queries snapshot the (futures
         # of the) new state immediately; the worker waits here while the
         # prepare pool hashes the next chunk.
         jax.block_until_ready(st)
+        if (self._dur is not None
+                and seq - self._last_snap_seq >= self._dur.snapshot_every):
+            self._write_snapshot(st, seq)
+
+    # --- durability --------------------------------------------------------
+
+    def _write_snapshot(self, st, seq: int) -> None:
+        """Background snapshot of the committed state at operation ``seq``
+        (commit-worker thread).  The previous snapshot — durable by the
+        time the checkpointer accepts a new one — releases its WAL
+        segments (compaction) and old snapshot dirs."""
+        root = self._dur.dir
+        if self._snap_inflight is not None:
+            self._ckpt.wait()
+            self._wal.compact(self._snap_inflight - 1)
+            persist.snapshot.prune(root, keep=self._dur.keep_snapshots)
+        self._snap_inflight = seq
+        persist.snapshot.async_save(self._ckpt, root, seq, st,
+                                    fsync=self._dur.fsync)
+        self._wal.rotate()
+        self._last_snap_seq = seq
+
+    def _durable_mutate(self, kind: int, arrays: dict,
+                        fn: Callable[[Any], Any]) -> None:
+        """Apply an out-of-band mutation (e.g. a turnstile delete) with WAL
+        logging.  Pending chunks are flushed first so the WAL's append
+        order equals the apply order (the recovery replay order); the
+        record must be replayable by `_apply_wal_record`.
+
+        The volatile path runs the *same* flush-first protocol (minus the
+        WAL write): mutations consume a sequence number and apply after
+        every queued chunk either way, so a volatile and a durable engine
+        fed the same operation sequence stay bit-identical — and the
+        pre-flush means no commit is concurrently advancing
+        ``_committed_seq`` while we do."""
+        with self._submit_lock:
+            self._check_ingestable()
+            self.flush()
+            if self._wal is not None:
+                # A failed append may have left a torn record mid-log, so
+                # (like the chunk path) poison rather than invite a retry
+                # that would append after garbage bytes; recovery truncates
+                # the torn tail and the unacknowledged op is simply absent.
+                try:
+                    self._wal.append([(self._seq, kind, arrays)])
+                except BaseException:
+                    self._poisoned = True
+                    raise
+            # Counters advance once the record is durable; if applying
+            # `fn` then fails, the op is on disk and recovery will apply
+            # it — the standard WAL-before-apply contract.
+            self._seq += 1
+            self._committed_seq += 1
+            try:
+                self._mutate_state(fn)
+            except BaseException:
+                # Durable case: the op is on disk but not in memory —
+                # without this the next snapshot would be labelled as if it
+                # applied and compaction could drop the record for good.
+                # Poison like a failed commit; recovery replays the logged
+                # op.  (Volatile engines have no log to drift from.)
+                if self._wal is not None:
+                    self._poisoned = True
+                raise
+            # Mutations count toward the snapshot cadence like chunk
+            # commits (a mutation-heavy workload must not grow the WAL and
+            # the recovery replay without bound).  Safe here: the flush
+            # above drained the worker and the submit lock blocks new
+            # submissions, so no commit races the snapshot bookkeeping.
+            if (self._dur is not None and self._committed_seq -
+                    self._last_snap_seq >= self._dur.snapshot_every):
+                with self._lock:
+                    st = self.state
+                self._write_snapshot(st, self._committed_seq)
+
+    def recover(self) -> int:
+        """Restore from the durability directory: load the newest snapshot,
+        then replay the WAL tail through the engine's own two-phase
+        prepare/commit path — the recovered state is bit-identical to the
+        uninterrupted run (tests/test_persist.py).  Torn WAL tails (a crash
+        mid-append) are truncated.  Must be called on a fresh engine,
+        before any ingest; returns the number of WAL records replayed."""
+        if self._dur is None:
+            raise RuntimeError("recover() requires a DurabilityConfig")
+        with self._submit_lock:
+            if self._seq or self._version or self._closed:
+                raise RuntimeError("recover() must run on a fresh engine")
+            root = self._dur.dir
+            snap = persist.snapshot.latest_seq(root)
+            if snap is not None:
+                st = persist.snapshot.load(root, snap, self.state)
+                with self._lock:
+                    self.state = self._place_state(st)
+                self._seq = self._committed_seq = snap
+                self._version = snap
+                self._last_snap_seq = snap
+            n = 0
+            for rec in self._wal.replay(after=self._committed_seq - 1):
+                if rec.seq != self._committed_seq:
+                    raise RuntimeError(
+                        f"WAL gap: expected seq {self._committed_seq}, "
+                        f"found {rec.seq}")
+                if rec.kind == persist.KIND_CHUNK:
+                    chunk = jnp.asarray(rec.arrays["xs"], jnp.float32)
+                    item = self._make_chunk_item(chunk, rec.seq)
+                    prep = self._prepare_ready(item)
+                    with self._lock:
+                        self.state = self._commit(self.state, prep)
+                        self._version += 1
+                else:
+                    self._apply_wal_record(rec.kind, rec.arrays)
+                self._committed_seq += 1
+                self._seq = self._committed_seq
+                n += 1
+            self._wal.truncate_torn_tail()
+            self._needs_recover = False
+            with self._lock:
+                st = self.state
+            jax.block_until_ready(st)
+            return n
 
     # --- snapshots, caching, queries ---------------------------------------
 
@@ -269,10 +538,10 @@ class SketchEngine:
         return val
 
     def _mutate_state(self, fn: Callable[[Any], Any]) -> None:
-        """Apply an out-of-band state update (e.g. a turnstile delete)
-        atomically; bumps the version so snapshot caches invalidate.  Note:
-        applies to the current committed prefix — chunks still queued
-        behind it commit afterwards."""
+        """Apply an out-of-band state update atomically; bumps the version
+        so snapshot caches invalidate.  Services route mutations through
+        `_durable_mutate` (flush-first + seq accounting + WAL when
+        durable); this is the raw apply step."""
         with self._lock:
             self.state = fn(self.state)
             self._version += 1

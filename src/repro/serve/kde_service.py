@@ -41,7 +41,7 @@ import numpy as np
 
 from repro.core import lsh, swakde
 from repro.parallel import sketch_sharding as ss
-from repro.serve.engine import SketchEngine
+from repro.serve.engine import SketchEngine, durability_from
 
 
 @dataclasses.dataclass
@@ -76,6 +76,14 @@ class KDEServiceConfig:
     # prebuilt 1-D ("shard",) mesh.  Both unset → single-device.
     num_shards: int = 0
     mesh: Optional[object] = None   # jax.sharding.Mesh
+    # Admission control: bound on queued-but-uncommitted rows; ingest_async
+    # blocks (backpressure) at the bound.  None = unbounded queue.
+    max_pending: Optional[int] = None
+    # Durability (repro.persist): WAL-logged chunks + background snapshots
+    # under ``snapshot_dir``; ``recover()`` restores bit-identically.
+    snapshot_dir: Optional[str] = None
+    snapshot_every: int = 64
+    wal_fsync: bool = False
 
 
 class KDEService(SketchEngine):
@@ -98,7 +106,9 @@ class KDEService(SketchEngine):
             raise ValueError(cfg.hash_family)
         super().__init__(ingest_chunk=cfg.ingest_chunk,
                          query_block=cfg.query_block,
-                         pipelined=cfg.pipelined)
+                         pipelined=cfg.pipelined,
+                         max_pending=cfg.max_pending,
+                         durability=durability_from(cfg))
         self.state = swakde.swakde_init(self.sketch_cfg)
 
         self._ctx = ss.make_service_ctx(cfg.mesh, cfg.num_shards)
@@ -128,6 +138,11 @@ class KDEService(SketchEngine):
 
     def _commit(self, state: swakde.SWAKDEState, prep: swakde.SWAKDEPrep):
         return self._commit_fn(state, prep)
+
+    def _place_state(self, state: swakde.SWAKDEState) -> swakde.SWAKDEState:
+        if self._ctx.mesh is None:
+            return state
+        return ss.shard_swakde(state, self.params, self._ctx)[0]
 
     # --- serving API -------------------------------------------------------
 

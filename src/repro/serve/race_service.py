@@ -1,0 +1,172 @@
+"""RACE density service: streaming (whole-stream) KDE counters with
+pipelined ingest and batched queries (paper §2.3, [CS20]).
+
+The third sketch's serving layer, completing the trio next to
+`repro.serve.retrieval.RetrievalService` (S-ANN) and
+`repro.serve.kde_service.KDEService` (SW-AKDE): points arrive as a stream
+of embeddings, the service maintains the (L, W) RACE counter grid and
+answers batched unnormalised KDE queries.  Deletions are native turnstile
+decrements (`delete`).
+
+Runtime: a `repro.serve.engine.SketchEngine` — the shared streaming
+runtime owns the lock, the chunk loop, the two-phase pipelined ingest
+(`core.race.race_prepare_chunk` hashing + histogramming chunk k+1 on the
+prepare thread while `race_commit_chunk` adds chunk k), the background
+queue (``ingest_async`` / ``flush``), admission control (``max_pending``)
+and — with ``snapshot_dir`` set — the snapshot + WAL durability subsystem
+(`repro.persist`; counters restore bit-identically via ``recover()``).
+
+Because RACE counters merge by exact addition (`core.race.race_merge`),
+this service is also the per-worker engine of the merge-based cluster
+runtime (`repro.serve.cluster.ClusterRACEService`), where N workers ingest
+hash-partitioned substreams and the coordinator's merged counters are
+*bit-identical* to a single engine over the whole stream.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import persist
+from repro.core import lsh, race
+from repro.parallel import sketch_sharding as ss
+from repro.serve.engine import SketchEngine, durability_from
+
+
+@dataclasses.dataclass
+class RACEServiceConfig:
+    dim: int
+    L: int = 32               # sketch rows (repetitions)
+    W: int = 128              # LSH range after rehash
+    hash_family: str = "srp"  # "srp" (angular) | "pstable" (Euclidean)
+    k: int = 2                # concatenation power p
+    w: float = 4.0            # p-stable bucket width (pstable only)
+    median_of_means: int = 0  # 0/1 = row mean; g > 1 = median of g means
+    seed: int = 0
+    # Batched-ingest chunk: one prepare/commit pair per chunk; each distinct
+    # partial-chunk size triggers one extra jit trace.
+    ingest_chunk: int = 1024
+    # Two-phase pipelining: prepare chunk k+1 on the engine's prepare thread
+    # while chunk k commits (identical results either way).
+    pipelined: bool = True
+    # Query block: queries are answered in blocks of this many rows.
+    query_block: int = 1024
+    # Multi-device sharding: num_shards > 1 splits the L rows across that
+    # many local devices; ``mesh`` overrides with a prebuilt mesh.
+    num_shards: int = 0
+    mesh: Optional[object] = None   # jax.sharding.Mesh
+    # Admission control: bound on queued-but-uncommitted rows (None = off).
+    max_pending: Optional[int] = None
+    # Durability (repro.persist): WAL-logged chunks + background snapshots
+    # under ``snapshot_dir``; ``recover()`` restores bit-identically.
+    snapshot_dir: Optional[str] = None
+    snapshot_every: int = 64
+    wal_fsync: bool = False
+
+
+class RACEService(SketchEngine):
+    """Thread-safe streaming RACE KDE counters with pipelined ingest and
+    batched queries (shared runtime: `repro.serve.engine.SketchEngine`)."""
+
+    def __init__(self, cfg: RACEServiceConfig):
+        self.cfg = cfg
+        key = jax.random.PRNGKey(cfg.seed)
+        if cfg.hash_family == "srp":
+            self.params = lsh.init_srp(key, cfg.dim, L=cfg.L, k=cfg.k,
+                                       n_buckets=cfg.W)
+        elif cfg.hash_family == "pstable":
+            self.params = lsh.init_pstable(key, cfg.dim, L=cfg.L, k=cfg.k,
+                                           w=cfg.w, n_buckets=cfg.W)
+        else:
+            raise ValueError(cfg.hash_family)
+        super().__init__(ingest_chunk=cfg.ingest_chunk,
+                         query_block=cfg.query_block,
+                         pipelined=cfg.pipelined,
+                         max_pending=cfg.max_pending,
+                         durability=durability_from(cfg))
+        self.state = race.race_init(cfg.L, cfg.W)
+
+        self._ctx = ss.make_service_ctx(cfg.mesh, cfg.num_shards)
+        if self._ctx.mesh is not None:
+            self.state, self.params = ss.shard_race(self.state, self.params,
+                                                    self._ctx)
+        self._prepare_fn = jax.jit(
+            lambda xs: ss.sharded_race_prepare_chunk(
+                self.params, xs, cfg.W, self._ctx))
+        self._commit_fn = jax.jit(
+            lambda st, prep: ss.sharded_race_commit_chunk(
+                st, prep, self._ctx))
+        self._delete_commit_fn = jax.jit(
+            lambda st, prep: ss.sharded_race_commit_chunk(
+                st, prep, self._ctx, sign=-1))
+        self._query_fn = jax.jit(
+            lambda st, qs: ss.sharded_race_query_batch(
+                st, self.params, qs, self._ctx,
+                median_of_means=cfg.median_of_means))
+
+    # --- engine hooks (two-phase ingest) -----------------------------------
+
+    def _prepare(self, chunk: jax.Array) -> race.RACEPrep:
+        return self._prepare_fn(chunk)
+
+    def _commit(self, state: race.RACEState, prep: race.RACEPrep):
+        return self._commit_fn(state, prep)
+
+    def _place_state(self, state: race.RACEState) -> race.RACEState:
+        if self._ctx.mesh is None:
+            return state
+        return ss.shard_race(state, self.params, self._ctx)[0]
+
+    def _apply_wal_record(self, kind: int, arrays: dict) -> None:
+        if kind == persist.KIND_DELETE:
+            xs = jnp.asarray(arrays["xs"], jnp.float32)
+            self._mutate_state(
+                lambda st: self._delete_commit_fn(st, self._prepare_fn(xs)))
+            return
+        super()._apply_wal_record(kind, arrays)
+
+    # --- serving API -------------------------------------------------------
+
+    @property
+    def num_shards(self) -> int:
+        """Devices the rows are split across (1 = single-device path)."""
+        return ss.ctx_num_shards(self._ctx)
+
+    def delete(self, embeddings: np.ndarray) -> None:
+        """Turnstile deletion: decrement the counters for a batch of rows
+        ``(B, d)``.  Pending async chunks flush first, then the decrement
+        applies atomically (WAL-logged before applying when durable)."""
+        xs = jnp.atleast_2d(jnp.asarray(embeddings, jnp.float32))
+        self._durable_mutate(
+            persist.KIND_DELETE, {"xs": np.asarray(xs)},
+            lambda st: self._delete_commit_fn(st, self._prepare_fn(xs)))
+
+    def query(self, queries: np.ndarray) -> np.ndarray:
+        """Batched unnormalised KDE estimates (Theorem 2.3) against one
+        committed snapshot, in ``query_block`` blocks."""
+        qs = jnp.asarray(queries, jnp.float32)
+        state, _ = self.snapshot()
+        return np.asarray(
+            self._query_blocks(lambda b: self._query_fn(state, b), qs))
+
+    def kde(self, queries: np.ndarray) -> np.ndarray:
+        """Normalised density: raw estimate / signed stream size, from one
+        snapshot."""
+        qs = jnp.asarray(queries, jnp.float32)
+        state, _ = self.snapshot()
+        out = np.asarray(
+            self._query_blocks(lambda b: self._query_fn(state, b), qs))
+        return out / max(float(np.asarray(state.n)), 1.0)
+
+    @property
+    def count(self) -> int:
+        """Signed stream size (insertions - deletions) consumed so far."""
+        return int(self.state.n)
+
+    @property
+    def sketch_bytes(self) -> int:
+        return self.cfg.L * self.cfg.W * 4 + 4

@@ -31,9 +31,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import persist
 from repro.core import sann
 from repro.parallel import sketch_sharding as ss
-from repro.serve.engine import SketchEngine
+from repro.serve.engine import SketchEngine, durability_from
 
 
 @dataclasses.dataclass
@@ -48,6 +49,10 @@ class RetrievalConfig:
     k: Optional[int] = 8
     bucket_cap: int = 16
     seed: int = 0
+    # Ingest-key salt: folded into the per-chunk key schedule so cluster
+    # workers sharing one `seed` (→ identical LSH params, required for
+    # merging) still draw independent keep decisions.
+    ingest_salt: int = 0
     # Batched-ingest chunk: each chunk is one prepare (hash matmul + sort)
     # plus one commit (segment scatter).  Larger chunks amortise more; each
     # distinct partial-chunk size triggers one extra jit trace.
@@ -66,6 +71,16 @@ class RetrievalConfig:
     # prebuilt 1-D ("shard",) mesh.  Both unset → single-device.
     num_shards: int = 0
     mesh: Optional[object] = None   # jax.sharding.Mesh
+    # Admission control: bound on queued-but-uncommitted rows; ingest_async
+    # blocks (backpressure) at the bound.  None = unbounded queue.
+    max_pending: Optional[int] = None
+    # Durability (repro.persist): set ``snapshot_dir`` to WAL-log every
+    # ingest chunk at enqueue time and write background state snapshots
+    # every ``snapshot_every`` committed operations; ``recover()`` then
+    # restores snapshot + WAL tail bit-identically after a crash.
+    snapshot_dir: Optional[str] = None
+    snapshot_every: int = 64
+    wal_fsync: bool = False
 
 
 class RetrievalService(SketchEngine):
@@ -80,9 +95,15 @@ class RetrievalService(SketchEngine):
             base, jax.random.PRNGKey(cfg.seed))
         super().__init__(ingest_chunk=cfg.ingest_chunk,
                          query_block=cfg.query_block,
-                         pipelined=cfg.pipelined)
+                         pipelined=cfg.pipelined,
+                         max_pending=cfg.max_pending,
+                         durability=durability_from(cfg))
         self.state = state
-        self._key = jax.random.PRNGKey(cfg.seed + 1)
+        # Per-chunk keys are fold_in(base, chunk seq): a pure function of
+        # the chunk's global sequence number, so the schedule is identical
+        # across sync/async ingest and across crash-recovery replay.
+        self._ingest_key = jax.random.fold_in(
+            jax.random.PRNGKey(cfg.seed + 1), cfg.ingest_salt)
 
         self._ctx = ss.make_service_ctx(cfg.mesh, cfg.num_shards)
         if self._ctx.mesh is not None:
@@ -103,18 +124,29 @@ class RetrievalService(SketchEngine):
 
     # --- engine hooks (two-phase ingest) -----------------------------------
 
-    def _make_chunk_item(self, chunk: jax.Array) -> tuple:
-        # Per-chunk key schedule, drawn in submission order (under the
-        # engine's submit lock) — the same schedule whether the chunks are
-        # ingested synchronously or via ingest_async.
-        self._key, sub = jax.random.split(self._key)
-        return (chunk, sub)
+    def _make_chunk_item(self, chunk: jax.Array, seq: int) -> tuple:
+        # Per-chunk key = fold_in(base, chunk seq): deterministic given the
+        # submission order, identical for sync/async ingest and for the
+        # crash-recovery replay of the same sequence numbers.
+        return (chunk, jax.random.fold_in(self._ingest_key, seq))
 
     def _prepare(self, chunk: jax.Array, key: jax.Array) -> sann.SANNPrep:
         return self._prepare_fn(chunk, key)
 
     def _commit(self, state: sann.SANNState, prep: sann.SANNPrep):
         return self._commit_fn(state, prep)
+
+    def _place_state(self, state: sann.SANNState) -> sann.SANNState:
+        if self._ctx.mesh is None:
+            return state
+        return ss.shard_sann(state, self.params, self._ctx)[0]
+
+    def _apply_wal_record(self, kind: int, arrays: dict) -> None:
+        if kind == persist.KIND_DELETE:
+            x = jnp.asarray(arrays["x"])
+            self._mutate_state(lambda st: self._delete_fn(st, x))
+            return
+        super()._apply_wal_record(kind, arrays)
 
     # --- serving API -------------------------------------------------------
 
@@ -124,10 +156,14 @@ class RetrievalService(SketchEngine):
         return ss.ctx_num_shards(self._ctx)
 
     def delete(self, embedding: np.ndarray) -> None:
-        """Turnstile deletion (paper §3.4) — applied atomically to the
-        current committed prefix (queued async chunks commit after it)."""
+        """Turnstile deletion (paper §3.4).  Pending async chunks are
+        flushed first, then the delete applies atomically — so apply order
+        equals submission order (and, with durability, WAL order; the
+        delete is logged before it applies)."""
         x = jnp.asarray(embedding)
-        self._mutate_state(lambda st: self._delete_fn(st, x))
+        self._durable_mutate(persist.KIND_DELETE,
+                             {"x": np.asarray(x, np.float32)},
+                             lambda st: self._delete_fn(st, x))
 
     def query(self, queries: np.ndarray) -> sann.SANNResult:
         """Batched queries (paper §3.3) through the fused batch engine, in

@@ -456,3 +456,273 @@ def test_swakde_merge_semantics():
                   for p_ in parts)
     np.testing.assert_allclose(est_m, est_sum,
                                rtol=3 * cfg.kde_eps, atol=1.5)
+
+
+def test_merge_fuzz_identity_and_associativity():
+    """Property fuzz over randomized 3-way stream splits (PR-5 satellite):
+
+      * RACE — empty merge is the bitwise identity; associativity holds
+        bitwise for every random split;
+      * SW-AKDE — empty merge is a live-state identity (estimates + mass);
+        associativity is bit-exact at the estimate level while nothing has
+        expired (window >= stream), and mass-exact always.
+    """
+    import jax
+    import numpy as np
+    from repro.core import lsh, race, swakde
+
+    d = 6
+    params = lsh.init_srp(jax.random.PRNGKey(0), d, L=4, k=2, n_buckets=16)
+    cfg = swakde.SWAKDEConfig(L=4, W=16, window=100_000, eh_eps=0.25)
+    qs = np.asarray(jax.random.normal(jax.random.PRNGKey(9), (4, d)))
+
+    def eq(x, y):
+        return all((np.asarray(u) == np.asarray(v)).all()
+                   for u, v in zip(jax.tree.leaves(x), jax.tree.leaves(y)))
+
+    for seed in range(4):
+        rng = np.random.default_rng(seed)
+        xs = rng.normal(0, 1, (180, d)).astype(np.float32)
+        pid = rng.integers(0, 3, len(xs))        # randomized 3-way split
+
+        # --- RACE: bitwise identity + associativity ------------------------
+        parts = [race.race_update_batch(race.race_init(4, 16), params,
+                                        xs[pid == w]) for w in range(3)]
+        a, b, c = parts
+        assert eq(race.race_merge(a, race.race_init(4, 16)), a)
+        assert eq(race.race_merge(race.race_init(4, 16), a), a)
+        assert eq(race.race_merge(race.race_merge(a, b), c),
+                  race.race_merge(a, race.race_merge(b, c)))
+
+        # --- SW-AKDE: live-state identity + estimate associativity ---------
+        sparts = [swakde.swakde_update_chunk(swakde.swakde_init(cfg), params,
+                                             xs[pid == w], cfg)
+                  for w in range(3)]
+        sa, sb, sc = sparts
+        est = lambda st: np.asarray(
+            swakde.swakde_query_batch(st, params, qs, cfg))
+        empty = swakde.swakde_init(cfg)._replace(t=sa.t)
+        np.testing.assert_array_equal(est(swakde.swakde_merge(sa, empty,
+                                                              cfg)), est(sa))
+        lhs = swakde.swakde_merge(swakde.swakde_merge(sa, sb, cfg), sc, cfg)
+        rhs = swakde.swakde_merge(sa, swakde.swakde_merge(sb, sc, cfg), cfg)
+        # no expiry -> the bucket-union canonicalises: estimates bit-exact
+        np.testing.assert_array_equal(est(lhs), est(rhs))
+        # ... and equal to one sketch over the whole stream
+        whole = swakde.swakde_update_chunk(swakde.swakde_init(cfg), params,
+                                           xs, cfg)
+        np.testing.assert_array_equal(est(lhs), est(whole))
+
+
+def test_merge_counter_saturation():
+    """Counter-overflow audit (PR-5 satellite): every merge combines its
+    stream counters through core.util.saturating_add — near-INT32_MAX
+    inputs clamp instead of wrapping negative."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.core import lsh, race, sann
+    from repro.core.util import _INT32_MAX
+
+    big = int(_INT32_MAX) - 5
+    a = race.RACEState(counts=jnp.zeros((2, 4), jnp.int32),
+                       n=jnp.int32(big))
+    b = race.RACEState(counts=jnp.ones((2, 4), jnp.int32),
+                       n=jnp.int32(100))
+    m = race.race_merge(a, b)
+    assert int(m.n) == int(_INT32_MAX)          # clamped, not wrapped
+    assert int(race.race_merge(b, a).n) == int(_INT32_MAX)
+
+    cfg, params, empty = sann.sann_init(
+        sann.SANNConfig(dim=4, n_max=100, eta=0.5, r=0.5, c=2.0, w=1.0,
+                        L=2, k=2), jax.random.PRNGKey(0))
+    xs = jax.random.normal(jax.random.PRNGKey(1), (32, 4))
+    sa = sann.sann_insert_batch(empty, params, xs[:16],
+                                jax.random.PRNGKey(2), cfg)
+    sb = sann.sann_insert_batch(empty, params, xs[16:],
+                                jax.random.PRNGKey(3), cfg)
+    sa = sa._replace(n_seen=jnp.int32(big))
+    merged = sann.sann_merge(sa, sb, params, cfg)
+    assert int(merged.n_seen) == int(_INT32_MAX)
+    # sanity: un-saturated counters still add exactly
+    assert int(sann.sann_merge(
+        sa._replace(n_seen=jnp.int32(16)), sb, params, cfg).n_seen) == 32
+
+
+def test_sann_merge_disjoint_streams():
+    """`sann_merge` semantics at the core level: two workers ingest
+    disjoint halves of a stream under a shared per-point key schedule; the
+    merged sketch equals a single sketch fed the canonical stamp
+    interleaving — bitwise (except the stamp clocks) without eviction, and
+    with eviction (union > capacity) the live point set, tombstone
+    consistency and nearest-neighbor answers still match."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.core import sann
+
+    def ingest_perpoint(state, params, rows, keys, cfg):
+        for r, k in zip(rows, keys):
+            state = sann.sann_insert(state, params, jnp.asarray(r), k, cfg)
+        return state
+
+    def run_case(n_points, cfg_kw, expect_evict):
+        cfg, params, empty = sann.sann_init(
+            sann.SANNConfig(**cfg_kw), jax.random.PRNGKey(0))
+        rng = np.random.default_rng(0)
+        data = rng.uniform(0, 1, (n_points, cfg.dim)).astype(np.float32)
+        master = jax.random.PRNGKey(5)
+        gkeys = [jax.random.fold_in(master, i) for i in range(n_points)]
+        pid = np.arange(n_points) % 2            # round-robin split: the
+        # canonical (local idx, worker) interleaving == original order
+        wa = ingest_perpoint(empty, params, data[pid == 0],
+                             [gkeys[i] for i in range(n_points)
+                              if pid[i] == 0], cfg)
+        wb = ingest_perpoint(empty, params, data[pid == 1],
+                             [gkeys[i] for i in range(n_points)
+                              if pid[i] == 1], cfg)
+        ref = ingest_perpoint(empty, params, data, gkeys, cfg)
+        m = sann.sann_merge(wa, wb, params, cfg)
+
+        live = lambda st: sorted(
+            map(tuple, np.asarray(st.points)[np.asarray(st.valid)].tolist()))
+        assert live(m) == live(ref), "live point sets differ"
+        # tombstone consistency: every table entry points at a live slot
+        tb = np.asarray(m.tables)
+        assert np.asarray(m.valid)[tb[tb >= 0]].all()
+        assert int(m.n_stored) == int(np.asarray(m.valid).sum())
+        assert int(m.n_seen) == n_points
+
+        qs = jnp.asarray(data[:8] + 0.01)
+        rm = sann.sann_query_batch(m, params, qs, cfg)
+        rr = sann.sann_query_batch(ref, params, qs, cfg)
+        np.testing.assert_allclose(np.asarray(rm.distance),
+                                   np.asarray(rr.distance), atol=1e-5)
+        np.testing.assert_array_equal(np.asarray(rm.found),
+                                      np.asarray(rr.found))
+        if not expect_evict:
+            # no eviction: full bitwise equality except the stamp clocks
+            for name, (u, v) in zip(m._fields, zip(m, ref)):
+                if name == "stamps":
+                    continue
+                np.testing.assert_array_equal(np.asarray(u), np.asarray(v),
+                                              err_msg=f"field {name!r}")
+            np.testing.assert_array_equal(np.asarray(rm.index),
+                                          np.asarray(rr.index))
+        else:
+            assert int(m.n_stored) == cfg.capacity, "union must evict"
+
+    # eta=0, stream < capacity: exact case
+    run_case(200, dict(dim=6, n_max=100, eta=0.0, r=0.4, c=2.0, w=1.0,
+                       L=4, k=2, bucket_cap=4), expect_evict=False)
+    # eta=0, stream > capacity: union eviction + tombstones (capacity =
+    # max(64, 4 * 16^1.0) = 64 < 300 kept)
+    run_case(300, dict(dim=6, n_max=16, eta=0.0, r=0.4, c=2.0, w=1.0,
+                       L=4, k=2, bucket_cap=4, capacity_slack=1.0),
+             expect_evict=True)
+
+
+def test_sann_merge_fold_associative_stored_set():
+    """K-way fold associativity at the stored-set level, *with* eviction:
+    folding sann_merge in any grouping over 3 workers keeps the same live
+    point set (the newest-capacity rule commutes with folding), matching
+    the newest-capacity of the canonical interleaved union."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.core import sann
+
+    cfg, params, empty = sann.sann_init(sann.SANNConfig(
+        dim=6, n_max=16, eta=0.0, r=0.4, c=2.0, w=1.0, L=4, k=2,
+        bucket_cap=4, capacity_slack=1.0), jax.random.PRNGKey(0))
+    assert cfg.capacity == 64
+    rng = np.random.default_rng(1)
+    data = rng.uniform(0, 1, (270, 6)).astype(np.float32)   # > capacity
+    key = jax.random.PRNGKey(7)
+    parts = [sann.sann_insert_batch(empty, params, jnp.asarray(data[w::3]),
+                                    key, cfg) for w in range(3)]
+    a, b, c = parts
+    m = lambda x, y: sann.sann_merge(x, y, params, cfg)
+    lhs = m(m(a, b), c)
+    rhs = m(a, m(b, c))
+    live = lambda st: sorted(
+        map(tuple, np.asarray(st.points)[np.asarray(st.valid)].tolist()))
+    assert int(lhs.n_stored) == cfg.capacity        # eviction happened
+    assert live(lhs) == live(rhs)
+    # and both equal the newest-capacity of the stamp-interleaved union:
+    # stamps are the per-worker local indices, ties broken worker-first,
+    # so the newest 64 points of the (local_idx, worker) order survive.
+    order = []
+    for j in range(90):
+        for w in range(3):
+            order.append(data[w::3][j])
+    expect = sorted(map(tuple, np.asarray(order[-cfg.capacity:],
+                                          np.float32).tolist()))
+    assert live(lhs) == expect
+
+
+def test_sharded_sann_merge_matches_single_device():
+    out = _run("""
+        import dataclasses, jax, numpy as np
+        from repro.core import sann
+        from repro.parallel import sketch_sharding as ss
+
+        cfg, params, empty = sann.sann_init(sann.SANNConfig(
+            dim=8, n_max=500, eta=0.2, r=0.4, c=2.0, w=1.0, L=8, k=2,
+            bucket_cap=4), jax.random.PRNGKey(0))
+        xs = jax.random.normal(jax.random.PRNGKey(1), (256, 8))
+        a = sann.sann_insert_batch(empty, params, xs[:128],
+                                   jax.random.PRNGKey(2), cfg)
+        b = sann.sann_insert_batch(empty, params, xs[128:],
+                                   jax.random.PRNGKey(3), cfg)
+        single = sann.sann_merge(a, b, params, cfg)
+
+        ctx = ss.make_sketch_ctx(ss.make_sketch_mesh(8))
+        a8, params8 = ss.shard_sann(a, params, ctx)
+        b8, _ = ss.shard_sann(b, params, ctx)
+        merged8 = ss.sharded_sann_merge(a8, b8, params8, cfg, ctx)
+        for name, (u, v) in zip(single._fields, zip(single, merged8)):
+            np.testing.assert_array_equal(
+                np.asarray(u), np.asarray(v), err_msg=name)
+        print("SANN_MERGE_SHARDED_OK")
+    """)
+    assert "SANN_MERGE_SHARDED_OK" in out
+
+
+def test_sharded_sann_recovery_matches_single_run():
+    """Durability composes with sharding: a table-sharded durable service
+    crash-recovers onto the mesh (`_place_state` re-shards the
+    host-restored snapshot) bit-identically to the uninterrupted sharded
+    run."""
+    out = _run("""
+        import tempfile
+        import numpy as np, jax
+        from repro.serve.retrieval import RetrievalConfig, RetrievalService
+
+        kw = dict(dim=8, n_max=1000, eta=0.2, r=0.4, c=2.0, w=1.0, L=8,
+                  k=3, ingest_chunk=64, num_shards=8)
+        data = np.random.default_rng(0).uniform(
+            0, 1, (400, 8)).astype(np.float32)
+        with tempfile.TemporaryDirectory() as d:
+            ref = RetrievalService(RetrievalConfig(**kw))
+            ref.ingest(data)
+            a = RetrievalService(RetrievalConfig(
+                **kw, snapshot_dir=d, snapshot_every=3))
+            a.ingest(data)     # crash point: WAL + snapshots on disk
+            a.close()
+            b = RetrievalService(RetrievalConfig(
+                **kw, snapshot_dir=d, snapshot_every=3))
+            replayed = b.recover()
+            assert replayed < -(-400 // 64), "snapshot must be used"
+            for name, (u, v) in zip(ref.state._fields,
+                                    zip(b.state, ref.state)):
+                np.testing.assert_array_equal(
+                    np.asarray(u), np.asarray(v), err_msg=name)
+            qs = np.asarray(data[:6] + 0.01, np.float32)
+            rb, rr = b.query(qs), ref.query(qs)
+            for x, y in zip(rb, rr):
+                np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+            b.close()
+        print("SHARDED_RECOVERY_OK")
+    """)
+    assert "SHARDED_RECOVERY_OK" in out

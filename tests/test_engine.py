@@ -56,13 +56,14 @@ def test_retrieval_pipelined_sequential_async_identical():
     assert _states_equal(svcs[0].state, svcs[2].state)
 
     # ... and identical to the direct core chunk loop under the service's
-    # per-chunk key schedule.
+    # per-chunk key schedule (fold_in(base, chunk seq) — re-derivable from
+    # the sequence number alone, which is what crash recovery replays).
     ref = sann.sann_init(sann.SANNConfig(
         dim=8, n_max=1000, eta=0.2, r=0.4, c=2.0, w=1.0, L=6, k=3),
         jax.random.PRNGKey(0))[2]
-    key = jax.random.PRNGKey(1)
-    for i in range(0, 500, 64):
-        key, sub = jax.random.split(key)
+    base = jax.random.fold_in(jax.random.PRNGKey(1), 0)
+    for seq, i in enumerate(range(0, 500, 64)):
+        sub = jax.random.fold_in(base, seq)
         ref = sann.sann_insert_batch(ref, svcs[0].params,
                                      jnp.asarray(data[i:i + 64]), sub,
                                      svcs[0].cfg)
@@ -148,11 +149,11 @@ def test_retrieval_concurrent_queries_see_committed_prefixes():
     st = sann.sann_init(sann.SANNConfig(
         dim=8, n_max=1000, eta=0.2, r=0.4, c=2.0, w=1.0, L=6, k=3),
         jax.random.PRNGKey(0))[2]
-    key = jax.random.PRNGKey(1)
+    base = jax.random.fold_in(jax.random.PRNGKey(1), 0)
     prefix_res = [jax.tree.map(np.asarray, sann.sann_query_batch(
         st, svc.params, jnp.asarray(qs), svc.cfg))]
-    for i in range(0, 320, chunk):
-        key, sub = jax.random.split(key)
+    for seq, i in enumerate(range(0, 320, chunk)):
+        sub = jax.random.fold_in(base, seq)
         st = sann.sann_insert_batch(st, svc.params,
                                     jnp.asarray(data[i:i + chunk]), sub,
                                     svc.cfg)
@@ -244,6 +245,39 @@ def test_background_ingest_error_surfaces_on_flush():
     del svc._prepare            # restore the class method
     svc.ingest(_data(n=60, seed=7))
     assert svc.steps == 60
+
+
+def test_max_pending_backpressure_blocks_and_releases():
+    """Admission control: with ``max_pending`` set, ingest_async blocks
+    once the queue holds that many uncommitted rows, and unblocks as the
+    worker drains — the final state is unchanged (same chunks, same
+    order)."""
+    chunk = _KDE_KW["ingest_chunk"]
+    data = _data(n=4 * chunk, seed=9)
+    svc = KDEService(KDEServiceConfig(**_KDE_KW, max_pending=chunk))
+    gate = threading.Event()
+    orig_commit = svc._commit
+
+    def slow_commit(state, prep):
+        gate.wait(timeout=30)
+        return orig_commit(state, prep)
+
+    svc._commit = slow_commit
+    t = threading.Thread(target=svc.ingest_async, args=(data,), daemon=True)
+    t.start()
+    # The submitter must stall: >= 1 chunk admitted, but not all 4 (the
+    # commit gate is closed, so pending rows stay at the bound).
+    t.join(timeout=1.0)
+    assert t.is_alive(), "ingest_async ignored max_pending backpressure"
+    assert svc._pending_rows <= chunk
+    gate.set()                   # drain: submitter unblocks, chunks commit
+    t.join(timeout=30)
+    assert not t.is_alive()
+    svc.flush()
+    assert svc.steps == 4 * chunk
+    ref = KDEService(KDEServiceConfig(**_KDE_KW))
+    ref.ingest(data)
+    assert _states_equal(svc.state, ref.state)
 
 
 def test_close_commits_queued_then_rejects_new_work():

@@ -1,0 +1,414 @@
+"""Durability subsystem (repro.persist + the engine's recover()):
+
+  * WAL framing: append/replay roundtrip, torn-tail tolerance + truncation,
+    segment rotation + compaction;
+  * recovery bit-identity: for each sketch service, snapshot + WAL-tail
+    ``recover()`` after a simulated crash reproduces the *uninterrupted*
+    engine state bit-for-bit — including S-ANN ring-wrap/eviction and the
+    SW-AKDE EH clock/expiry state — because replay runs the same
+    seq-keyed prepare/commit path the live engine runs;
+  * the recover-before-ingest guard on a dirty durability directory;
+  * WAL-logged mutations (deletes) replay in apply order.
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from repro import persist
+from repro.persist.wal import WriteAheadLog
+from repro.serve.kde_service import KDEService, KDEServiceConfig
+from repro.serve.race_service import RACEService, RACEServiceConfig
+from repro.serve.retrieval import RetrievalConfig, RetrievalService
+
+# Ring-wrap regime: keep prob 64^-0.1 ~ 0.66 over 400 points ~ 264 kept
+# > capacity max(64, 4 * 64^0.9) = 168 -> the ring laps and evicts.
+_RETR_KW = dict(dim=8, n_max=64, eta=0.1, r=0.4, c=2.0, w=1.0, L=6, k=3,
+                bucket_cap=4, ingest_chunk=64)
+# Window shorter than the stream: EH buckets expire, the clock state (t,
+# per-level timestamps) is load-bearing at recovery.
+_KDE_KW = dict(dim=8, L=6, W=32, window=150, eh_eps=0.2, ingest_chunk=50)
+_RACE_KW = dict(dim=8, L=6, W=32, ingest_chunk=64)
+
+
+def _data(n=400, d=8, seed=0):
+    return np.random.default_rng(seed).uniform(0, 1, (n, d)).astype(
+        np.float32)
+
+
+def _states_equal(a, b):
+    return all(
+        bool((np.asarray(x) == np.asarray(y)).all())
+        for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+def _assert_states_equal(a, b):
+    for name, (x, y) in zip(a._fields, zip(a, b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=f"field {name!r}")
+
+
+def _crash_mid_stream(svc, data, fail_after: int):
+    """Simulate a crash: the commit path dies after ``fail_after`` commits.
+    Every chunk was WAL-logged at enqueue time; the engine's fail-stop
+    drops the rest, exactly like a killed process with a flushed WAL."""
+    orig = svc._commit
+    n_done = [0]
+
+    def bomb(state, prep):
+        if n_done[0] >= fail_after:
+            raise RuntimeError("simulated crash")
+        n_done[0] += 1
+        return orig(state, prep)
+
+    svc._commit = bomb
+    svc.ingest_async(data)
+    with pytest.raises(RuntimeError, match="simulated crash"):
+        svc.flush()
+    svc.close()
+
+
+# ---------------------------------------------------------------------------
+# WAL unit semantics
+# ---------------------------------------------------------------------------
+
+def test_wal_roundtrip_rotation_compaction(tmp_path):
+    wal = WriteAheadLog(tmp_path)
+    for seq in range(4):
+        wal.append([(seq, persist.KIND_CHUNK,
+                     {"xs": np.full((2, 3), seq, np.float32)})])
+    wal.rotate()
+    wal.append([(4, persist.KIND_DELETE,
+                 {"x": np.arange(3, dtype=np.float32)})])
+
+    recs = wal.replay()
+    assert [r.seq for r in recs] == [0, 1, 2, 3, 4]
+    assert recs[4].kind == persist.KIND_DELETE
+    np.testing.assert_array_equal(recs[2].arrays["xs"],
+                                  np.full((2, 3), 2, np.float32))
+    assert [r.seq for r in wal.replay(after=2)] == [3, 4]
+
+    # compaction: seqs 0..3 covered by a snapshot -> sealed segment deleted,
+    # the active segment (seq 4) survives.
+    assert wal.compact(upto=3) == 1
+    assert [r.seq for r in wal.replay()] == [4]
+    wal.close()
+
+
+def test_wal_torn_tail_tolerated_and_truncated(tmp_path):
+    wal = WriteAheadLog(tmp_path)
+    for seq in range(3):
+        wal.append([(seq, persist.KIND_CHUNK,
+                     {"xs": np.full((8,), seq, np.float32)})])
+    wal.close()
+    seg = sorted(tmp_path.glob("wal_*.log"))[-1]
+    good = seg.stat().st_size
+
+    # torn final record: half a record's bytes survive the crash
+    with open(seg, "ab") as f:
+        f.write(b"\x31LWS\xff\xff garbage")
+    wal = WriteAheadLog(tmp_path)
+    recs = wal.replay()
+    assert [r.seq for r in recs] == [0, 1, 2]      # intact prefix only
+    wal.truncate_torn_tail()
+    assert seg.stat().st_size == good
+    wal.append([(3, persist.KIND_CHUNK, {"xs": np.zeros(2, np.float32)})])
+    assert [r.seq for r in wal.replay()] == [0, 1, 2, 3]
+
+    # corrupt a *body* byte: crc catches it, replay stops before the record
+    data = bytearray(seg.read_bytes())
+    data[-1] ^= 0xFF
+    seg.write_bytes(bytes(data))
+    wal = WriteAheadLog(tmp_path)
+    assert [r.seq for r in wal.replay()] == [0, 1, 2]
+    wal.close()
+
+
+# ---------------------------------------------------------------------------
+# Crash-recovery bit-identity per service
+# ---------------------------------------------------------------------------
+
+def test_retrieval_recovery_bit_identity_ring_wrap(tmp_path):
+    data = _data(seed=1)
+    ref = RetrievalService(RetrievalConfig(**_RETR_KW))
+    ref.ingest(data)
+    assert int(ref.state.write_ptr) != int(ref.state.n_stored), \
+        "config must exercise ring wrap for this test to bite"
+
+    dur = dict(snapshot_dir=str(tmp_path), snapshot_every=2)
+    crash = RetrievalService(RetrievalConfig(**_RETR_KW, **dur,
+                                             pipelined=False))
+    _crash_mid_stream(crash, data, fail_after=3)
+
+    svc = RetrievalService(RetrievalConfig(**_RETR_KW, **dur))
+    replayed = svc.recover()
+    n_chunks = -(-len(data) // _RETR_KW["ingest_chunk"])
+    assert 0 < replayed < n_chunks, \
+        "recovery should start from a snapshot, not replay the whole log"
+    _assert_states_equal(svc.state, ref.state)
+
+    # the recovered engine keeps ingesting on the same seq schedule
+    more = _data(n=64, seed=2)
+    svc.ingest(more)
+    ref.ingest(more)
+    _assert_states_equal(svc.state, ref.state)
+    svc.close()
+
+
+def test_kde_recovery_bit_identity_eh_clock(tmp_path):
+    data = _data(seed=3)
+    ref = KDEService(KDEServiceConfig(**_KDE_KW))
+    ref.ingest(data)
+    assert int(ref.state.t) == len(data) > _KDE_KW["window"]
+
+    dur = dict(snapshot_dir=str(tmp_path), snapshot_every=3)
+    crash = KDEService(KDEServiceConfig(**_KDE_KW, **dur, pipelined=False))
+    _crash_mid_stream(crash, data, fail_after=2)
+
+    svc = KDEService(KDEServiceConfig(**_KDE_KW, **dur))
+    svc.recover()
+    _assert_states_equal(svc.state, ref.state)      # incl. ts/num/t (clock)
+    qs = data[:5] + 0.01
+    np.testing.assert_array_equal(svc.query(qs), ref.query(qs))
+    svc.close()
+
+
+def test_race_recovery_bit_identity_with_delete(tmp_path):
+    data = _data(seed=4)
+    ref = RACEService(RACEServiceConfig(**_RACE_KW))
+    svc = RACEService(RACEServiceConfig(**_RACE_KW,
+                                        snapshot_dir=str(tmp_path),
+                                        snapshot_every=2))
+    for s in (ref, svc):
+        s.ingest(data[:200])
+        s.delete(data[:3])           # WAL-logged mutation record
+        s.ingest(data[200:])
+    _assert_states_equal(svc.state, ref.state)
+    svc.close()
+
+    # fresh process: snapshot + WAL tail (chunks *and* the delete record)
+    rec = RACEService(RACEServiceConfig(**_RACE_KW,
+                                        snapshot_dir=str(tmp_path),
+                                        snapshot_every=2))
+    rec.recover()
+    _assert_states_equal(rec.state, ref.state)
+    assert rec.count == ref.count == len(data) - 3
+    rec.close()
+
+
+def test_recovery_after_torn_wal_tail(tmp_path):
+    data = _data(n=192, seed=5)
+    svc = RACEService(RACEServiceConfig(**_RACE_KW,
+                                        snapshot_dir=str(tmp_path)))
+    svc.ingest(data)
+    svc.close()
+    seg = sorted((tmp_path / "wal").glob("wal_*.log"))[-1]
+    with open(seg, "ab") as f:                 # crash mid-append
+        f.write(b"\x00" * 10)
+
+    ref = RACEService(RACEServiceConfig(**_RACE_KW))
+    ref.ingest(data)
+    rec = RACEService(RACEServiceConfig(**_RACE_KW,
+                                        snapshot_dir=str(tmp_path)))
+    rec.recover()                              # tolerates + truncates tail
+    _assert_states_equal(rec.state, ref.state)
+    rec.ingest(data[:64])                      # appends extend the log
+    rec.close()
+
+
+def test_durable_engine_poisons_ingest_after_commit_failure(tmp_path):
+    """Once a durable engine drops WAL-logged chunks (fail-stop), its
+    in-memory state no longer tracks the log — continued ingest would let
+    snapshot labels drift from WAL seqs.  Further ingest must be refused,
+    and recovery on a fresh engine replays *every* accepted chunk (the
+    failure was transient, so the WAL is the truth)."""
+    data = _data(n=200, seed=8)
+    kw = dict(**_KDE_KW, snapshot_dir=str(tmp_path))
+    crash = KDEService(KDEServiceConfig(**kw, pipelined=False))
+    orig, n_done = crash._commit, [0]
+
+    def bomb(state, prep):
+        if n_done[0] >= 1:
+            raise RuntimeError("simulated crash")
+        n_done[0] += 1
+        return orig(state, prep)
+
+    crash._commit = bomb
+    crash.ingest_async(data)
+    with pytest.raises(RuntimeError, match="simulated crash"):
+        crash.flush()
+    with pytest.raises(RuntimeError, match="recover"):
+        crash.ingest(data)               # poisoned, even though fault gone
+    crash.close()
+
+    rec = KDEService(KDEServiceConfig(**kw))
+    rec.recover()
+    ref = KDEService(KDEServiceConfig(**_KDE_KW))
+    ref.ingest(data)                 # all logged chunks, incl. the dropped
+    _assert_states_equal(rec.state, ref.state)
+    rec.close()
+
+
+def test_dirty_dir_requires_recover(tmp_path):
+    data = _data(n=100, seed=6)
+    svc = KDEService(KDEServiceConfig(**_KDE_KW, snapshot_dir=str(tmp_path)))
+    svc.ingest(data)
+    svc.close()
+
+    fresh = KDEService(KDEServiceConfig(**_KDE_KW,
+                                        snapshot_dir=str(tmp_path)))
+    with pytest.raises(RuntimeError, match="recover"):
+        fresh.ingest(data)
+    fresh.recover()
+    fresh.ingest(data)
+    ref = KDEService(KDEServiceConfig(**_KDE_KW))
+    ref.ingest(data)
+    ref.ingest(data)
+    _assert_states_equal(fresh.state, ref.state)
+    fresh.close()
+
+    # recover() refuses to run on an engine that already ingested
+    used = KDEService(KDEServiceConfig(**_KDE_KW))
+    used.ingest(data)
+    with pytest.raises(RuntimeError, match="DurabilityConfig"):
+        used.recover()
+
+
+def test_failed_mutation_wal_append_poisons(tmp_path):
+    """A failed WAL append during a mutation may leave torn bytes mid-log;
+    the engine must poison (like the chunk path) instead of letting a
+    retry append after the garbage."""
+    data = _data(n=100, seed=11)
+    svc = RACEService(RACEServiceConfig(**_RACE_KW,
+                                        snapshot_dir=str(tmp_path)))
+    svc.ingest(data)
+
+    def bad_append(records):
+        raise OSError("disk full")
+
+    svc._wal.append = bad_append
+    with pytest.raises(OSError, match="disk full"):
+        svc.delete(data[:1])
+    with pytest.raises(RuntimeError, match="recover"):
+        svc.ingest(data)
+    svc.close()
+
+
+def test_prune_never_deletes_newest_and_config_validates(tmp_path):
+    """The newest snapshot must survive pruning (its WAL records are
+    compacted away), and DurabilityConfig rejects keep_snapshots < 1."""
+    for seq in (2, 4, 6):
+        persist.snapshot.save(tmp_path, seq, {"x": np.arange(seq)})
+    assert persist.snapshot.prune(tmp_path, keep=0) == 2   # clamped to 1
+    assert persist.snapshot.latest_seq(tmp_path) == 6
+    with pytest.raises(ValueError, match="keep_snapshots"):
+        persist.DurabilityConfig(dir=str(tmp_path), keep_snapshots=0)
+    with pytest.raises(ValueError, match="snapshot_every"):
+        persist.DurabilityConfig(dir=str(tmp_path), snapshot_every=0)
+
+
+def test_fsync_snapshot_roundtrip(tmp_path):
+    """fsync=True snapshots (the power-loss mode that licenses WAL
+    compaction) write and restore exactly like flush-only ones."""
+    state = {"a": np.arange(12, dtype=np.int32).reshape(3, 4),
+             "b": np.ones(5, np.float32)}
+    persist.snapshot.save(tmp_path, 7, state, fsync=True)
+    back = persist.snapshot.load(tmp_path, 7, state)
+    for k in state:
+        np.testing.assert_array_equal(np.asarray(back[k]), state[k])
+
+
+def test_async_snapshot_failure_surfaces(tmp_path, monkeypatch):
+    """A failed background snapshot write must not die silently: the next
+    wait() re-raises (and via the engine's commit worker, flush() would
+    surface it) — otherwise WAL compaction could outrun a durable
+    snapshot."""
+    from repro.checkpoint import checkpoint as ckpt_mod
+
+    def boom(path, tree, step, fsync=False):
+        raise OSError("disk full")
+
+    monkeypatch.setattr(ckpt_mod, "save", boom)
+    ck = ckpt_mod.AsyncCheckpointer()
+    ck.save(tmp_path / "step_1", {"x": np.zeros(3)}, 1)
+    with pytest.raises(RuntimeError, match="async checkpoint write failed"):
+        ck.wait()
+    ck.wait()                    # error consumed; checkpointer reusable
+
+
+def test_failed_mutation_apply_poisons_durable_engine(tmp_path):
+    """If a WAL-logged mutation fails to *apply*, the op is on disk but
+    not in memory — the engine must refuse further work (poison) so a
+    later snapshot can't be labelled as if the op applied; recovery
+    replays the logged op."""
+    data = _data(n=100, seed=10)
+    svc = RACEService(RACEServiceConfig(**_RACE_KW,
+                                        snapshot_dir=str(tmp_path)))
+    svc.ingest(data)
+
+    def boom(st):
+        raise RuntimeError("apply exploded")
+
+    with pytest.raises(RuntimeError, match="apply exploded"):
+        svc._durable_mutate(persist.KIND_DELETE,
+                            {"xs": data[:1]}, boom)
+    with pytest.raises(RuntimeError, match="recover"):
+        svc.ingest(data)
+    svc.close()
+
+    ref = RACEService(RACEServiceConfig(**_RACE_KW))
+    ref.ingest(data)
+    ref.delete(data[:1])                  # what the logged record means
+    rec = RACEService(RACEServiceConfig(**_RACE_KW,
+                                        snapshot_dir=str(tmp_path)))
+    rec.recover()                         # applies the logged delete
+    _assert_states_equal(rec.state, ref.state)
+    rec.close()
+
+
+def test_mutation_only_workload_still_snapshots(tmp_path):
+    """WAL-logged mutations count toward the snapshot cadence: a
+    delete-heavy durable engine must keep snapshotting (bounding WAL
+    growth and recovery replay), not only on chunk commits."""
+    data = _data(n=64, seed=9)
+    kw = dict(**_RACE_KW, snapshot_dir=str(tmp_path), snapshot_every=4)
+    svc = RACEService(RACEServiceConfig(**kw))
+    svc.ingest(data)                      # 1 chunk
+    for i in range(12):                   # 12 mutation records, no chunks
+        svc.delete(data[i:i + 1])
+    svc.close()
+    snaps = sorted(int(p.name.split("_")[1])
+                   for p in tmp_path.glob("step_*"))
+    assert snaps and max(snaps) > 4, f"no mutation-driven snapshot: {snaps}"
+
+    ref = RACEService(RACEServiceConfig(**_RACE_KW))
+    ref.ingest(data)
+    for i in range(12):
+        ref.delete(data[i:i + 1])
+    rec = RACEService(RACEServiceConfig(**kw))
+    replayed = rec.recover()
+    assert replayed < 13                  # tail only, not the whole log
+    _assert_states_equal(rec.state, ref.state)
+    rec.close()
+
+
+def test_snapshot_cadence_compacts_wal_and_prunes(tmp_path):
+    data = _data(n=8 * 50, seed=7)
+    kw = dict(**_KDE_KW, snapshot_dir=str(tmp_path), snapshot_every=2)
+    svc = KDEService(KDEServiceConfig(**kw))
+    svc.ingest(data)          # 8 chunks -> snapshots at 2, 4, 6, 8
+    svc.ingest(data)          # + 8 more
+    svc.close()
+    snaps = sorted(int(p.name.split("_")[1])
+                   for p in tmp_path.glob("step_*"))
+    assert len(snaps) <= 3, f"pruning failed: {snaps}"   # keep=2 (+inflight)
+    segs = list((tmp_path / "wal").glob("wal_*.log"))
+    assert len(segs) <= 3, f"compaction failed: {segs}"
+
+    ref = KDEService(KDEServiceConfig(**_KDE_KW))
+    ref.ingest(data)
+    ref.ingest(data)
+    rec = KDEService(KDEServiceConfig(**kw))
+    rec.recover()
+    _assert_states_equal(rec.state, ref.state)
+    rec.close()
