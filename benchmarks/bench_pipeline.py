@@ -8,16 +8,26 @@ end-to-end service ingest throughput both ways — identical work, identical
 final state (tests/test_engine.py pins bit-identity); the only difference
 is the overlap:
 
-  pipeline.sann.*    — RetrievalService.  The headline regime: the chunk's
-                       packed sort (prepare) and the table segment scatter
-                       (commit) are both serial ops on XLA CPU, so the two
-                       phases genuinely run on separate cores.  On the
-                       2-core CI shape this measures ~1.2-1.3x.
-  pipeline.swakde.*  — KDEService.  The EH replay loop dominates commit and
-                       is internally parallel, so overlap buys little on
-                       2 cores (~1.0x) — reported for honesty; the gap is
-                       the motivation for the TPU-side ingest kernels on
-                       the roadmap.
+  pipeline.sann.*    — RetrievalService.  The chunk's packed sort (prepare)
+                       and the table segment scatter (commit) are both
+                       serial ops on XLA CPU, so the two phases genuinely
+                       run on separate cores (~1.05-1.2x overlap on 2
+                       cores now that the commit half is cheap).
+  pipeline.swakde.*  — KDEService.  The commit is the closed-form
+                       segment-reduce pass (kernels.ops.swakde_segment_pass,
+                       DESIGN.md §12) — the old per-add EH replay that
+                       capped this sketch at ~8k pps is gone.
+
+Every variant row carries a ``prepare_us`` / ``commit_us`` breakdown
+(measured directly on the service's jitted phase fns, steady state, no
+engine threads), and two derived rows make the kernel win visible:
+
+  pipeline.<s>.kernel  — the raw two-phase path per chunk (prepare_us +
+                         commit_us), i.e. the ingest-kernel cost the
+                         engine overlaps.
+  pipeline.swakde.hotcell — commit time of a 100%-one-(row,cell) chunk
+                         over the uniform-chunk commit time (the skew
+                         cliff guard; acceptance: ratio ≤ 3).
 
 Steady-state methodology: the service is built and fully ingested once
 (compiles every jit, fills the ring), then the same stream is re-ingested
@@ -53,14 +63,49 @@ def _ingest_time(svc, data, repeats: int) -> float:
     return float(np.median(ts))
 
 
+def _time_us(fn, repeats: int) -> float:
+    fn()                                  # warm
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(ts))
+
+
+def _phase_breakdown(svc, chunk_data) -> tuple[float, float]:
+    """Steady-state per-chunk (prepare_us, commit_us), measured directly on
+    the service's jitted phase fns against its committed state — the
+    engine's threads and queue are out of the picture, so this is the pure
+    two-phase kernel cost the pipeline overlaps."""
+    import jax
+    import jax.numpy as jnp
+    item = svc._make_chunk_item(jnp.asarray(chunk_data, jnp.float32), 0)
+    state, _ = svc.snapshot()
+    prep = jax.block_until_ready(svc._prepare(*item))
+    p_us = _time_us(
+        lambda: jax.block_until_ready(svc._prepare(*item)), REPEATS)
+    c_us = _time_us(
+        lambda: jax.block_until_ready(svc._commit(state, prep)), REPEATS)
+    return p_us, c_us
+
+
 def _pair(rows, name, data, make_service):
     n_points = data.shape[0]
-    us = {pipelined: _ingest_time(make_service(pipelined), data, REPEATS)
-          for pipelined in (False, True)}
+    us, brk = {}, {}
+    svc = None
+    for pipelined in (False, True):
+        svc = make_service(pipelined)
+        us[pipelined] = _ingest_time(svc, data, REPEATS)
+        brk[pipelined] = _phase_breakdown(svc, data[:svc._chunk])
+        if not pipelined:
+            svc.close()
     for pipelined, variant in ((False, "sequential"), (True, "pipelined")):
         u = us[pipelined]
+        p_us, c_us = brk[pipelined]
         pps = n_points * 1e6 / u
-        derived = f"pps={pps:.0f}"
+        derived = (f"pps={pps:.0f};prepare_us={p_us:.0f};"
+                   f"commit_us={c_us:.0f}")
         speedup = us[False] / u
         if variant == "pipelined":
             derived += f";speedup={speedup:.2f}"
@@ -69,7 +114,22 @@ def _pair(rows, name, data, make_service):
             "name": f"pipeline.{name}.{variant}", "sketch": name,
             "variant": variant, "n_points": n_points, "us_per_call": u,
             "pps": pps, "speedup": speedup,
+            "prepare_us": p_us, "commit_us": c_us,
         })
+    # The raw two-phase kernel path per chunk (no engine threads): what the
+    # ingest kernels cost, and what the pipeline overlaps.
+    p_us, c_us = brk[True]
+    chunk_rows = svc._chunk
+    u = p_us + c_us
+    pps = chunk_rows * 1e6 / u
+    rows.append((f"pipeline.{name}.kernel", u,
+                 f"pps={pps:.0f};prepare_us={p_us:.0f};commit_us={c_us:.0f}"))
+    _json_rows.append({
+        "name": f"pipeline.{name}.kernel", "sketch": name,
+        "variant": "kernel", "n_points": chunk_rows, "us_per_call": u,
+        "pps": pps, "prepare_us": p_us, "commit_us": c_us,
+    })
+    return svc
 
 
 def bench_sann(rows):
@@ -78,21 +138,44 @@ def bench_sann(rows):
     d, L, k, eta, chunk, cap = ((16, 8, 3, 0.5, 512, 8) if TINY
                                 else (32, 32, 4, 0.6, 4096, 8))
     data = np.random.default_rng(0).uniform(0, 1, (N, d)).astype(np.float32)
-    _pair(rows, "sann", data, lambda pipelined: RetrievalService(
+    svc = _pair(rows, "sann", data, lambda pipelined: RetrievalService(
         RetrievalConfig(dim=d, n_max=N, eta=eta, r=0.5, c=2.0, w=1.0, L=L,
                         k=k, bucket_cap=cap, ingest_chunk=chunk,
                         pipelined=pipelined)))
+    svc.close()
 
 
 def bench_swakde(rows):
+    import jax
+    import jax.numpy as jnp
     from repro.serve.kde_service import KDEService, KDEServiceConfig
     N = 2048 if TINY else 16384
     d, L, W, chunk, window = ((8, 4, 32, 256, 512) if TINY
                               else (32, 8, 64, 1024, 8192))
     data = np.random.default_rng(1).normal(0, 1, (N, d)).astype(np.float32)
-    _pair(rows, "swakde", data, lambda pipelined: KDEService(
+    svc = _pair(rows, "swakde", data, lambda pipelined: KDEService(
         KDEServiceConfig(dim=d, L=L, W=W, window=window, eh_eps=0.1,
                          ingest_chunk=chunk, pipelined=pipelined)))
+
+    # Skew cliff guard: a chunk with 100% of points in one (row, cell) must
+    # commit within ~3x the uniform-chunk commit (the closed-form pass is
+    # O(levels·slots) per segment regardless of run length; acceptance §12).
+    _, uni_c = _phase_breakdown(svc, data[:svc._chunk])
+    hot = np.ones((svc._chunk, d), np.float32)
+    item = svc._make_chunk_item(jnp.asarray(hot), 0)
+    state, _ = svc.snapshot()
+    prep = jax.block_until_ready(svc._prepare(*item))
+    hot_c = _time_us(
+        lambda: jax.block_until_ready(svc._commit(state, prep)), REPEATS)
+    ratio = hot_c / uni_c
+    rows.append(("pipeline.swakde.hotcell", hot_c,
+                 f"uniform_commit_us={uni_c:.0f};ratio={ratio:.2f}"))
+    _json_rows.append({
+        "name": "pipeline.swakde.hotcell", "sketch": "swakde",
+        "variant": "hotcell", "n_points": svc._chunk, "us_per_call": hot_c,
+        "commit_us": hot_c, "uniform_commit_us": uni_c, "ratio": ratio,
+    })
+    svc.close()
 
 
 def run(rows):

@@ -68,15 +68,14 @@ def _expire(state: EHState, t: jax.Array, cfg: EHConfig) -> EHState:
     return EHState(ts=state.ts, num=live.sum(axis=1).astype(jnp.int32))
 
 
-def eh_add(state: EHState, t: jax.Array, cfg: EHConfig) -> EHState:
+def eh_add_ref(state: EHState, t: jax.Array, cfg: EHConfig) -> EHState:
     """Record a 1 at time ``t``; cascade merges to maintain DGIM invariants.
 
     The cascade is a `lax.scan` over the levels axis: each level receives an
     optional carry bucket from below, prepends it, and (on overflow) merges
-    its two oldest buckets into a carry for the level above.  One pass over
-    the (levels, slots) buffer per add — the per-level in-place-update
-    formulation copies the whole buffer at every level, which dominates when
-    the batched ingest path vmaps eh_add over thousands of cells.
+    its two oldest buckets into a carry for the level above.  This is the
+    semantic oracle for the closed-form ``eh_add`` below (tests/test_eh.py
+    pins bitwise equality, dead slots included).
     """
     state = _expire(state, t, cfg)
     ts, num = state
@@ -102,6 +101,44 @@ def eh_add(state: EHState, t: jax.Array, cfg: EHConfig) -> EHState:
                             (jnp.asarray(t, ts.dtype), jnp.bool_(True)),
                             (ts, num, levels))
     return EHState(ts=ts, num=num)
+
+
+def eh_add(state: EHState, t: jax.Array, cfg: EHConfig) -> EHState:
+    """Record a 1 at time ``t`` — closed-form carry count, no level scan.
+
+    The unit-add cascade is binary-counter carry propagation: the carry
+    reaches level l iff every level below it is full, so the whole carry
+    chain is known up front from the (post-expiry) per-level counts.  A
+    level the carry reaches prepends its incoming stamp; a level that also
+    overflows merges its two oldest buckets and the merged stamp — the
+    *newer* of the pair, which sits at ring index ``num-2`` — becomes the
+    next level's incoming stamp.  All of it is one vectorised pass over the
+    (levels, slots) buffer with no sequential dependence, which is what the
+    batched ingest kernels vmap over thousands of cells.
+
+    Bit-identical to ``eh_add_ref`` including the dead slots beyond ``num``
+    (a reached level shifts its whole ring, an unreached one is untouched —
+    the same writes the scan performs)."""
+    state = _expire(state, t, cfg)
+    ts, num = state
+    maxb = cfg.max_buckets_per_level
+    lvl = jnp.arange(cfg.levels, dtype=jnp.int32)
+    # ``full`` = this level fires a merge when the carry reaches it; the
+    # carry reaches level l iff levels 0..l-1 are all full.
+    full = (num >= maxb) & (lvl < cfg.levels - 1)
+    blocked = jnp.cumsum((~full).astype(jnp.int32))
+    reach = jnp.concatenate([jnp.ones((1,), bool), blocked[:-1] == 0])
+    # Incoming stamp per level: t at level 0; above, the merged stamp of
+    # the level below = its pre-add ring at index num-2 (num >= maxb >= 2
+    # whenever the level fires, so the index never touches the carry slot).
+    below = jnp.clip(num[:-1] - 2, 0, cfg.slots - 1)
+    carry = jnp.concatenate([
+        jnp.asarray(t, ts.dtype)[None], ts[lvl[:-1], below]])
+    shifted = jnp.concatenate([carry[:, None], ts[:, :-1]], axis=1)
+    fired = reach & full
+    return EHState(
+        ts=jnp.where(reach[:, None], shifted, ts),
+        num=num + reach.astype(jnp.int32) - 2 * fired.astype(jnp.int32))
 
 
 def eh_step(state: EHState, t: jax.Array, bit: jax.Array, cfg: EHConfig) -> EHState:

@@ -340,17 +340,14 @@ def sann_commit_chunk(state: SANNState, prep: SANNPrep,
     tables = jnp.where(stale, jnp.int32(-1), state.tables)
 
     # --- ring-buffer appends: prepared segment scatter ---------------------
-    ring_pos = (state.table_ptr[prep.s_l, prep.s_c] + prep.rank) \
-        % cfg.bucket_cap
-    flat_target = (prep.s_l * cfg.n_buckets + prep.s_c) * cfg.bucket_cap \
-        + ring_pos
-    tsize = jnp.int32(tables.size)
     # A loser point's entries are appended then tombstoned by the later
-    # overwrite of its slot — net effect: the ring cell holds -1.
+    # overwrite of its slot — net effect: the ring cell holds -1.  Entries
+    # are sorted by (row, code), which is what makes this a coalesced
+    # per-row write pass (kernels.ops.sann_table_scatter, DESIGN.md §12).
     val = jnp.where(prep.winner[prep.s_b], slot[prep.s_b], jnp.int32(-1))
-    tables = tables.reshape(-1).at[
-        jnp.where(prep.entry_win, flat_target, tsize)].set(
-        val, mode="drop").reshape(tables.shape)
+    tables = kernel_ops.sann_table_scatter(
+        tables, state.table_ptr, prep.s_l, prep.s_c, prep.rank, val,
+        prep.entry_win)
     table_ptr = state.table_ptr + prep.counts
 
     # Logical arrival stamps: point i in the chunk arrived at stream time

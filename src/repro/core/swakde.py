@@ -20,16 +20,17 @@ Ingest paths:
     full EH grid);
   * ``swakde_update_chunk`` / ``swakde_stream_batched`` — the batched-update
     contract: one hash matmul per chunk, then per row the chunk's codes are
-    sorted into per-cell segments and each hit cell replays its own adds
-    (own timestamps, stream order) through vmapped EH cascades.  The grid is
-    read and written **once per chunk** instead of once per point, and the
-    result is bit-identical to the per-point path
-    (tests/test_batched_ingest.py).
+    sorted into per-cell segments and each hit cell folds its own adds (own
+    timestamps, stream order) in closed-form segment-reduce passes
+    (DESIGN.md §12).  The grid is read and written **once per chunk**
+    instead of once per point, and the result is bit-identical to the
+    per-point path (tests/test_batched_ingest.py).
   * ``swakde_prepare_chunk`` / ``swakde_commit_chunk`` — the two-phase form
     of the same contract (DESIGN.md §10): prepare is the pure hash + sort
-    half (timestamps as chunk-relative offsets), commit the sequential EH
-    replay; ``swakde_update_chunk`` is their composition, and the serving
-    engine overlaps prepare of chunk k+1 with commit of chunk k.
+    half (timestamps as chunk-relative offsets), commit the closed-form
+    segment fold (`kernels.ops.swakde_segment_pass`, optionally capped via
+    ``heavy_cell_cap``); ``swakde_update_chunk`` is their composition, and
+    the serving engine overlaps prepare of chunk k+1 with commit of chunk k.
 """
 from __future__ import annotations
 
@@ -55,6 +56,13 @@ class SWAKDEConfig:
     W: int               # LSH range (bucket count after rehash)
     window: int          # N
     eh_eps: float        # eps' — EH relative error
+    heavy_cell_cap: int = 0
+    """Skew guard for the chunked commit (DESIGN.md §12): bound how many
+    adds one (row, cell) segment may absorb per closed-form commit pass.
+    0 = uncapped (a pass still splits only at EH-expiry boundaries).  The
+    result is bit-identical for every value — capping only splits a
+    segment's pass into shorter sub-chunk passes — so this is purely a
+    per-tile work bound for the Pallas kernels."""
 
     @property
     def kde_eps(self) -> float:
@@ -151,46 +159,43 @@ def swakde_prepare_chunk(params, xs: jax.Array,
 
 def swakde_commit_chunk(state: SWAKDEState, prep: SWAKDEPrep,
                         cfg: SWAKDEConfig) -> SWAKDEState:
-    """Commit phase: replay a prepared chunk into the EH grid — the
-    state-sequential half.  Per row: gather the hit cells once, replay each
-    cell's adds at the points' own timestamps (``state.t`` + sort offset,
-    saturating like the per-point path) via vmapped ``eh_add`` (a while-loop
-    bounded by the largest per-cell hit count), and scatter the cells back.
-    The (L, W, levels, slots) grid is read and written once per chunk."""
+    """Commit phase: fold a prepared chunk into the EH grid — the
+    state-sequential half, as closed-form segment-reduce passes
+    (`kernels.ops.swakde_segment_pass`, DESIGN.md §12) instead of a
+    per-add replay.  Per pass, every hit (row, cell) segment absorbs its
+    longest expiry-free (and, with ``cfg.heavy_cell_cap``, capped) prefix
+    of remaining adds in one Corollary-4.2 cascade settle; the outer while
+    loop runs until all segments are drained — O(max splits) iterations,
+    not O(max per-cell hit count).  Bit-identical to the per-point path
+    (tests/test_batched_ingest.py, tests/test_two_phase.py), including
+    dead ring slots.  The (L, W, levels, slots) grid is still read and
+    written once per chunk."""
     eh = cfg.eh_config()
     C = prep.order.shape[1]
-    t0 = state.t
 
-    def row_update(order, seg_code, seg_len, seg_first, ts_row, num_row):
-        # per-add timestamps; saturating like the per-point path's t counter
-        add_ts = saturating_add(t0, order)
-        gcode = jnp.minimum(seg_code, cfg.W - 1)     # clamp padding segments
-        cell_ts = ts_row[gcode]                      # (SW, levels, slots)
-        cell_num = num_row[gcode]                    # (SW, levels)
-        max_len = seg_len.max()
+    # Per-add timestamps in sorted-segment order; saturating like the
+    # per-point path's t counter.
+    sorted_ts = saturating_add(state.t, prep.order)          # (L, C)
+    gcode = jnp.minimum(prep.seg_code, cfg.W - 1)            # clamp padding
+    rows = jnp.arange(cfg.L)[:, None]
+    cell_ts = state.ts[rows, gcode]                          # (L, SW, lv, S)
+    cell_num = state.num[rows, gcode]                        # (L, SW, lv)
+    done = jnp.zeros_like(prep.seg_len)
 
-        def body(carry):
-            j, cts, cnum = carry
-            tstamp = add_ts[jnp.minimum(seg_first + j, C - 1)]
-            act = j < seg_len
+    def cond(carry):
+        return (carry[2] < prep.seg_len).any()
 
-            def one(ts_i, num_i, t_i, a_i):
-                ns = eh_add(EHState(ts=ts_i, num=num_i), t_i, eh)
-                return (jnp.where(a_i, ns.ts, ts_i),
-                        jnp.where(a_i, ns.num, num_i))
+    def body(carry):
+        cts, cnum, dn = carry
+        return kernel_ops.swakde_segment_pass(
+            cts, cnum, dn, sorted_ts, prep.seg_first, prep.seg_len,
+            window=cfg.window, maxb=eh.max_buckets_per_level,
+            n_levels=eh.levels, cap=cfg.heavy_cell_cap)
 
-            cts, cnum = jax.vmap(one)(cts, cnum, tstamp, act)
-            return j + 1, cts, cnum
-
-        _, cell_ts, cell_num = lax.while_loop(
-            lambda c: c[0] < max_len, body,
-            (jnp.int32(0), cell_ts, cell_num))
-        ts_row = ts_row.at[seg_code].set(cell_ts, mode="drop")
-        num_row = num_row.at[seg_code].set(cell_num, mode="drop")
-        return ts_row, num_row
-
-    ts, num = jax.vmap(row_update)(prep.order, prep.seg_code, prep.seg_len,
-                                   prep.seg_first, state.ts, state.num)
+    cell_ts, cell_num, _ = lax.while_loop(
+        cond, body, (cell_ts, cell_num, done))
+    ts = state.ts.at[rows, prep.seg_code].set(cell_ts, mode="drop")
+    num = state.num.at[rows, prep.seg_code].set(cell_num, mode="drop")
     return SWAKDEState(ts=ts, num=num, t=saturating_add(state.t, C))
 
 

@@ -14,6 +14,7 @@ import jax.numpy as jnp
 
 from . import batch_score as _bs
 from . import cand_score as _cs
+from . import ingest_commit as _ic
 from . import race_update as _ru
 from . import ref
 from . import sketch_decode_attn as _sda
@@ -86,6 +87,35 @@ def sketch_decode_attn(q, k, v, block_ids, n_live, kv_len,
         block_ids >= 0)
     return ref.sketch_decode_attn_ref(
         q, k, v, live, kv_len[0], block_size, softcap)
+
+
+def swakde_segment_pass(cell_ts, cell_num, done, sorted_ts, seg_first,
+                        seg_len, *, window: int, maxb: int, n_levels: int,
+                        cap: int = 0):
+    """One expiry-free closed-form commit pass over the prepared segments
+    (ingest tentpole — see `ref.swakde_segment_pass_ref` for the contract).
+    TPU: the tiled `ingest_commit.swakde_segment_pass` kernel; CPU: the
+    oracle, which is the fast path (one fused pass replaces the per-add
+    SumEH replay, independent of segment length)."""
+    if _use_pallas():
+        return _ic.swakde_segment_pass(
+            cell_ts, cell_num, done, sorted_ts, seg_first, seg_len,
+            window=window, maxb=maxb, n_levels=n_levels, cap=cap,
+            interpret=_interpret())
+    return ref.swakde_segment_pass_ref(
+        cell_ts, cell_num, done, sorted_ts, seg_first, seg_len,
+        window=window, maxb=maxb, n_levels=n_levels, cap=cap)
+
+
+def sann_table_scatter(tables, table_ptr, s_l, s_c, rank, val, mask):
+    """Sorted-segment ring append into the S-ANN hash tables (entries are
+    sorted by (row, code); see `ref.sann_table_scatter_ref`)."""
+    if _use_pallas():
+        return _ic.sann_table_scatter(
+            tables, table_ptr, s_l, s_c, rank, val, mask,
+            interpret=_interpret())
+    return ref.sann_table_scatter_ref(tables, table_ptr, s_l, s_c, rank,
+                                      val, mask)
 
 
 live_blocks_from_sketch = _sda.live_blocks_from_sketch

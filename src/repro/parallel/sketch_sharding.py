@@ -346,10 +346,13 @@ def sharded_swakde_commit_chunk(state: swakde.SWAKDEState,
                                 prep: swakde.SWAKDEPrep,
                                 cfg: swakde.SWAKDEConfig,
                                 ctx: ShardingCtx) -> swakde.SWAKDEState:
-    """Sharded commit phase: each device replays its row block's prepared
-    segments into its EH rows (the shared clock advances identically on
-    every device).  ``sharded_commit(sharded_prepare(...))`` is
-    bit-identical to `sharded_swakde_update_chunk`."""
+    """Sharded commit phase: each device folds its row block's prepared
+    segments into its EH rows via the closed-form segment passes
+    (`kernels.ops.swakde_segment_pass` — the per-shard call dispatches the
+    ingest kernels exactly like the single-device path, so the 8-device
+    tests cover them; the shared clock advances identically on every
+    device).  ``sharded_commit(sharded_prepare(...))`` is bit-identical to
+    `sharded_swakde_update_chunk`."""
     if ctx.mesh is None:
         return swakde.swakde_commit_chunk(state, prep, cfg)
     Lsh = _check_rows(cfg.L, _num_shards(ctx), "SW-AKDE")
@@ -510,9 +513,10 @@ def sharded_sann_commit_chunk(state: sann.SANNState, prep: sann.SANNPrep,
                               ctx: ShardingCtx) -> sann.SANNState:
     """Sharded commit phase: every device rebases the replicated slot ranks
     on the replicated pointers (identical point-store/counter updates
-    everywhere) and scatters its own table block's prepared appends.
-    ``sharded_commit(sharded_prepare(...))`` is bit-identical to
-    `sharded_sann_insert_batch`."""
+    everywhere) and scatters its own table block's prepared appends
+    through `kernels.ops.sann_table_scatter` (per-shard kernel dispatch,
+    same as single-device).  ``sharded_commit(sharded_prepare(...))`` is
+    bit-identical to `sharded_sann_insert_batch`."""
     if ctx.mesh is None:
         return sann.sann_commit_chunk(state, prep, cfg)
     Lsh = _check_rows(cfg.L, _num_shards(ctx), "S-ANN")

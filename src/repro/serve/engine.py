@@ -100,19 +100,26 @@ class SketchEngine:
     rows per fused query call, ``pipelined=False`` disables the
     double-buffered overlap (prepare and commit run strictly in sequence —
     the benchmark baseline; results are bit-identical either way),
-    ``max_pending`` bounds queued-but-uncommitted rows (None = unbounded),
-    ``durability`` enables the snapshot + WAL subsystem.
+    ``prepare_depth`` is how many chunks the prepare side may run ahead of
+    the commit side (default 1 = classic double buffering; deeper lookahead
+    only pays off now that the commit half is a closed-form segment fold
+    and no longer dominates — results stay bit-identical because commits
+    still apply strictly in submission order), ``max_pending`` bounds
+    queued-but-uncommitted rows (None = unbounded), ``durability`` enables
+    the snapshot + WAL subsystem.
     """
 
     state: Any
 
     def __init__(self, ingest_chunk: int, query_block: int = 1024,
                  pipelined: bool = True,
+                 prepare_depth: int = 1,
                  max_pending: Optional[int] = None,
                  durability: Optional[persist.DurabilityConfig] = None):
         self._chunk = max(1, int(ingest_chunk))
         self._query_block = max(1, int(query_block))
         self._pipelined = bool(pipelined)
+        self._prepare_depth = max(1, int(prepare_depth))
         self._max_pending = (None if max_pending is None
                              else max(1, int(max_pending)))
         # _lock guards state + version + snapshot cache; _submit_lock orders
@@ -152,13 +159,14 @@ class SketchEngine:
             self._needs_recover = (
                 persist.snapshot.latest_seq(durability.dir) is not None
                 or self._wal.has_records())
-        # One dedicated prepare thread: the CPU PJRT client serializes
+        # Dedicated prepare threads: the CPU PJRT client serializes
         # executables dispatched from a single thread, so the overlap of
-        # prepare(k+1) with commit(k) needs a second dispatch thread (the
-        # ingest worker blocks on the commit while this pool blocks on the
-        # prepare).
-        self._prep_pool = (ThreadPoolExecutor(max_workers=1)
-                           if self._pipelined else None)
+        # prepare(k+1..k+depth) with commit(k) needs separate dispatch
+        # threads (the ingest worker blocks on the commit while this pool
+        # blocks on the prepares).
+        self._prep_pool = (ThreadPoolExecutor(
+            max_workers=self._prepare_depth)
+            if self._pipelined else None)
 
     # --- subclass hooks ----------------------------------------------------
 
@@ -312,16 +320,17 @@ class SketchEngine:
                 self._wal.close()       # ... without leaking the handle
 
     def _worker_loop(self) -> None:
-        """THE chunk loop: double-buffered prepare/commit over the live
-        queue.  While this thread blocks on chunk k's prepare/commit, the
-        prepare pool computes chunk k+1 — including chunks that were
-        queued after k started (the lookahead pulls from the live queue,
-        so one-chunk-per-call producers still pipeline)."""
-        ahead: Optional[tuple] = None       # (entry, future) prepared ahead
+        """THE chunk loop: pipelined prepare/commit over the live queue.
+        While this thread blocks on chunk k's prepare/commit, the prepare
+        pool computes chunks k+1..k+prepare_depth — including chunks that
+        were queued after k started (the lookahead pulls from the live
+        queue, so one-chunk-per-call producers still pipeline).  Commits
+        always apply in submission order (the lookahead deque preserves
+        queue order), so any depth is bit-identical to depth 1."""
+        ahead: collections.deque = collections.deque()  # (entry, future)
         while True:
-            if ahead is not None:
-                entry, fut = ahead
-                ahead = None
+            if ahead:
+                entry, fut = ahead.popleft()
             else:
                 with self._cv:
                     while not self._queue:
@@ -338,14 +347,16 @@ class SketchEngine:
                 if self._ingest_error is None:
                     if fut is None:
                         fut = self._submit_prepare(item)
-                    # schedule the lookahead before blocking on this chunk
+                    # top up the lookahead before blocking on this chunk
                     if self._prep_pool is not None:
-                        with self._cv:
-                            nxt = (self._queue.popleft()
-                                   if self._queue and
-                                   self._queue[0] is not _STOP else None)
-                        if nxt is not None:
-                            ahead = (nxt, self._submit_prepare(nxt[0]))
+                        while len(ahead) < self._prepare_depth:
+                            with self._cv:
+                                nxt = (self._queue.popleft()
+                                       if self._queue and
+                                       self._queue[0] is not _STOP else None)
+                            if nxt is None:
+                                break
+                            ahead.append((nxt, self._submit_prepare(nxt[0])))
                     prep = fut.result() if hasattr(fut, "result") else fut
                     self._commit_one(prep)
             except BaseException:

@@ -62,6 +62,15 @@ class KDEServiceConfig:
     # while chunk k commits.  False = strictly sequential phases (identical
     # results; the ingest-benchmark baseline).
     pipelined: bool = True
+    # Prepare lookahead depth: chunks the prepare pool may run ahead of the
+    # commit side (1 = classic double buffering).  Results are
+    # bit-identical at any depth; deeper lookahead helps once commits are
+    # cheap (the closed-form segment fold) and the producer is bursty.
+    prepare_depth: int = 1
+    # Skew guard (DESIGN.md §12): bound how many adds one (row, cell)
+    # segment absorbs per commit pass; 0 = uncapped.  Bit-identical for
+    # any value — a per-tile work bound, not an accuracy knob.
+    heavy_cell_cap: int = 0
     # Query block: queries are answered in blocks of this many rows; each
     # distinct partial-block size triggers one extra jit trace.
     query_block: int = 1024
@@ -94,7 +103,8 @@ class KDEService(SketchEngine):
     def __init__(self, cfg: KDEServiceConfig):
         self.cfg = cfg
         self.sketch_cfg = swakde.SWAKDEConfig(
-            L=cfg.L, W=cfg.W, window=cfg.window, eh_eps=cfg.eh_eps)
+            L=cfg.L, W=cfg.W, window=cfg.window, eh_eps=cfg.eh_eps,
+            heavy_cell_cap=cfg.heavy_cell_cap)
         key = jax.random.PRNGKey(cfg.seed)
         if cfg.hash_family == "srp":
             self.params = lsh.init_srp(key, cfg.dim, L=cfg.L, k=cfg.k,
@@ -107,6 +117,7 @@ class KDEService(SketchEngine):
         super().__init__(ingest_chunk=cfg.ingest_chunk,
                          query_block=cfg.query_block,
                          pipelined=cfg.pipelined,
+                         prepare_depth=cfg.prepare_depth,
                          max_pending=cfg.max_pending,
                          durability=durability_from(cfg))
         self.state = swakde.swakde_init(self.sketch_cfg)

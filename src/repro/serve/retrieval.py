@@ -61,6 +61,9 @@ class RetrievalConfig:
     # while chunk k commits.  False = strictly sequential phases (identical
     # results; the ingest-benchmark baseline).
     pipelined: bool = True
+    # Prepare lookahead depth: chunks the prepare pool may run ahead of the
+    # commit side (1 = classic double buffering; bit-identical either way).
+    prepare_depth: int = 1
     # Query block: queries are served through the fused batch engine
     # (core.sann.sann_query_batch) in blocks of this many rows — bounds the
     # (block, 3L, dim) scoring footprint; each distinct partial-block size
@@ -96,6 +99,7 @@ class RetrievalService(SketchEngine):
         super().__init__(ingest_chunk=cfg.ingest_chunk,
                          query_block=cfg.query_block,
                          pipelined=cfg.pipelined,
+                         prepare_depth=cfg.prepare_depth,
                          max_pending=cfg.max_pending,
                          durability=durability_from(cfg))
         self.state = state

@@ -74,6 +74,33 @@ def test_eh_timestamps_sorted_within_level():
 
 
 # ---------------------------------------------------------------------------
+# Closed-form eh_add vs the scan-based oracle
+# ---------------------------------------------------------------------------
+
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    window=st.sampled_from([16, 64, 100]),
+    eps=st.sampled_from([0.1, 0.2, 0.5]),
+)
+@settings(max_examples=40, deadline=None)
+def test_eh_add_closed_form_matches_ref(seed, window, eps):
+    """`eh_add` (closed-form carry count) is bitwise identical to
+    `eh_add_ref` (the scan cascade) — dead ring slots included — over
+    gappy streams that exercise carries, ring wrap and expiry."""
+    cfg = eh.EHConfig.create(window=window, eps=eps)
+    rng = np.random.default_rng(seed)
+    gaps = rng.integers(0, max(2, window // 4), 120)
+    ts = np.cumsum(gaps).astype(np.int32)
+    a = b = eh.eh_init(cfg)
+    for t in ts:
+        t = jnp.int32(t)
+        a = eh.eh_add(a, t, cfg)
+        b = eh.eh_add_ref(b, t, cfg)
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
 # SumEH (batch updates, Corollary 4.2)
 # ---------------------------------------------------------------------------
 

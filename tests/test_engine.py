@@ -92,6 +92,32 @@ def test_kde_pipelined_sequential_async_identical():
     np.testing.assert_array_equal(svcs[0].query(qs), uncached.query(qs))
 
 
+@pytest.mark.parametrize("depth", [2, 4])
+def test_prepare_depth_bit_identical_and_prefix_consistent(depth):
+    """Deep prepare lookahead (prepare_depth > 1) commits in submission
+    order: the final state matches depth-1 ingest bit-for-bit, and
+    mid-stream snapshots always equal the direct chunk loop after some
+    committed prefix of the stream."""
+    data = _data(n=600, seed=3)
+    ref_svc = KDEService(KDEServiceConfig(**_KDE_KW))
+    svc = KDEService(KDEServiceConfig(**_KDE_KW, prepare_depth=depth))
+    ref_svc.ingest(data)
+    # submit chunk-sized pieces to exercise the live-queue lookahead
+    for i in range(0, 600, 50):
+        svc.ingest_async(data[i:i + 50])
+    # mid-stream snapshot: must be the state after some committed prefix
+    st, _ = svc.snapshot()
+    t_seen = int(jax.block_until_ready(st).t)
+    assert t_seen % 50 == 0 and 0 <= t_seen <= 600
+    prefix = swakde.swakde_stream(
+        swakde.swakde_init(svc.sketch_cfg), svc.params,
+        jnp.asarray(data[:t_seen]), svc.sketch_cfg)
+    assert _states_equal(st, prefix)
+    svc.flush()
+    assert _states_equal(svc.state, ref_svc.state)
+    svc.close(); ref_svc.close()
+
+
 def test_empty_ingest_and_empty_query():
     svc = RetrievalService(RetrievalConfig(**_RETR_KW))
     svc.ingest(np.zeros((0, 8), np.float32))

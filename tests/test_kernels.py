@@ -8,6 +8,7 @@ pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, strategies as st
 
 from repro.kernels import cand_score as cs_k
+from repro.kernels import ingest_commit as ic_k
 from repro.kernels import race_update as ru_k
 from repro.kernels import ref
 from repro.kernels import sketch_decode_attn as sda_k
@@ -117,6 +118,69 @@ def test_sketch_decode_attn_no_live_blocks():
     """All blocks pruned → zero output (matches oracle's nan→0)."""
     _attn_case(2, Hkv=1, G=2, dh=32, S=256, bs=64, softcap=0.0,
                frac_live=0.0, kv_len=256)
+
+
+# ---------------------------------------------------------------------------
+# ingest_commit (segment-reduce SumEH commit + S-ANN table scatter)
+# ---------------------------------------------------------------------------
+
+def _segment_case(seed, R=3, G=11, LV=6, S=5, C=64, window=37):
+    rng = np.random.default_rng(seed)
+    base_t = 1000
+    cell_num = rng.integers(0, S, (R, G, LV)).astype(np.int32)
+    cell_ts = (base_t - rng.integers(0, window, (R, G, LV, S))).astype(np.int32)
+    sorted_ts = np.sort(
+        rng.integers(base_t, base_t + 50, (R, C)), axis=1).astype(np.int32)
+    seg_first = np.zeros((R, G), np.int32)
+    seg_len = np.zeros((R, G), np.int32)
+    for r in range(R):
+        cuts = np.sort(rng.choice(np.arange(1, C), size=G - 1, replace=False))
+        bounds = np.concatenate([[0], cuts, [C]])
+        seg_first[r] = bounds[:G]
+        seg_len[r] = np.diff(bounds)[:G]
+    done = np.minimum(rng.integers(0, 3, (R, G)), seg_len).astype(np.int32)
+    return tuple(jnp.asarray(a) for a in (
+        cell_ts, cell_num, done, sorted_ts, seg_first, seg_len)), window
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+@pytest.mark.parametrize("cap", [0, 2])
+@pytest.mark.parametrize("block_g", [4, 8, 16])
+def test_swakde_segment_pass_matches_ref(seed, cap, block_g):
+    """Tiled kernel == oracle bit-for-bit, including non-divisible segment
+    grids (padding segments are empty → identity)."""
+    args, window = _segment_case(seed)
+    want = ref.swakde_segment_pass_ref(
+        *args, window=window, maxb=3, n_levels=6, cap=cap)
+    got = ic_k.swakde_segment_pass(
+        *args, window=window, maxb=3, n_levels=6, cap=cap,
+        block_g=block_g, interpret=True)
+    for w, g in zip(want, got):
+        np.testing.assert_array_equal(np.asarray(w), np.asarray(g))
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+@pytest.mark.parametrize("mask_frac", [1.0, 0.7])
+def test_sann_table_scatter_matches_ref(seed, mask_frac):
+    rng = np.random.default_rng(seed)
+    L, NB, cap, E = 4, 13, 6, 70
+    tables = rng.integers(-1, 100, (L, NB, cap)).astype(np.int32)
+    table_ptr = rng.integers(0, cap, (L, NB)).astype(np.int32)
+    s_l = rng.integers(0, L, E).astype(np.int32)
+    s_c = rng.integers(0, NB, E).astype(np.int32)
+    order = np.lexsort((s_c, s_l))
+    s_l, s_c = s_l[order], s_c[order]
+    rank = np.zeros(E, np.int32)
+    for i in range(1, E):
+        same = s_l[i] == s_l[i - 1] and s_c[i] == s_c[i - 1]
+        rank[i] = rank[i - 1] + 1 if same else 0
+    val = rng.integers(0, 10_000, E).astype(np.int32)
+    mask = rng.random(E) < mask_frac
+    a = tuple(jnp.asarray(x) for x in
+              (tables, table_ptr, s_l, s_c, rank, val, mask))
+    want = ref.sann_table_scatter_ref(*a)
+    got = ic_k.sann_table_scatter(*a, interpret=True)
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
 
 
 def test_live_blocks_from_sketch_compaction():

@@ -88,6 +88,60 @@ def test_swakde_prepare_ahead_of_commits_skewed():
     assert _states_equal(st, ref)
 
 
+def _skew_stream(kind, n, dim, seed):
+    """Synthetic streams that funnel mass into few (row, cell) segments."""
+    rng = np.random.default_rng(seed)
+    if kind == "hot":          # 100% of points in one (row, cell) per row
+        return jnp.ones((n, dim), jnp.float32)
+    if kind == "powerlaw":     # Zipf over a handful of distinct points
+        base = rng.normal(size=(8, dim)).astype(np.float32)
+        idx = np.minimum(rng.zipf(1.3, size=n) - 1, 7)
+        return jnp.asarray(base[idx])
+    raise ValueError(kind)
+
+
+@pytest.mark.parametrize("kind", ["hot", "powerlaw"])
+@pytest.mark.parametrize("cap", [0, 1, 3, 17])
+def test_swakde_skewed_capped_commit_bit_identical(kind, cap):
+    """Skew fuzz (DESIGN.md §12): heavy-cell-capped sub-chunk commits are
+    bitwise identical to the uncapped per-point oracle — including EH
+    expiry landing *at* a split boundary (window < chunk, so segments
+    split both at expiry points and at the cap) and ring wrap inside one
+    hot cell's cascade."""
+    cfg = swakde.SWAKDEConfig(L=4, W=16, window=40, eh_eps=0.2,
+                              heavy_cell_cap=cap)
+    p = lsh.init_srp(jax.random.PRNGKey(2), 4, L=4, k=2, n_buckets=16)
+    xs = _skew_stream(kind, 96, 4, seed=cap)
+    ref = swakde.swakde_stream(swakde.swakde_init(cfg), p, xs, cfg)
+    st = swakde.swakde_init(cfg)
+    for i in range(0, 96, 64):                 # window (40) < chunk (64)
+        prep = swakde.swakde_prepare_chunk(p, xs[i:i + 64], cfg)
+        st = swakde.swakde_commit_chunk(st, prep, cfg)
+    assert _states_equal(st, ref)
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_swakde_powerlaw_fuzz_cap_invariance(seed):
+    """Every cap value (including uncapped) lands on the same bits: the cap
+    only splits a segment's closed-form pass into shorter sub-chunk
+    passes, never changes what is committed."""
+    cfg0 = swakde.SWAKDEConfig(L=3, W=8, window=25, eh_eps=0.3)
+    p = lsh.init_srp(jax.random.PRNGKey(5), 4, L=3, k=2, n_buckets=8)
+    xs = _skew_stream("powerlaw", 150, 4, seed=100 + seed)
+    states = []
+    for cap in (0, 1, 2, 7):
+        cfg = swakde.SWAKDEConfig(L=3, W=8, window=25, eh_eps=0.3,
+                                  heavy_cell_cap=cap)
+        st = swakde.swakde_init(cfg)
+        for i in range(0, 150, 50):
+            st = swakde.swakde_commit_chunk(
+                st, swakde.swakde_prepare_chunk(p, xs[i:i + 50], cfg), cfg)
+        states.append(st)
+    ref = swakde.swakde_stream(swakde.swakde_init(cfg0), p, xs, cfg0)
+    for st in states:
+        assert _states_equal(st, ref)
+
+
 # ---------------------------------------------------------------------------
 # S-ANN
 # ---------------------------------------------------------------------------
