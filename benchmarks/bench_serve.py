@@ -1,0 +1,259 @@
+"""Traffic-shaped load test of the query-side admission scheduler
+(`repro.serve.engine.QueryBatcher`, DESIGN.md §13).
+
+The PR-3 fused engines are far more efficient per row at B=1024 than at
+B=1 (BENCH_query.json), but a serving front-end sees *independent* B=1
+clients.  This suite measures how much of the fused-batch win the
+cross-request micro-batcher recovers, under the two classic traffic
+shapes:
+
+  serve.sann.open.*    — open-loop: one generator submits B=1
+                         ``submit_query`` futures with Poisson (exponential
+                         inter-arrival) gaps at a configured offered qps;
+                         arrivals never wait for completions, so queueing
+                         is visible.  Offered rates are calibrated as
+                         multiples of the measured direct B=1 service rate
+                         (0.5x below capacity, 2x/8x above), and each row
+                         reports offered vs achieved qps, end-to-end
+                         p50/p95/p99 latency and the scheduler's mean
+                         coalesced batch size over that window.
+  serve.<s>.closed.*   — closed-loop: C worker threads each issue one sync
+                         B=1 ``query()`` back-to-back for a fixed wall
+                         window, batched (through the scheduler) vs direct
+                         (``batch_queries=False``) at each C.  While one
+                         fused tick executes, the other C-1 clients queue
+                         and form the next tick — so the batched qps
+                         should approach the fused-batch row rate as C
+                         grows, while direct pays per-call dispatch C
+                         times.  ``<s>`` covers sann and swakde (the
+                         latter shares one grid-cache entry per tick).
+
+Both shapes run the scheduler in continuous-batching mode
+(``max_wait_us=0``): a tick fires the moment the executor is free, so a
+lone client pays no idle latency tax and coalescing emerges from
+requests that queue during the in-flight tick — the ``max_wait_us``
+latency/throughput knob itself is exercised by the unit tests.
+
+Latency is measured per request (submit → future done-callback, or around
+the sync call); answers are bit-identical either way, so the suite only
+times.  Steady state: every pad bucket the scheduler can emit (powers of
+two up to ``query_block``) is pre-compiled before the clock starts.
+
+Emits ``name,us_per_call,derived`` CSV rows (us_per_call = p50 latency)
+and writes the full rows to ``BENCH_serve.json`` (override with
+REPRO_BENCH_SERVE_OUT).  REPRO_BENCH_TINY=1 shrinks sizes for CI.
+"""
+from __future__ import annotations
+
+import os
+import threading
+import time
+
+import numpy as np
+
+from .common import update_bench_json
+
+TINY = os.environ.get("REPRO_BENCH_TINY") == "1"
+OUT_PATH = os.environ.get("REPRO_BENCH_SERVE_OUT", "BENCH_serve.json")
+WINDOW_S = 0.4 if TINY else 2.0       # measured wall window per cell
+MAX_REQUESTS = 2_000 if TINY else 20_000
+
+_json_rows: list[dict] = []
+
+
+def _pctls(lat_us: list) -> dict:
+    a = np.asarray(lat_us, np.float64)
+    return {"p50_us": float(np.percentile(a, 50)),
+            "p95_us": float(np.percentile(a, 95)),
+            "p99_us": float(np.percentile(a, 99))}
+
+
+def _stats_delta(svc, before: dict) -> dict:
+    """Scheduler counters for one measurement window (stats are cumulative
+    per batcher, so diff against the window start)."""
+    after = svc.batcher.stats() if svc.batcher is not None else {}
+    if not after:
+        return {"ticks": 0, "mean_batch_queries": 0.0}
+    ticks = after["ticks"] - before.get("ticks", 0)
+    queries = after["queries"] - before.get("queries", 0)
+    return {"ticks": ticks,
+            "mean_batch_queries": queries / max(ticks, 1)}
+
+
+def _warm(svc, dim: int) -> None:
+    """Compile every pad bucket the scheduler can emit (pow2 ≤ query_block)
+    for the default kind, so the load windows never hit a jit trace."""
+    b = 1
+    while b <= svc._query_block:
+        svc._kind_fn(svc._default_query_kind)(
+            svc._query_snapshot_ctx(),
+            np.zeros((b, dim), np.float32))
+        b <<= 1
+
+
+def _open_loop(svc, Q: np.ndarray, qps: float) -> dict:
+    """Poisson arrivals at ``qps`` for WINDOW_S; every request is one
+    B=1 ``submit_query`` future.  Latency = submit → done callback."""
+    rng = np.random.default_rng(7)
+    done: list = []
+    lock = threading.Lock()
+
+    def _cb(t0):
+        def cb(fut):
+            t1 = time.perf_counter()
+            fut.result()                  # surface failures
+            with lock:
+                done.append((t1 - t0) * 1e6)
+        return cb
+
+    before = svc.batcher.stats() if svc.batcher is not None else {}
+    futs = []
+    t_start = time.perf_counter()
+    t_next, t_end = t_start, t_start + WINDOW_S
+    i = 0
+    while True:
+        now = time.perf_counter()
+        if now >= t_end or i >= MAX_REQUESTS:
+            break
+        if t_next > now:
+            time.sleep(t_next - now)
+        t_next += rng.exponential(1.0 / qps)
+        q = Q[i % Q.shape[0]][None]
+        t0 = time.perf_counter()
+        fut = svc.submit_query(q)
+        fut.add_done_callback(_cb(t0))
+        futs.append(fut)
+        i += 1
+    for fut in futs:                      # drain the tail before reading
+        fut.result()
+    span = time.perf_counter() - t_start
+    out = {"offered_qps": qps, "achieved_qps": len(futs) / span,
+           "n_requests": len(futs), **_pctls(done), **_stats_delta(svc, before)}
+    return out
+
+
+def _closed_loop(svc, Q: np.ndarray, clients: int) -> dict:
+    """C threads of back-to-back sync B=1 ``query()`` for WINDOW_S."""
+    before = (svc.batcher.stats()
+              if getattr(svc, "batcher", None) is not None else {})
+    lat: list = []
+    lock = threading.Lock()
+    stop = threading.Event()
+
+    def worker(wid: int):
+        mine = []
+        i = wid
+        while not stop.is_set():
+            q = Q[i % Q.shape[0]][None]
+            t0 = time.perf_counter()
+            svc.query(q)
+            mine.append((time.perf_counter() - t0) * 1e6)
+            i += clients
+        with lock:
+            lat.extend(mine)
+
+    threads = [threading.Thread(target=worker, args=(w,))
+               for w in range(clients)]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    time.sleep(WINDOW_S)
+    stop.set()
+    for t in threads:
+        t.join()
+    span = time.perf_counter() - t0
+    return {"clients": clients, "qps": len(lat) / span,
+            "n_requests": len(lat), **_pctls(lat),
+            **_stats_delta(svc, before)}
+
+
+def _emit(rows, name: str, r: dict, **extra):
+    r = {**r, **extra}
+    derived = ";".join(
+        f"{k}={r[k]:.0f}" if k.endswith(("qps", "_us")) else f"{k}={r[k]:.2f}"
+        for k in ("offered_qps", "achieved_qps", "qps", "p95_us", "p99_us",
+                  "mean_batch_queries", "speedup") if k in r)
+    rows.append((name, r["p50_us"], derived))
+    _json_rows.append({"name": name, "us_per_call": r["p50_us"], **r})
+
+
+def bench_sann(rows):
+    from repro.serve.retrieval import RetrievalConfig, RetrievalService
+    N, d, L, k = (2048, 16, 8, 3) if TINY else (16384, 32, 16, 4)
+    rng = np.random.default_rng(0)
+    data = rng.uniform(0, 1, (N, d)).astype(np.float32)
+    Q = rng.uniform(0, 1, (256, d)).astype(np.float32)
+    kw = dict(dim=d, n_max=N, eta=0.5, r=0.5, c=2.0, w=1.0, L=L, k=k,
+              bucket_cap=8, ingest_chunk=1024)
+
+    direct = RetrievalService(RetrievalConfig(**kw))
+    # max_wait_us=0: continuous batching — a tick fires the moment the
+    # executor is free, and coalescing emerges from requests that queued
+    # during the previous tick (no idle latency tax at low load).
+    batched = RetrievalService(RetrievalConfig(
+        **kw, batch_queries=True, max_wait_us=0.0))
+    for svc in (direct, batched):
+        svc.ingest(data)
+        _warm(svc, d)
+
+    # Calibrate: the direct B=1 service rate bounds an unbatched server.
+    t0 = time.perf_counter()
+    reps = 50 if TINY else 200
+    for i in range(reps):
+        direct.query(Q[i % Q.shape[0]][None])
+    base_qps = reps / (time.perf_counter() - t0)
+    _json_rows.append({"name": "serve.sann.direct_b1",
+                       "us_per_call": 1e6 / base_qps, "qps": base_qps})
+    rows.append(("serve.sann.direct_b1", 1e6 / base_qps,
+                 f"qps={base_qps:.0f}"))
+
+    # Open loop: below / at saturation / overload, relative to that rate.
+    for mult in ((2.0,) if TINY else (0.5, 2.0, 8.0)):
+        r = _open_loop(batched, Q, mult * base_qps)
+        _emit(rows, f"serve.sann.open.x{mult:g}", r,
+              load_multiple=mult, sketch="sann", shape="open")
+
+    # Closed loop: batched vs direct at each client count.
+    for c in ((1, 4) if TINY else (1, 2, 4, 8, 16, 32)):
+        rd = _closed_loop(direct, Q, c)
+        rb = _closed_loop(batched, Q, c)
+        _emit(rows, f"serve.sann.closed.c{c}.direct", rd,
+              clients=c, sketch="sann", shape="closed", variant="direct")
+        _emit(rows, f"serve.sann.closed.c{c}.batched", rb,
+              clients=c, sketch="sann", shape="closed", variant="batched",
+              speedup=rb["qps"] / max(rd["qps"], 1e-9))
+    direct.close()
+    batched.close()
+
+
+def bench_swakde(rows):
+    from repro.serve.kde_service import KDEService, KDEServiceConfig
+    N, d, L, W = (2048, 8, 4, 32) if TINY else (8192, 32, 8, 64)
+    rng = np.random.default_rng(1)
+    data = rng.normal(0, 1, (N, d)).astype(np.float32)
+    Q = rng.normal(0, 1, (256, d)).astype(np.float32)
+    kw = dict(dim=d, L=L, W=W, window=N, eh_eps=0.1, ingest_chunk=1024)
+
+    direct = KDEService(KDEServiceConfig(**kw))
+    batched = KDEService(KDEServiceConfig(**kw, batch_queries=True,
+                                          max_wait_us=0.0))
+    for svc in (direct, batched):
+        svc.ingest(data)
+        _warm(svc, d)
+    for c in ((4,) if TINY else (4, 16, 32)):
+        rd = _closed_loop(direct, Q, c)
+        rb = _closed_loop(batched, Q, c)
+        _emit(rows, f"serve.swakde.closed.c{c}.direct", rd,
+              clients=c, sketch="swakde", shape="closed", variant="direct")
+        _emit(rows, f"serve.swakde.closed.c{c}.batched", rb,
+              clients=c, sketch="swakde", shape="closed", variant="batched",
+              speedup=rb["qps"] / max(rd["qps"], 1e-9))
+    direct.close()
+    batched.close()
+
+
+def run(rows):
+    _json_rows.clear()
+    bench_sann(rows)
+    bench_swakde(rows)
+    update_bench_json(OUT_PATH, "serve", _json_rows, tiny=TINY)

@@ -35,6 +35,17 @@ The cluster exposes the same ``ingest`` / ``ingest_async`` / ``flush`` /
 query API as the single-engine services, plus per-worker durability:
 with ``snapshot_dir`` set, worker w persists under ``<dir>/worker_<w>``
 and ``recover()`` recovers every worker (bit-identically) and re-merges.
+
+Query-side micro-batching (DESIGN.md §13): the coordinator owns its own
+`engine.QueryBatcher` — with ``batch_queries`` set on the service config,
+concurrent client queries coalesce into one fused batch per tick served
+from ONE ``merged_snapshot()``.  This matters more here than on a single
+engine: a stale merge cache makes every query pay a query-time tail merge
+under the coordinator lock, so K concurrent clients used to pay K merges —
+the batcher folds them into one merge + one fused call per tick
+(tests/test_serve_batching.py pins that query cost does not scale with
+the concurrent-client count).  Workers never enable their own batcher
+(the coordinator reads them through their jitted query fns directly).
 """
 from __future__ import annotations
 
@@ -51,7 +62,7 @@ import numpy as np
 
 from repro.core import race, sann, swakde
 from repro.parallel import sketch_sharding as ss
-from repro.serve.engine import SketchEngine
+from repro.serve.engine import SketchEngine, _BatchedQueryMixin
 from repro.serve.kde_service import KDEService, KDEServiceConfig
 from repro.serve.race_service import RACEService, RACEServiceConfig
 from repro.serve.retrieval import RetrievalConfig, RetrievalService
@@ -86,7 +97,7 @@ def hash_partition(xs: np.ndarray, num_workers: int) -> np.ndarray:
     return (h % np.uint64(num_workers)).astype(np.int64)
 
 
-class ClusterService:
+class ClusterService(_BatchedQueryMixin):
     """Coordinator over N worker engines + a merge function (base class;
     use the sketch-specific subclasses below).
 
@@ -94,12 +105,18 @@ class ClusterService:
     (same seed) — the precondition of every merge.  ``merge_states`` folds
     a list of worker states into one (worker order fixes the canonical
     interleaving for S-ANN).  ``merge_every`` is the proactive merge
-    cadence in summed worker commits."""
+    cadence in summed worker commits.  ``batch_queries`` routes the sync
+    query wrappers through the coordinator's admission scheduler: one
+    merged snapshot (and, when stale, one tail merge) serves the whole
+    coalesced batch instead of one per client query."""
 
     def __init__(self, make_worker: Callable[[int], SketchEngine],
                  num_workers: int, merge_every: int,
                  merge_states: Callable[[Sequence], object],
-                 snapshot_dir: Optional[str] = None):
+                 snapshot_dir: Optional[str] = None,
+                 batch_queries: bool = False,
+                 max_batch: Optional[int] = None,
+                 max_wait_us: float = 200.0):
         if num_workers < 1:
             raise ValueError(f"num_workers={num_workers}")
         if snapshot_dir is not None:
@@ -113,6 +130,9 @@ class ClusterService:
         self._merged_versions: Optional[tuple] = None
         self._merged_meta: Optional[dict] = None
         self._last_merge_total = 0
+        self._init_query_batching(
+            batch_queries, max_batch, max_wait_us,
+            default_max_batch=self.workers[0]._query_block)
 
     @staticmethod
     def _check_cluster_dir(snapshot_dir: str, num_workers: int) -> None:
@@ -197,9 +217,11 @@ class ClusterService:
         self._maybe_merge()
 
     def close(self) -> None:
-        """Close every worker; the first failure is re-raised *after* the
-        remaining workers have still been closed (no leaked WAL handles or
-        threads behind an early error)."""
+        """Drain the coordinator's query batcher, then close every worker;
+        the first failure is re-raised *after* the remaining workers have
+        still been closed (no leaked WAL handles or threads behind an
+        early error)."""
+        self._close_batcher()
         first: Optional[BaseException] = None
         for w in self.workers:
             try:
@@ -289,6 +311,16 @@ class ClusterService:
         w0 = self.workers[0]
         return w0._query_blocks(lambda b: w0._query_fn(st, b), qs)
 
+    def _query_snapshot_ctx(self):
+        """One consistent merged ``(state, meta, versions)`` triple serving
+        a whole query tick — a stale merge cache costs ONE tail merge per
+        coalesced batch, not one per client (subclasses with extra
+        per-merge caches extend this)."""
+        return self.merged_snapshot()
+
+    def _batch_query_block(self) -> int:
+        return self.workers[0]._query_block
+
     @property
     def sketch_bytes(self) -> int:
         """Total sketch footprint across the workers (N replicas of the
@@ -317,7 +349,10 @@ class ClusterRetrievalService(ClusterService):
         def make(w: int) -> RetrievalService:
             # Same seed → identical LSH params (merge precondition); the
             # salt decorrelates the workers' Bernoulli keep decisions.
-            return RetrievalService(_worker_cfg(cfg, w, ingest_salt=w))
+            # Workers never run their own query batcher — the coordinator
+            # coalesces and reads them via their jitted query fns.
+            return RetrievalService(
+                _worker_cfg(cfg, w, ingest_salt=w, batch_queries=False))
 
         super().__init__(
             make, num_workers, merge_every,
@@ -326,12 +361,32 @@ class ClusterRetrievalService(ClusterService):
                     a, b, self.workers[0].params, self.workers[0].cfg,
                     self.workers[0]._ctx),
                 states),
-            snapshot_dir=cfg.snapshot_dir)
+            snapshot_dir=cfg.snapshot_dir,
+            batch_queries=cfg.batch_queries,
+            max_batch=cfg.max_batch, max_wait_us=cfg.max_wait_us)
+
+    _default_query_kind = "cr"
+
+    def _query_kind_fns(self):
+        def cr(ctx, qs):
+            return self._query_state(ctx[0], qs)
+
+        def topk(ctx, qs):
+            w0 = self.workers[0]
+            return w0._query_blocks(lambda b: w0._topk_fn(ctx[0], b), qs)
+
+        return {"cr": cr, "topk": topk}
 
     def query(self, queries: np.ndarray) -> sann.SANNResult:
         """Batched (c, r)-queries against the merged sketch, in the worker
-        engine's ``query_block`` blocks."""
-        return self._query_state(self.merged_state(), queries)
+        engine's ``query_block`` blocks (coalesced with concurrent clients
+        when ``batch_queries`` — one merged snapshot per tick)."""
+        return self._serve_query("cr", queries)
+
+    def query_topk(self, queries: np.ndarray):
+        """Batched top-k queries against the merged sketch (same snapshot
+        and micro-batching semantics as `query`)."""
+        return self._serve_query("topk", queries)
 
     def delete(self, embedding: np.ndarray) -> None:
         """Turnstile delete-by-value, broadcast to every worker.
@@ -361,13 +416,15 @@ class ClusterKDEService(ClusterService):
     def __init__(self, cfg: KDEServiceConfig, num_workers: int = 2,
                  merge_every: int = 8):
         super().__init__(
-            lambda w: KDEService(_worker_cfg(cfg, w)), num_workers,
-            merge_every,
+            lambda w: KDEService(_worker_cfg(cfg, w, batch_queries=False)),
+            num_workers, merge_every,
             lambda states: functools.reduce(
                 lambda a, b: swakde.swakde_merge(
                     a, b, self.workers[0].sketch_cfg),
                 states),
-            snapshot_dir=cfg.snapshot_dir)
+            snapshot_dir=cfg.snapshot_dir,
+            batch_queries=cfg.batch_queries,
+            max_batch=cfg.max_batch, max_wait_us=cfg.max_wait_us)
         self.cfg = cfg
         # cache_grid over the merged sketch: the (L, W) grid-estimate table
         # is pure given the merged state, so it is cached per merged
@@ -409,19 +466,33 @@ class ClusterKDEService(ClusterService):
                 lambda b: w0._grid_query_fn(grid, b), qs))
         return np.asarray(self._query_state(st, qs))
 
+    _default_query_kind = "kde"
+
+    def _query_kind_fns(self):
+        def kde(ctx, qs):
+            st, _, vers = ctx
+            return self._estimates(st, vers, qs)
+
+        def density(ctx, qs):
+            # coverage and estimates from the *same* merged snapshot; the
+            # batch-wide scalar divide keeps coalescing bit-identical.
+            st, meta, vers = ctx
+            return (self._estimates(st, vers, qs)
+                    / max((meta or {}).get("coverage", 0), 1))
+
+        return {"kde": kde, "density": density}
+
     def query(self, queries: np.ndarray) -> np.ndarray:
         """Batched unnormalised window-density estimates Ŷ against the
-        merged grid."""
-        st, _, vers = self.merged_snapshot()
-        return self._estimates(st, vers, queries)
+        merged grid (coalesced with concurrent clients when
+        ``batch_queries`` — one merged snapshot + one grid per tick)."""
+        return self._serve_query("kde", queries)
 
     def density(self, queries: np.ndarray) -> np.ndarray:
         """Normalised density: Ŷ / (summed per-worker window coverage) —
         the coverage and the estimates come from the *same* merged
-        snapshot."""
-        st, meta, vers = self.merged_snapshot()
-        out = self._estimates(st, vers, queries)
-        return out / max((meta or {}).get("coverage", 0), 1)
+        snapshot (micro-batched like `query`)."""
+        return self._serve_query("density", queries)
 
     @property
     def steps(self) -> int:
@@ -437,22 +508,37 @@ class ClusterRACEService(ClusterService):
     def __init__(self, cfg: RACEServiceConfig, num_workers: int = 2,
                  merge_every: int = 8):
         super().__init__(
-            lambda w: RACEService(_worker_cfg(cfg, w)), num_workers,
-            merge_every,
+            lambda w: RACEService(_worker_cfg(cfg, w, batch_queries=False)),
+            num_workers, merge_every,
             lambda states: functools.reduce(race.race_merge, states),
-            snapshot_dir=cfg.snapshot_dir)
+            snapshot_dir=cfg.snapshot_dir,
+            batch_queries=cfg.batch_queries,
+            max_batch=cfg.max_batch, max_wait_us=cfg.max_wait_us)
         self.cfg = cfg
 
+    _default_query_kind = "kde"
+
+    def _query_kind_fns(self):
+        def kde(ctx, qs):
+            return np.asarray(self._query_state(ctx[0], qs))
+
+        def density(ctx, qs):
+            # counters and n from the *same* merged snapshot
+            st = ctx[0]
+            return kde(ctx, qs) / max(float(np.asarray(st.n)), 1.0)
+
+        return {"kde": kde, "density": density}
+
     def query(self, queries: np.ndarray) -> np.ndarray:
-        """Batched unnormalised KDE estimates against the merged counters."""
-        return np.asarray(self._query_state(self.merged_state(), queries))
+        """Batched unnormalised KDE estimates against the merged counters
+        (coalesced with concurrent clients when ``batch_queries`` — one
+        merged snapshot, and at most one tail merge, per tick)."""
+        return self._serve_query("kde", queries)
 
     def kde(self, queries: np.ndarray) -> np.ndarray:
         """Normalised density — counters and ``n`` from the *same* merged
-        snapshot."""
-        st = self.merged_state()
-        out = np.asarray(self._query_state(st, queries))
-        return out / max(float(np.asarray(st.n)), 1.0)
+        snapshot (micro-batched like `query`)."""
+        return self._serve_query("density", queries)
 
     def delete(self, embeddings: np.ndarray) -> None:
         """Turnstile decrements, routed to each row's hash owner."""

@@ -47,15 +47,34 @@ Query-side snapshot caching: every commit bumps a version counter;
 (L, W) grid-estimate table) keyed by that version, so repeated query
 batches between commits skip the recompute and any commit invalidates the
 cache automatically.
+
+Cross-request query micro-batching (`QueryBatcher`, DESIGN.md §13): the
+fused batch engine is ~an order of magnitude faster per row at B = 1024
+than at B = 1, but real client traffic arrives as B = 1 — so the engine
+also owns a query-side *admission scheduler* that coalesces concurrent
+client queries into one fused `query_batch` per tick (bounded by
+``max_batch`` rows and a ``max_wait_us`` latency budget), serves the whole
+coalesced batch from ONE versioned state snapshot (and, for SW-AKDE, one
+grid-cache entry), and scatters per-query results back to the waiting
+callers' futures.  The paper's batched-query guarantee (a batch of ANN
+queries shares a single sketch pass) makes the coalesced batch
+semantically identical to N independent queries, and the PR-3 fused
+engines are row-independent and pinned bit-identical to the per-query
+oracles — so coalescing is invisible to clients bit-for-bit
+(tests/test_serve_batching.py).  ``submit_query`` enqueues and returns a
+future; the sync query wrappers route through the batcher when the
+service is built with ``batch_queries=True`` (default off: nothing
+changes for existing callers).
 """
 from __future__ import annotations
 
 import collections
 import pathlib
 import threading
+import time
 import traceback
-from typing import Any, Callable, Optional
-from concurrent.futures import ThreadPoolExecutor
+from typing import Any, Callable, Optional, Sequence
+from concurrent.futures import Future, ThreadPoolExecutor
 
 import jax
 import jax.numpy as jnp
@@ -79,7 +98,310 @@ def durability_from(cfg) -> Optional[persist.DurabilityConfig]:
                                     fsync=cfg.wal_fsync)
 
 
-class SketchEngine:
+def batch_plan(pending: Sequence, now_us: float, max_batch: int,
+               max_wait_us: float):
+    """Pure admission policy of one `QueryBatcher` tick.
+
+    ``pending`` is the FIFO queue of waiting requests as ``(arrival_us,
+    n_rows)`` pairs (non-empty); returns ``(take, wait_us)``:
+
+      * ``take >= 1`` — coalesce the first ``take`` requests into one
+        fused batch *now*;
+      * ``take == 0`` — no batch yet: sleep at most ``wait_us`` for more
+        arrivals (always the *oldest* request's remaining budget, so later
+        arrivals can never push the deadline out — no starvation).
+
+    Firing rule: dispatch as soon as the coalesced prefix (a) holds at
+    least ``max_batch`` rows, (b) is row-capped (the next request would
+    not fit — waiting adds latency without adding rows), or (c) the oldest
+    request's ``max_wait_us`` budget is spent.  The prefix never exceeds
+    ``max_batch`` rows unless a single request alone does (one-request
+    progress guarantee).  Kept free of threads/clocks so the scheduler
+    properties are fuzz-testable exactly (tests/test_serve_batching.py).
+    """
+    take, rows = 0, 0
+    for _, n in pending:
+        if take and rows + n > max_batch:
+            break
+        take += 1
+        rows += n
+    capped = take < len(pending)
+    deadline = pending[0][0] + max_wait_us
+    if rows >= max_batch or capped or now_us >= deadline:
+        return take, 0.0
+    return 0, deadline - now_us
+
+
+class QueryBatcher:
+    """Cross-request query micro-batching: an admission queue + tick loop.
+
+    Concurrent ``submit(kind, rows)`` calls enqueue ``(B_i, d)`` query
+    blocks and get a `concurrent.futures.Future` back; a dedicated
+    scheduler thread coalesces the queue into one execute call per tick
+    under the `batch_plan` policy (``max_batch`` rows / ``max_wait_us``
+    latency budget) and scatters per-request result slices onto the
+    futures.  ``execute(reqs)`` — supplied by the engine — receives the
+    FIFO list of ``(kind, rows)`` and must return one result per request;
+    it runs *outside* the queue lock, so arrivals during a slow batch
+    simply form the next tick (a slow query delays later arrivals by at
+    most one in-flight execute, never indefinitely).
+
+    ``close()`` drains: queued requests are still served (in order), then
+    the thread exits; ``close(drain=False)`` fails pending futures with
+    `RuntimeError` instead.  Either way no future is left hanging and new
+    submissions are rejected.
+    """
+
+    def __init__(self, execute: Callable[[list], list],
+                 max_batch: int = 1024, max_wait_us: float = 200.0):
+        self._execute = execute
+        self._max_batch = max(1, int(max_batch))
+        self._max_wait_us = max(0.0, float(max_wait_us))
+        self._cv = threading.Condition()
+        self._pending: collections.deque = collections.deque()
+        self._closed = False
+        self._thread: Optional[threading.Thread] = None
+        # stats (under _cv): ticks = execute calls, queries/rows = totals
+        # over all coalesced batches, max_tick_rows = largest single tick.
+        self._ticks = 0
+        self._queries = 0
+        self._rows = 0
+        self._max_tick_rows = 0
+
+    @property
+    def closed(self) -> bool:
+        return self._closed
+
+    def submit(self, kind: str, rows) -> Future:
+        """Enqueue one query block; returns a future resolving to the
+        engine's result for exactly these rows (bit-identical to an
+        uncoalesced call)."""
+        fut: Future = Future()
+        with self._cv:
+            if self._closed:
+                raise RuntimeError("QueryBatcher is closed")
+            self._pending.append(
+                (time.monotonic() * 1e6, kind, rows, fut))
+            if self._thread is None:
+                self._thread = threading.Thread(
+                    target=self._loop, daemon=True, name="query-batcher")
+                self._thread.start()
+            self._cv.notify_all()
+        return fut
+
+    def stats(self) -> dict:
+        """Scheduler counters: ticks (fused execute calls), coalesced
+        queries/rows, mean coalesced batch size, largest tick."""
+        with self._cv:
+            t = max(self._ticks, 1)
+            return {"ticks": self._ticks, "queries": self._queries,
+                    "rows": self._rows,
+                    "mean_batch_queries": self._queries / t,
+                    "mean_batch_rows": self._rows / t,
+                    "max_tick_rows": self._max_tick_rows}
+
+    def close(self, drain: bool = True) -> None:
+        """Stop accepting work; serve (``drain=True``) or fail the queue,
+        then join the scheduler thread.  Idempotent."""
+        with self._cv:
+            self._closed = True
+            if not drain:
+                while self._pending:
+                    *_, fut = self._pending.popleft()
+                    fut.set_exception(
+                        RuntimeError("QueryBatcher closed before serving"))
+            thread = self._thread
+            self._cv.notify_all()
+        if thread is not None:
+            thread.join()
+            self._thread = None
+
+    def _loop(self) -> None:
+        while True:
+            with self._cv:
+                while not self._pending and not self._closed:
+                    self._cv.wait()
+                if not self._pending:
+                    return                       # closed and drained
+                while True:
+                    # A closing batcher fires the planned prefix at once
+                    # (wait budget 0) — drain without the latency budget.
+                    take, wait_us = batch_plan(
+                        [(arr, r.shape[0]) for arr, _, r, _ in
+                         self._pending],
+                        time.monotonic() * 1e6, self._max_batch,
+                        0.0 if self._closed else self._max_wait_us)
+                    if take:
+                        break
+                    self._cv.wait(wait_us / 1e6)
+                batch = [self._pending.popleft() for _ in range(take)]
+                self._ticks += 1
+                self._queries += len(batch)
+                rows = sum(r.shape[0] for _, _, r, _ in batch)
+                self._rows += rows
+                self._max_tick_rows = max(self._max_tick_rows, rows)
+            reqs = [(kind, r) for _, kind, r, _ in batch]
+            try:
+                results = self._execute(reqs)
+                for (*_, fut), res in zip(batch, results):
+                    fut.set_result(res)
+            except BaseException as e:
+                for *_, fut in batch:
+                    if not fut.done():
+                        fut.set_exception(e)
+
+
+class _BatchedQueryMixin:
+    """Shared query-side micro-batching API: `SketchEngine` and the
+    cluster coordinator both coalesce through this (one snapshot per
+    tick, per-kind fused calls, per-request result scatter).
+
+    Host-class contract: ``_query_kind_fns()`` maps query-kind names to
+    ``fn(snapshot_ctx, qs) -> pytree`` with a leading B axis (row
+    independent and bit-identical to per-query calls — the PR-3 fused
+    engines); ``_query_snapshot_ctx()`` captures everything a tick shares
+    (state snapshot, version, caches) in ONE lock-consistent read; and
+    ``_default_query_kind`` names the plain-``query()`` kind.
+    """
+
+    _default_query_kind = "query"
+
+    def _init_query_batching(self, batch_queries: bool,
+                             max_batch: Optional[int],
+                             max_wait_us: float, default_max_batch: int):
+        self._batch_queries = bool(batch_queries)
+        self._max_batch = (default_max_batch if max_batch is None
+                           else max(1, int(max_batch)))
+        self._max_wait_us = float(max_wait_us)
+        self._batcher: Optional[QueryBatcher] = None
+        self._batcher_lock = threading.Lock()
+        self._kind_fns: Optional[dict] = None
+
+    # --- host-class hooks ---------------------------------------------------
+
+    def _query_kind_fns(self) -> dict:
+        raise NotImplementedError
+
+    def _query_snapshot_ctx(self):
+        raise NotImplementedError
+
+    # --- API ----------------------------------------------------------------
+
+    @property
+    def batcher(self) -> Optional[QueryBatcher]:
+        """The live scheduler (None until the first ``submit_query``)."""
+        return self._batcher
+
+    def _kind_fn(self, kind: str) -> Callable:
+        if self._kind_fns is None:
+            self._kind_fns = self._query_kind_fns()
+        try:
+            return self._kind_fns[kind]
+        except KeyError:
+            raise ValueError(
+                f"unknown query kind {kind!r}; expected one of "
+                f"{sorted(self._kind_fns)}") from None
+
+    def submit_query(self, queries, kind: Optional[str] = None) -> Future:
+        """Enqueue a query block ``(B, d)`` with the admission scheduler
+        and return a future — the asynchronous client entry point.  The
+        result is bit-identical to the corresponding sync call; B = 0
+        blocks resolve to the matching empty result."""
+        kind = self._default_query_kind if kind is None else kind
+        self._kind_fn(kind)                      # validate before enqueue
+        # Host-side staging: keep the rows as numpy so the tick can
+        # concatenate and scatter without any per-request device dispatch.
+        qs = np.asarray(queries, np.float32)
+        with self._batcher_lock:
+            if self._batcher is None:
+                self._batcher = QueryBatcher(
+                    self._batch_execute, max_batch=self._max_batch,
+                    max_wait_us=self._max_wait_us)
+            return self._batcher.submit(kind, qs)
+
+    def _serve_query(self, kind: str, queries):
+        """Sync query entry: through the scheduler when the service was
+        built with ``batch_queries=True`` (and it is still accepting),
+        directly against one snapshot otherwise — identical results."""
+        qs = np.asarray(queries, np.float32)
+        if self._batch_queries and not (
+                self._batcher is not None and self._batcher.closed):
+            return self.submit_query(qs, kind=kind).result()
+        return self._kind_fn(kind)(self._query_snapshot_ctx(), qs)
+
+    def _close_batcher(self) -> None:
+        with self._batcher_lock:
+            if self._batcher is not None:
+                self._batcher.close()
+
+    # --- the coalesced tick -------------------------------------------------
+
+    @staticmethod
+    def _pad_rows(n: int, block: int) -> int:
+        """Coalesced batch sizes vary per tick; pad to a bucketed size so
+        the fused engines see O(log max_batch) distinct shapes instead of
+        one jit trace per size: next power of two below ``block``, next
+        multiple of ``block`` above (every `_query_blocks` block is then
+        full-size).  Padding rows are zeros and the fused engines are row
+        independent, so the first n rows are bit-identical."""
+        if n >= block:
+            return -(-n // block) * block
+        p = 1
+        while p < n:
+            p <<= 1
+        return p
+
+    def _batch_execute(self, reqs: list) -> list:
+        """Serve one coalesced tick: ONE snapshot context for every
+        request, one fused (padded) call per query kind, per-request
+        result slices scattered back in FIFO order.
+
+        All batch bookkeeping stays on the host: requests arrive as
+        numpy (submit_query), the concat + zero-pad are numpy ops, and
+        the fused output is pulled to the host ONCE so the per-request
+        scatter is numpy views — a tick costs one device round trip per
+        kind regardless of how many requests coalesced.  (A device-side
+        jnp.concatenate would retrace per distinct request *count*, and
+        per-request device slices would pay one dispatch per array —
+        both defeat the point of coalescing.)"""
+        ctx = self._query_snapshot_ctx()
+        results: list = [None] * len(reqs)
+        groups: dict = {}
+        for i, (kind, qs) in enumerate(reqs):
+            groups.setdefault(kind, []).append(i)
+        for kind, idxs in groups.items():
+            fn = self._kind_fn(kind)
+            live = [i for i in idxs if reqs[i][1].shape[0]]
+            for i in idxs:                       # B = 0: direct empty call
+                if reqs[i][1].shape[0] == 0:
+                    results[i] = jax.tree.map(np.asarray, fn(ctx, reqs[i][1]))
+            if not live:
+                continue
+            if len(live) == 1:
+                results[live[0]] = jax.tree.map(
+                    np.asarray, fn(ctx, reqs[live[0]][1]))
+                continue
+            parts = [reqs[i][1] for i in live]
+            n = sum(p.shape[0] for p in parts)
+            pad = self._pad_rows(n, self._batch_query_block()) - n
+            if pad:
+                parts = parts + [np.zeros((pad,) + parts[0].shape[1:],
+                                          parts[0].dtype)]
+            out = jax.tree.map(np.asarray, fn(ctx, np.concatenate(parts)))
+            lo = 0
+            for i in live:
+                hi = lo + reqs[i][1].shape[0]
+                results[i] = jax.tree.map(
+                    lambda a, lo=lo, hi=hi: a[lo:hi], out)
+                lo = hi
+        return results
+
+    def _batch_query_block(self) -> int:
+        """Row bucket for `_pad_rows` (the host's fused-query block)."""
+        return self._query_block                 # SketchEngine attribute
+
+
+class SketchEngine(_BatchedQueryMixin):
     """Two-phase streaming-ingest runtime shared by the sketch services.
 
     Subclass contract (all other plumbing lives here, once):
@@ -107,6 +429,12 @@ class SketchEngine:
     still apply strictly in submission order), ``max_pending`` bounds
     queued-but-uncommitted rows (None = unbounded), ``durability`` enables
     the snapshot + WAL subsystem.
+
+    Query-side micro-batching (`_BatchedQueryMixin`): ``batch_queries``
+    routes the sync query wrappers through the admission scheduler,
+    ``max_batch`` bounds the rows coalesced per tick (None = the
+    ``query_block``) and ``max_wait_us`` is the scheduler's latency
+    budget; ``submit_query`` is always available regardless.
     """
 
     state: Any
@@ -115,9 +443,14 @@ class SketchEngine:
                  pipelined: bool = True,
                  prepare_depth: int = 1,
                  max_pending: Optional[int] = None,
-                 durability: Optional[persist.DurabilityConfig] = None):
+                 durability: Optional[persist.DurabilityConfig] = None,
+                 batch_queries: bool = False,
+                 max_batch: Optional[int] = None,
+                 max_wait_us: float = 200.0):
         self._chunk = max(1, int(ingest_chunk))
         self._query_block = max(1, int(query_block))
+        self._init_query_batching(batch_queries, max_batch, max_wait_us,
+                                  default_max_batch=self._query_block)
         self._pipelined = bool(pipelined)
         self._prepare_depth = max(1, int(prepare_depth))
         self._max_pending = (None if max_pending is None
@@ -295,9 +628,12 @@ class SketchEngine:
 
     def close(self) -> None:
         """Commit everything already queued, then stop the worker thread,
-        the prepare pool and the durability writers.  Idempotent; the
-        engine rejects new ingests afterwards (queries keep working).
+        the prepare pool, the query batcher and the durability writers.
+        Idempotent; the engine rejects new ingests afterwards (sync
+        queries keep working — the batcher drains its pending futures and
+        later sync calls take the direct snapshot path).
         Call ``flush()`` first if you need background failures re-raised."""
+        self._close_batcher()
         with self._submit_lock:
             if self._closed:
                 return
@@ -525,6 +861,13 @@ class SketchEngine:
         serve a query batch against one committed prefix."""
         with self._lock:
             return self.state, self._version
+
+    def _query_snapshot_ctx(self):
+        """Everything one query tick shares, captured in one consistent
+        read (services with per-version caches override to resolve them
+        here — e.g. the SW-AKDE grid — so a whole coalesced batch shares
+        one cache entry and can never mix versions)."""
+        return self.snapshot()
 
     @property
     def version(self) -> int:

@@ -80,6 +80,14 @@ class KDEServiceConfig:
     # False = recompute through the fused engine every call (bit-identical
     # results either way).
     cache_grid: bool = True
+    # Cross-request query micro-batching (DESIGN.md §13): coalesce
+    # concurrent clients' queries into one fused batch per scheduler tick
+    # (max ``max_batch`` rows, ``max_wait_us`` latency budget), sharing one
+    # state snapshot and one grid-cache entry across the coalesced batch.
+    # Bit-identical answers; ``submit_query`` works either way.
+    batch_queries: bool = False
+    max_batch: Optional[int] = None
+    max_wait_us: float = 200.0
     # Multi-device sharding: num_shards > 1 splits the L rows across that
     # many local devices (L must divide evenly); ``mesh`` overrides with a
     # prebuilt 1-D ("shard",) mesh.  Both unset → single-device.
@@ -119,7 +127,10 @@ class KDEService(SketchEngine):
                          pipelined=cfg.pipelined,
                          prepare_depth=cfg.prepare_depth,
                          max_pending=cfg.max_pending,
-                         durability=durability_from(cfg))
+                         durability=durability_from(cfg),
+                         batch_queries=cfg.batch_queries,
+                         max_batch=cfg.max_batch,
+                         max_wait_us=cfg.max_wait_us)
         self.state = swakde.swakde_init(self.sketch_cfg)
 
         self._ctx = ss.make_service_ctx(cfg.mesh, cfg.num_shards)
@@ -162,34 +173,58 @@ class KDEService(SketchEngine):
         """Devices the rows are split across (1 = single-device path)."""
         return ss.ctx_num_shards(self._ctx)
 
-    def _query_snapshot(self, qs: jnp.ndarray):
-        """One lock-consistent snapshot serving every block of ``qs``:
-        returns ``(state, estimates)``.  With ``cache_grid`` the block
-        reads come from the per-version grid table (computed at most once
-        per commit); otherwise from the fused engine on the snapshot."""
+    # --- query kinds (micro-batching; engine._BatchedQueryMixin) -----------
+
+    _default_query_kind = "kde"
+
+    def _query_snapshot_ctx(self):
+        """One lock-consistent ``(state, version, grid)`` serving a whole
+        query tick: with ``cache_grid`` the per-version grid table is
+        resolved here — computed at most once per commit and shared by
+        every query of the coalesced batch (a commit bumps the version, so
+        a stale grid can never be paired with a newer state)."""
         state, version = self.snapshot()
+        grid = None
         if self.cfg.cache_grid:
             grid = self.cached("grid", version,
                                lambda: jax.block_until_ready(
                                    self._grid_fn(state)))
-            out = self._query_blocks(
-                lambda b: self._grid_query_fn(grid, b), qs)
-        else:
-            out = self._query_blocks(lambda b: self._query_fn(state, b), qs)
-        return state, np.asarray(out)
+        return state, version, grid
+
+    def _query_kind_fns(self):
+        def kde(ctx, qs):
+            state, _, grid = ctx
+            if grid is not None:
+                out = self._query_blocks(
+                    lambda b: self._grid_query_fn(grid, b), qs)
+            else:
+                out = self._query_blocks(
+                    lambda b: self._query_fn(state, b), qs)
+            return np.asarray(out)
+
+        def density(ctx, qs):
+            # Ŷ and the window clock from the *same* snapshot; the batch-
+            # wide scalar divide is elementwise, so per-row results equal
+            # an unbatched density() call bit-for-bit.
+            state = ctx[0]
+            denom = max(min(int(state.t), self.cfg.window), 1)
+            return kde(ctx, qs) / float(denom)
+
+        return {"kde": kde, "density": density}
 
     def query(self, queries: np.ndarray) -> np.ndarray:
         """Batched unnormalised window-density estimates Ŷ (Thm 4.1) against
-        one committed snapshot, in ``query_block`` blocks."""
-        _, out = self._query_snapshot(jnp.asarray(queries, jnp.float32))
-        return out
+        one committed snapshot, in ``query_block`` blocks.  With
+        ``batch_queries`` the call is coalesced with concurrent clients'
+        queries into one fused batch sharing one grid-cache entry
+        (bit-identical results)."""
+        return self._serve_query("kde", queries)
 
     def density(self, queries: np.ndarray) -> np.ndarray:
         """Normalised sliding-window density: Ŷ / min(t, N) — the state and
-        the clock come from the *same* snapshot."""
-        state, out = self._query_snapshot(jnp.asarray(queries, jnp.float32))
-        denom = max(min(int(state.t), self.cfg.window), 1)
-        return out / float(denom)
+        the clock come from the *same* snapshot (micro-batched like
+        `query` when ``batch_queries`` is set)."""
+        return self._serve_query("density", queries)
 
     @property
     def steps(self) -> int:

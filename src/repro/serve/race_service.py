@@ -61,6 +61,14 @@ class RACEServiceConfig:
     mesh: Optional[object] = None   # jax.sharding.Mesh
     # Admission control: bound on queued-but-uncommitted rows (None = off).
     max_pending: Optional[int] = None
+    # Cross-request query micro-batching (DESIGN.md §13): coalesce
+    # concurrent clients' queries into one fused batch per scheduler tick
+    # (max ``max_batch`` rows, ``max_wait_us`` latency budget) against one
+    # state snapshot.  Bit-identical answers; ``submit_query`` works
+    # either way.
+    batch_queries: bool = False
+    max_batch: Optional[int] = None
+    max_wait_us: float = 200.0
     # Durability (repro.persist): WAL-logged chunks + background snapshots
     # under ``snapshot_dir``; ``recover()`` restores bit-identically.
     snapshot_dir: Optional[str] = None
@@ -87,7 +95,10 @@ class RACEService(SketchEngine):
                          query_block=cfg.query_block,
                          pipelined=cfg.pipelined,
                          max_pending=cfg.max_pending,
-                         durability=durability_from(cfg))
+                         durability=durability_from(cfg),
+                         batch_queries=cfg.batch_queries,
+                         max_batch=cfg.max_batch,
+                         max_wait_us=cfg.max_wait_us)
         self.state = race.race_init(cfg.L, cfg.W)
 
         self._ctx = ss.make_service_ctx(cfg.mesh, cfg.num_shards)
@@ -145,22 +156,35 @@ class RACEService(SketchEngine):
             persist.KIND_DELETE, {"xs": np.asarray(xs)},
             lambda st: self._delete_commit_fn(st, self._prepare_fn(xs)))
 
+    # --- query kinds (micro-batching; engine._BatchedQueryMixin) -----------
+
+    _default_query_kind = "kde"
+
+    def _query_kind_fns(self):
+        def kde(ctx, qs):
+            state, _ = ctx
+            return np.asarray(
+                self._query_blocks(lambda b: self._query_fn(state, b), qs))
+
+        def density(ctx, qs):
+            # estimates and n from the *same* snapshot; the scalar divide
+            # is elementwise, so coalescing preserves bit-identity.
+            state = ctx[0]
+            return kde(ctx, qs) / max(float(np.asarray(state.n)), 1.0)
+
+        return {"kde": kde, "density": density}
+
     def query(self, queries: np.ndarray) -> np.ndarray:
         """Batched unnormalised KDE estimates (Theorem 2.3) against one
-        committed snapshot, in ``query_block`` blocks."""
-        qs = jnp.asarray(queries, jnp.float32)
-        state, _ = self.snapshot()
-        return np.asarray(
-            self._query_blocks(lambda b: self._query_fn(state, b), qs))
+        committed snapshot, in ``query_block`` blocks.  With
+        ``batch_queries`` the call is coalesced with concurrent clients'
+        queries into one fused batch (bit-identical results)."""
+        return self._serve_query("kde", queries)
 
     def kde(self, queries: np.ndarray) -> np.ndarray:
         """Normalised density: raw estimate / signed stream size, from one
-        snapshot."""
-        qs = jnp.asarray(queries, jnp.float32)
-        state, _ = self.snapshot()
-        out = np.asarray(
-            self._query_blocks(lambda b: self._query_fn(state, b), qs))
-        return out / max(float(np.asarray(state.n)), 1.0)
+        snapshot (micro-batched like `query` when ``batch_queries``)."""
+        return self._serve_query("density", queries)
 
     @property
     def count(self) -> int:

@@ -69,6 +69,19 @@ class RetrievalConfig:
     # (block, 3L, dim) scoring footprint; each distinct partial-block size
     # triggers one extra jit trace.
     query_block: int = 1024
+    # Top-k result width for `query_topk` / the "topk" query kind (recall
+    # workloads; no (c, r) contract) — capped at L * bucket_cap.
+    topk: int = 50
+    # Cross-request query micro-batching (DESIGN.md §13): with
+    # ``batch_queries`` the sync query wrappers enqueue with the admission
+    # scheduler, which coalesces concurrent clients into one fused batch
+    # per tick — at most ``max_batch`` rows (None = query_block), waiting
+    # at most ``max_wait_us`` for the batch to fill.  Answers stay
+    # bit-identical to unbatched calls; ``submit_query`` (future-returning)
+    # is available either way.
+    batch_queries: bool = False
+    max_batch: Optional[int] = None
+    max_wait_us: float = 200.0
     # Multi-device sharding: num_shards > 1 splits the L tables across that
     # many local devices (L must divide evenly); ``mesh`` overrides with a
     # prebuilt 1-D ("shard",) mesh.  Both unset → single-device.
@@ -91,6 +104,7 @@ class RetrievalService(SketchEngine):
     queries (shared runtime: `repro.serve.engine.SketchEngine`)."""
 
     def __init__(self, cfg: RetrievalConfig):
+        self.service_cfg = cfg
         base = sann.SANNConfig(
             dim=cfg.dim, n_max=cfg.n_max, eta=cfg.eta, r=cfg.r, c=cfg.c,
             w=cfg.w, L=cfg.L, k=cfg.k, bucket_cap=cfg.bucket_cap)
@@ -101,7 +115,10 @@ class RetrievalService(SketchEngine):
                          pipelined=cfg.pipelined,
                          prepare_depth=cfg.prepare_depth,
                          max_pending=cfg.max_pending,
-                         durability=durability_from(cfg))
+                         durability=durability_from(cfg),
+                         batch_queries=cfg.batch_queries,
+                         max_batch=cfg.max_batch,
+                         max_wait_us=cfg.max_wait_us)
         self.state = state
         # Per-chunk keys are fold_in(base, chunk seq): a pure function of
         # the chunk's global sequence number, so the schedule is identical
@@ -122,6 +139,10 @@ class RetrievalService(SketchEngine):
         self._query_fn = jax.jit(
             lambda st, qs: ss.sharded_sann_query_batch(
                 st, self.params, qs, self.cfg, self._ctx))
+        self._topk_fn = jax.jit(
+            lambda st, qs: ss.sharded_sann_query_topk_batch(
+                st, self.params, qs, self.cfg, self._ctx,
+                topk=self.service_cfg.topk))
         self._delete_fn = jax.jit(
             lambda st, x: ss.sharded_sann_delete(
                 st, self.params, x, self.cfg, self._ctx))
@@ -152,6 +173,25 @@ class RetrievalService(SketchEngine):
             return
         super()._apply_wal_record(kind, arrays)
 
+    # --- query kinds (micro-batching; engine._BatchedQueryMixin) -----------
+
+    _default_query_kind = "cr"
+
+    def _query_kind_fns(self):
+        """Both S-ANN query kinds — the (c, r) contract and the top-k
+        recall variant — read one snapshot's state through the fused batch
+        engine in ``query_block`` blocks, so a coalesced tick can mix
+        them against the same committed prefix."""
+        def cr(ctx, qs):
+            state, _ = ctx
+            return self._query_blocks(lambda b: self._query_fn(state, b), qs)
+
+        def topk(ctx, qs):
+            state, _ = ctx
+            return self._query_blocks(lambda b: self._topk_fn(state, b), qs)
+
+        return {"cr": cr, "topk": topk}
+
     # --- serving API -------------------------------------------------------
 
     @property
@@ -170,13 +210,20 @@ class RetrievalService(SketchEngine):
                              lambda st: self._delete_fn(st, x))
 
     def query(self, queries: np.ndarray) -> sann.SANNResult:
-        """Batched queries (paper §3.3) through the fused batch engine, in
-        blocks of ``query_block`` rows (one hash matmul + one gather + one
-        fused scorer call per block) — all blocks against one lock-consistent
-        snapshot of the committed state."""
-        qs = jnp.asarray(queries, jnp.float32)
-        state, _ = self.snapshot()
-        return self._query_blocks(lambda b: self._query_fn(state, b), qs)
+        """Batched (c, r)-queries (paper §3.3) through the fused batch
+        engine, in blocks of ``query_block`` rows (one hash matmul + one
+        gather + one fused scorer call per block) — all blocks against one
+        lock-consistent snapshot of the committed state.  With
+        ``batch_queries`` the call is coalesced with concurrent clients'
+        queries into one fused batch (bit-identical results)."""
+        return self._serve_query("cr", queries)
+
+    def query_topk(self, queries: np.ndarray):
+        """Batched top-k queries (recall workloads; no (c, r) contract):
+        ``(B, d)`` → ``(ids (B, k), dists (B, k))`` with ``k = min(cfg.topk,
+        L * bucket_cap)``, padded with id -1 / distance inf.  Same snapshot
+        and micro-batching semantics as `query`."""
+        return self._serve_query("topk", queries)
 
     @property
     def stored(self) -> int:

@@ -306,6 +306,34 @@ def test_max_pending_backpressure_blocks_and_releases():
     assert _states_equal(svc.state, ref.state)
 
 
+def test_batched_query_path_single_caller_bit_identical():
+    """batch_queries=True routes sync queries through the admission
+    scheduler (DESIGN.md §13); with a single caller every tick holds one
+    request and the answers are bit-identical to the direct path —
+    including the version-cached grid reads.  (Concurrent-coalescing
+    semantics live in tests/test_serve_batching.py.)"""
+    data = _data(n=200, seed=10)
+    qs = data[:5] + 0.01
+    ref = KDEService(KDEServiceConfig(**_KDE_KW))
+    svc = KDEService(KDEServiceConfig(**_KDE_KW, batch_queries=True,
+                                      max_wait_us=0.0))
+    ref.ingest(data)
+    svc.ingest(data)
+    np.testing.assert_array_equal(svc.query(qs), ref.query(qs))
+    np.testing.assert_array_equal(svc.density(qs), ref.density(qs))
+    assert svc.batcher.stats()["queries"] == 2
+    r_ref = RetrievalService(RetrievalConfig(**_RETR_KW))
+    r_svc = RetrievalService(RetrievalConfig(**_RETR_KW, batch_queries=True,
+                                             max_wait_us=0.0))
+    r_ref.ingest(data)
+    r_svc.ingest(data)
+    a, b = r_svc.query(qs), r_ref.query(qs)
+    assert all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+    for s in (ref, svc, r_ref, r_svc):
+        s.close()
+
+
 def test_close_commits_queued_then_rejects_new_work():
     data = _data(n=200, seed=8)
     svc = KDEService(KDEServiceConfig(**_KDE_KW))

@@ -1,0 +1,475 @@
+"""Cross-request query micro-batching (repro.serve.engine.QueryBatcher +
+_BatchedQueryMixin, DESIGN.md §13):
+
+  * coalescing bit-identity — N concurrent clients through the admission
+    scheduler get exactly the answers sequential per-query calls produce,
+    for all three sketches, with mixed query kinds in one tick and with
+    coalesced sizes that exercise the query_block remainder path;
+  * snapshot consistency under churn — queries coalesced while a
+    background ingest commits always read ONE committed prefix of the
+    stream (never a torn state), and the SW-AKDE grid cache is never
+    stale for a coalesced batch;
+  * scheduler properties — seeded-rng fuzz of the pure `batch_plan`
+    policy inside a simulated event loop (latency budget honored up to
+    one in-flight tick, max_batch never exceeded except by a lone
+    oversized request, FIFO/no starvation), plus thread-level checks
+    that a slow query delays later arrivals by at most one execute and
+    that empty (B=0) requests never force a fused tick;
+  * lifecycle — close() drains (or fails, drain=False) every pending
+    future and rejects new work; engine close() leaves sync queries on
+    the direct path;
+  * cluster — the coordinator pays one merged snapshot per tick, not one
+    per concurrent client.
+"""
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serve.cluster import ClusterKDEService
+from repro.serve.engine import QueryBatcher, batch_plan
+from repro.serve.kde_service import KDEService, KDEServiceConfig
+from repro.serve.race_service import RACEService, RACEServiceConfig
+from repro.serve.retrieval import RetrievalConfig, RetrievalService
+
+_RETR_KW = dict(dim=8, n_max=1000, eta=0.2, r=0.4, c=2.0, w=1.0, L=6, k=3,
+                ingest_chunk=64)
+_KDE_KW = dict(dim=8, L=6, W=32, window=150, eh_eps=0.2, ingest_chunk=50)
+_RACE_KW = dict(dim=8, L=6, W=32, ingest_chunk=64, seed=3)
+# A long wait budget forces real coalescing in the threaded tests (the
+# scheduler holds the batch open until every client thread has enqueued).
+_WAIT = dict(batch_queries=True, max_wait_us=200_000.0)
+
+
+def _data(n=500, d=8, seed=0):
+    return np.random.default_rng(seed).uniform(0, 1, (n, d)).astype(
+        np.float32)
+
+
+def _run_threads(calls):
+    """Run ``calls`` (thunks) concurrently; return results in call order."""
+    outs = [None] * len(calls)
+    errs = []
+
+    def work(i):
+        try:
+            outs[i] = calls[i]()
+        except BaseException as e:  # pragma: no cover - surfaced below
+            errs.append(e)
+
+    ts = [threading.Thread(target=work, args=(i,)) for i in range(len(calls))]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert not errs, errs
+    return outs
+
+
+def _trees_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    return len(la) == len(lb) and all(
+        np.array_equal(np.asarray(x), np.asarray(y))
+        for x, y in zip(la, lb))
+
+
+# ---------------------------------------------------------------------------
+# Coalescing bit-identity (all three sketches, mixed kinds, remainder path)
+# ---------------------------------------------------------------------------
+
+def test_retrieval_coalesced_bit_identical_mixed_kinds():
+    data = _data()
+    ref = RetrievalService(RetrievalConfig(**_RETR_KW))
+    svc = RetrievalService(RetrievalConfig(**_RETR_KW, **_WAIT))
+    ref.ingest(data)
+    svc.ingest(data)
+    qs = [_data(n, seed=10 + n) + 0.01 for n in (1, 3, 7, 2, 5)]
+    # mixed (c, r) and top-k requests coalesce into the same ticks
+    expect = [ref.query(qs[0]), ref.query_topk(qs[1]), ref.query(qs[2]),
+              ref.query_topk(qs[3]), ref.query(qs[4])]
+    got = _run_threads([
+        lambda: svc.query(qs[0]), lambda: svc.query_topk(qs[1]),
+        lambda: svc.query(qs[2]), lambda: svc.query_topk(qs[3]),
+        lambda: svc.query(qs[4])])
+    for e, g in zip(expect, got):
+        assert _trees_equal(e, g)
+    st = svc.batcher.stats()
+    assert st["queries"] == 5 and st["ticks"] < 5, st  # real coalescing
+    svc.close(); ref.close()
+
+
+def test_kde_and_race_coalesced_bit_identical():
+    data = _data(seed=1)
+    for make_ref, make_b in (
+            (lambda: KDEService(KDEServiceConfig(**_KDE_KW)),
+             lambda: KDEService(KDEServiceConfig(**_KDE_KW, **_WAIT))),
+            (lambda: RACEService(RACEServiceConfig(**_RACE_KW)),
+             lambda: RACEService(RACEServiceConfig(**_RACE_KW, **_WAIT)))):
+        ref, svc = make_ref(), make_b()
+        ref.ingest(data)
+        svc.ingest(data)
+        qs = [_data(n, seed=20 + n) for n in (2, 9, 1, 4)]
+        # mixed raw-KDE and normalised-density kinds in one tick
+        expect = [ref.query(qs[0]), ref.query(qs[1]),
+                  _norm(ref, qs[2]), _norm(ref, qs[3])]
+        got = _run_threads([
+            lambda: svc.query(qs[0]), lambda: svc.query(qs[1]),
+            lambda: _norm(svc, qs[2]), lambda: _norm(svc, qs[3])])
+        for e, g in zip(expect, got):
+            np.testing.assert_array_equal(np.asarray(e), np.asarray(g))
+        assert svc.batcher.stats()["ticks"] < 4
+        svc.close(); ref.close()
+
+
+def _norm(svc, qs):
+    return svc.density(qs) if hasattr(svc, "density") else svc.kde(qs)
+
+
+def test_coalesced_remainder_and_padding_paths():
+    """Coalesced totals that are not a multiple of query_block pad to the
+    bucketed size (pow2 below the block, block multiples above); with
+    query_block=3 a 1+3+2=6-row tick spans two blocks and a 1+1-row tick
+    hits the pow2 pad — all bit-identical to unbatched calls."""
+    kw = dict(_RETR_KW, query_block=3)
+    data = _data(seed=2)
+    ref = RetrievalService(RetrievalConfig(**kw))
+    svc = RetrievalService(RetrievalConfig(**kw, **_WAIT))
+    ref.ingest(data)
+    svc.ingest(data)
+    for sizes in ((1, 3, 2), (1, 1), (4, 5)):
+        qs = [_data(n, seed=30 + n) + 0.01 for n in sizes]
+        expect = [ref.query(q) for q in qs]
+        got = _run_threads([lambda q=q: svc.query(q) for q in qs])
+        for e, g in zip(expect, got):
+            assert _trees_equal(e, g)
+    svc.close(); ref.close()
+
+
+def test_submit_query_futures_and_empty_batch():
+    """submit_query works without batch_queries (async entry point is
+    always on); B=0 requests resolve to the matching empty result and
+    never force a fused tick."""
+    data = _data(seed=3)
+    svc = RetrievalService(RetrievalConfig(**_RETR_KW))
+    svc.ingest(data)
+    fut = svc.submit_query(data[:4] + 0.01)
+    res = fut.result(timeout=30)
+    assert _trees_equal(res, svc.query(data[:4] + 0.01))
+    empty = svc.submit_query(np.zeros((0, 8), np.float32)).result(timeout=30)
+    assert np.asarray(empty.index).shape == (0,)
+    with pytest.raises(ValueError, match="unknown query kind"):
+        svc.submit_query(data[:1], kind="nope")
+    svc.close()
+
+
+# ---------------------------------------------------------------------------
+# Snapshot consistency under churn
+# ---------------------------------------------------------------------------
+
+def test_coalesced_queries_see_one_committed_prefix_under_churn():
+    """Concurrent clients coalesced while a background ingest commits:
+    every answer equals the unbatched answer after SOME committed prefix
+    (never a torn state), and raw-KDE + density requests coalesced into
+    one tick read the SAME snapshot (density == kde / prefix clock for
+    one consistent prefix)."""
+    from repro.core import swakde
+    data = _data(n=400, seed=4)
+    qs = data[:5] + 0.01
+    # 2 concurrent 5-row clients per round: max_batch=10 fires the tick the
+    # moment both have enqueued; the 2 ms budget bounds rounds where the
+    # second client straggles in after the first tick fired.
+    svc = KDEService(KDEServiceConfig(**_KDE_KW, batch_queries=True,
+                                      max_batch=10, max_wait_us=2000.0))
+    chunk = svc.cfg.ingest_chunk
+
+    st = swakde.swakde_init(svc.sketch_cfg)
+    prefix_res = [np.asarray(swakde.swakde_query_batch(
+        st, svc.params, jnp.asarray(qs), svc.sketch_cfg))]
+    for i in range(0, 400, chunk):
+        st = swakde.swakde_update_chunk(st, svc.params,
+                                        jnp.asarray(data[i:i + chunk]),
+                                        svc.sketch_cfg)
+        prefix_res.append(np.asarray(swakde.swakde_query_batch(
+            st, svc.params, jnp.asarray(qs), svc.sketch_cfg)))
+    denoms = [max(min(k * chunk, svc.cfg.window), 1)
+              for k in range(len(prefix_res))]
+
+    svc.ingest_async(data)
+    done = False
+    for _ in range(3_000):
+        out, dens = _run_threads([lambda: svc.query(qs),
+                                  lambda: svc.density(qs)])
+        ks = [k for k, r in enumerate(prefix_res) if np.array_equal(out, r)]
+        assert ks, "torn state through the batcher"
+        kd = [k for k, r in enumerate(prefix_res)
+              if np.array_equal(dens, r / denoms[k])]
+        assert kd, "density saw no single committed prefix"
+        if svc.version == len(prefix_res) - 1:
+            done = True
+            break
+    assert done, "background ingest never finished"
+    svc.flush()
+    np.testing.assert_array_equal(svc.query(qs), prefix_res[-1])
+    svc.close()
+
+
+def test_grid_cache_shared_per_tick_and_never_stale():
+    """One grid computation serves a whole coalesced tick; a commit between
+    ticks invalidates it (version-keyed) so a coalesced batch can never
+    read a stale grid."""
+    data = _data(n=300, seed=5)
+    qs = data[:4] + 0.01
+    svc = KDEService(KDEServiceConfig(**_KDE_KW, **_WAIT))
+    calls = []
+    orig = svc._grid_fn
+    svc._grid_fn = lambda st: (calls.append(1), orig(st))[1]
+
+    svc.ingest(data[:200])
+    _run_threads([lambda: svc.query(qs)] * 4)    # one tick, 4 clients
+    assert len(calls) == 1, "grid recomputed within one coalesced tick"
+    svc.ingest(data[200:])                       # commit → version bump
+    out = _run_threads([lambda: svc.query(qs)] * 3)
+    assert len(calls) == 2, "stale grid served to a post-commit tick"
+    ref = KDEService(KDEServiceConfig(**_KDE_KW))
+    ref.ingest(data)
+    for o in out:
+        np.testing.assert_array_equal(o, ref.query(qs))
+    svc.close(); ref.close()
+
+
+# ---------------------------------------------------------------------------
+# Scheduler properties: seeded-rng fuzz of batch_plan in a simulated loop
+# ---------------------------------------------------------------------------
+
+def _simulate(arrivals, sizes, max_batch, max_wait_us, exec_us):
+    """Deterministic event-loop replay of the QueryBatcher tick loop over
+    an offline arrival trace: returns per-request (dispatch_time, tick_id)
+    plus per-tick records (dispatch_time, oldest_arrival, executor_free_at,
+    rows).  Time only advances to the next arrival, the planned deadline,
+    or the executor becoming free — exactly the points the real loop wakes
+    at."""
+    pending, dispatched, ticks = [], {}, []
+    i, now, free_at = 0, 0.0, 0.0
+    n = len(arrivals)
+    while len(dispatched) < n:
+        while i < n and arrivals[i] <= now:
+            pending.append((arrivals[i], i))
+            i += 1
+        if not pending:
+            now = arrivals[i]
+            continue
+        if now < free_at:            # executor busy: requests keep queueing
+            now = min(free_at, arrivals[i]) if i < n else free_at
+            continue
+        take, wait = batch_plan([(a, sizes[j]) for a, j in pending], now,
+                                max_batch, max_wait_us)
+        if take == 0:
+            nxt = now + wait
+            if i < n and arrivals[i] < nxt:
+                now = arrivals[i]
+            else:
+                now = nxt
+            continue
+        batch, pending = pending[:take], pending[take:]
+        ticks.append((now, batch[0][0], free_at,
+                      sum(sizes[j] for _, j in batch)))
+        for _, j in batch:
+            dispatched[j] = (now, len(ticks) - 1)
+        free_at = now + exec_us
+    return dispatched, ticks
+
+
+def test_batch_plan_fuzz_deadline_cap_and_fifo():
+    """Seeded-rng fuzz over Poisson-ish arrival traces:
+
+      (a) no late dispatch: every tick fires by the time its oldest
+          request's max_wait_us budget expires or the executor frees up,
+          whichever is later — the scheduler never sleeps past a deadline
+          while the executor is idle (no starvation);
+      (b) with an instantaneous executor the per-request delay is bounded
+          by max_wait_us outright;
+      (c) no tick exceeds max_batch rows unless a single oversized
+          request is alone responsible;
+      (d) dispatch order is FIFO (a request never overtakes an earlier
+          one), with B=0 requests admitted like any other (riding along,
+          adding no rows)."""
+    rng = np.random.default_rng(1234)
+    for trial in range(40):
+        n = int(rng.integers(1, 40))
+        gaps = rng.exponential(rng.choice([20.0, 200.0, 2000.0]), n)
+        arrivals = np.cumsum(gaps)
+        sizes = rng.integers(0, 12, n).tolist()
+        if rng.random() < 0.3:       # occasional oversized request
+            sizes[int(rng.integers(n))] = 64
+        max_batch = int(rng.integers(1, 33))
+        max_wait = float(rng.choice([0.0, 50.0, 500.0]))
+        exec_us = float(rng.choice([0.0, 100.0, 1000.0]))
+        disp, ticks = _simulate(arrivals, sizes, max_batch, max_wait,
+                                exec_us)
+        assert len(disp) == n
+        for t, oldest, free_at, rows in ticks:
+            assert t <= max(oldest + max_wait, free_at) + 1e-6, (
+                f"trial {trial}: tick at {t:.0f} slept past deadline "
+                f"{oldest + max_wait:.0f} with executor free at "
+                f"{free_at:.0f}")
+            assert rows <= max(max_batch, max(sizes)), (
+                f"trial {trial}: tick of {rows} rows > max_batch "
+                f"{max_batch}")
+        for j in range(n):
+            if exec_us == 0.0:
+                assert disp[j][0] <= arrivals[j] + max_wait + 1e-6, (
+                    f"trial {trial}: request {j} waited "
+                    f"{disp[j][0] - arrivals[j]:.0f}us > budget")
+            if j:                    # FIFO: ticks are non-decreasing in j
+                assert disp[j][1] >= disp[j - 1][1]
+
+
+def test_batch_plan_unit_properties():
+    # fires at the row cap, not before
+    assert batch_plan([(0.0, 4), (1.0, 4)], 2.0, 8, 100.0)[0] == 2
+    # row-capped prefix fires immediately (waiting adds no rows)
+    take, _ = batch_plan([(0.0, 6), (1.0, 6)], 2.0, 8, 100.0)
+    assert take == 1
+    # under the cap and inside the budget: wait exactly the remainder
+    take, wait = batch_plan([(10.0, 1)], 60.0, 8, 100.0)
+    assert take == 0 and wait == pytest.approx(50.0)
+    # deadline comes only from the OLDEST request — later arrivals never
+    # push it out
+    take, wait = batch_plan([(10.0, 1), (99.0, 1)], 60.0, 8, 100.0)
+    assert take == 0 and wait == pytest.approx(50.0)
+    assert batch_plan([(10.0, 1), (99.0, 1)], 111.0, 8, 100.0)[0] == 2
+    # a lone oversized request is admitted (one-request progress)
+    assert batch_plan([(0.0, 99)], 0.0, 8, 100.0)[0] == 1
+    # zero-row requests coalesce without contributing rows
+    assert batch_plan([(0.0, 0), (0.0, 8)], 0.0, 8, 100.0)[0] == 2
+
+
+def test_slow_query_delays_by_at_most_one_execute():
+    """A slow in-flight tick never blocks later arrivals indefinitely:
+    they form the next tick and complete right after it."""
+    gate = threading.Event()
+    order = []
+
+    def execute(reqs):
+        order.append([k for k, _ in reqs])
+        if order and order[0][0] == "slow" and len(order) == 1:
+            gate.wait(timeout=30)
+        return [r.shape[0] for _, r in reqs]
+
+    b = QueryBatcher(execute, max_batch=8, max_wait_us=0.0)
+    f_slow = b.submit("slow", np.zeros((1, 2), np.float32))
+    time.sleep(0.05)                 # let the slow tick enter execute
+    f_fast = b.submit("fast", np.zeros((2, 2), np.float32))
+    assert not f_fast.done()         # queued behind exactly one execute
+    gate.set()
+    assert f_slow.result(timeout=30) == 1
+    assert f_fast.result(timeout=30) == 2
+    assert order[0] == ["slow"] and "fast" in order[1]
+    b.close()
+
+
+# ---------------------------------------------------------------------------
+# Lifecycle: close() drains or fails, never hangs
+# ---------------------------------------------------------------------------
+
+def test_batcher_close_drains_pending_futures():
+    gate = threading.Event()
+
+    def execute(reqs):
+        gate.wait(timeout=30)
+        return [r.shape[0] for _, r in reqs]
+
+    b = QueryBatcher(execute, max_batch=4, max_wait_us=1e6)
+    futs = [b.submit("q", np.zeros((1, 2), np.float32)) for _ in range(3)]
+    gate.set()
+    b.close()                        # drain=True: queue served, then join
+    assert [f.result(timeout=1) for f in futs] == [1, 1, 1]
+    with pytest.raises(RuntimeError, match="closed"):
+        b.submit("q", np.zeros((1, 2), np.float32))
+    b.close()                        # idempotent
+
+
+def test_batcher_close_no_drain_fails_futures():
+    gate = threading.Event()
+
+    def execute(reqs):
+        gate.wait(timeout=30)
+        return [r.shape[0] for _, r in reqs]
+
+    b = QueryBatcher(execute, max_batch=1, max_wait_us=1e6)
+    first = b.submit("q", np.zeros((1, 2), np.float32))
+    time.sleep(0.05)                 # in-flight tick holds the executor
+    queued = [b.submit("q", np.zeros((1, 2), np.float32)) for _ in range(3)]
+    t = threading.Thread(target=b.close, kwargs=dict(drain=False))
+    t.start()
+    gate.set()
+    t.join(timeout=30)
+    assert not t.is_alive(), "close(drain=False) hung"
+    assert first.result(timeout=1) == 1          # in-flight still completes
+    for f in queued:
+        with pytest.raises(RuntimeError, match="closed before serving"):
+            f.result(timeout=1)
+
+
+def test_execute_failure_fails_the_whole_tick_then_recovers():
+    boom = {"on": True}
+
+    def execute(reqs):
+        if boom["on"]:
+            raise ValueError("scorer exploded")
+        return [r.shape[0] for _, r in reqs]
+
+    b = QueryBatcher(execute, max_batch=8, max_wait_us=0.0)
+    f = b.submit("q", np.zeros((1, 2), np.float32))
+    with pytest.raises(ValueError, match="scorer exploded"):
+        f.result(timeout=30)
+    boom["on"] = False               # scheduler thread survived the error
+    assert b.submit("q", np.zeros((2, 2), np.float32)).result(timeout=30) == 2
+    b.close()
+
+
+def test_engine_close_keeps_sync_queries_on_direct_path():
+    data = _data(n=120, seed=6)
+    svc = RACEService(RACEServiceConfig(**_RACE_KW, **_WAIT))
+    svc.ingest(data)
+    batched = _run_threads([lambda: svc.query(data[:3])] * 2)
+    svc.close()
+    after = svc.query(data[:3])      # direct path, no scheduler
+    np.testing.assert_array_equal(np.asarray(batched[0]), np.asarray(after))
+    with pytest.raises(RuntimeError):
+        svc.submit_query(data[:3])
+
+
+# ---------------------------------------------------------------------------
+# Cluster: one merged snapshot per coalesced tick
+# ---------------------------------------------------------------------------
+
+def test_cluster_one_merge_per_tick_not_per_client():
+    """The coordinator's query-time merge is the expensive step; with the
+    batcher, C concurrent clients cost ONE merged snapshot per tick, so
+    query cost does not scale with client count."""
+    kw = dict(dim=8, L=4, W=32, window=100_000, ingest_chunk=64, seed=5)
+    data = _data(n=360, seed=7)
+    svc = ClusterKDEService(
+        KDEServiceConfig(**kw, **_WAIT), num_workers=2, merge_every=4)
+    ref = ClusterKDEService(KDEServiceConfig(**kw), num_workers=2,
+                            merge_every=4)
+    svc.ingest(data)
+    ref.ingest(data)
+
+    snaps = []
+    orig = svc.merged_snapshot
+    svc.merged_snapshot = lambda: (snaps.append(1), orig())[1]
+    qs = [_data(n, seed=40 + n) for n in (2, 5, 1, 3, 4, 2)]
+    got = _run_threads([lambda q=q: svc.query(q) for q in qs])
+    for q, g in zip(qs, got):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(ref.query(q)))
+    st = svc.batcher.stats()
+    assert st["queries"] == len(qs)
+    assert len(snaps) == st["ticks"] < len(qs), (
+        f"{len(snaps)} merged snapshots for {st['ticks']} ticks / "
+        f"{len(qs)} clients")
+    svc.close(); ref.close()
