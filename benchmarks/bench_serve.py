@@ -77,7 +77,9 @@ def _stats_delta(svc, before: dict) -> dict:
     ticks = after["ticks"] - before.get("ticks", 0)
     queries = after["queries"] - before.get("queries", 0)
     return {"ticks": ticks,
-            "mean_batch_queries": queries / max(ticks, 1)}
+            "mean_batch_queries": queries / max(ticks, 1),
+            "inline_ticks": (after.get("inline_ticks", 0)
+                             - before.get("inline_ticks", 0))}
 
 
 def _warm(svc, dim: int) -> None:

@@ -18,7 +18,8 @@ from __future__ import annotations
 
 import dataclasses
 
-from . import snapshot, wal  # noqa: F401
+from . import faults, snapshot, wal  # noqa: F401
+from .faults import FaultError, FaultPlan, FaultSpec, InjectedIOError  # noqa: F401
 from .wal import KIND_CHUNK, KIND_DELETE, WALRecord, WriteAheadLog  # noqa: F401
 
 
@@ -34,11 +35,15 @@ class DurabilityConfig:
     durability; also applied to snapshots, which license WAL compaction).
     ``keep_snapshots`` — completed snapshots retained after compaction
     (min 1: the newest snapshot is what recovery starts from once its WAL
-    records are compacted away)."""
+    records are compacted away).  ``fault_scope`` — prefix for this
+    engine's fault-injection site names (`repro.persist.faults`); the
+    cluster coordinator sets ``worker_<w>/`` so a `FaultPlan` can target
+    one worker deterministically."""
     dir: str
     snapshot_every: int = 64
     fsync: bool = False
     keep_snapshots: int = 2
+    fault_scope: str = ""
 
     def __post_init__(self):
         if self.snapshot_every < 1:

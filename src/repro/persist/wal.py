@@ -35,11 +35,12 @@ import pathlib
 import struct
 import threading
 import zlib
-from typing import Iterable, NamedTuple, Optional
+from typing import Iterable, Iterator, NamedTuple, Optional
 
 import numpy as np
 
 from repro.checkpoint.checkpoint import fsync_path
+from repro.persist import faults
 
 _MAGIC = 0x53574C31  # "SWL1"
 _HEADER = struct.Struct("<IQBII")
@@ -75,10 +76,12 @@ class WriteAheadLog:
     the WAL lock makes maintenance callable from the commit worker too).
     """
 
-    def __init__(self, root: str | os.PathLike, fsync: bool = False):
+    def __init__(self, root: str | os.PathLike, fsync: bool = False,
+                 fault_scope: str = ""):
         self.root = pathlib.Path(root)
         self.root.mkdir(parents=True, exist_ok=True)
         self._fsync = bool(fsync)
+        self._fault_scope = fault_scope
         self._lock = threading.Lock()
         self._segments = sorted(self.root.glob("wal_*.log"))
         # max record seq per segment — learned from appends and/or replay;
@@ -111,7 +114,24 @@ class WriteAheadLog:
         with self._lock:
             self._open_active()
             active = self._segments[-1]
-            for seq, kind, arrays in records:
+            recs = list(records)
+
+            def _tear():
+                # Death mid-write: a valid header followed by a truncated
+                # body — replay must stop here and `truncate_torn_tail`
+                # must drop exactly these bytes.
+                if recs:
+                    seq, kind, arrays = recs[0]
+                    body = _encode_body(arrays)
+                    self._fh.write(_HEADER.pack(_MAGIC, seq, kind,
+                                                len(body), zlib.crc32(body)))
+                    self._fh.write(body[: max(len(body) // 2, 1)])
+                    self._fh.flush()
+
+            # Fires before any full record lands: an injected crash here
+            # models process death just before the record is durable.
+            faults.fire(self._fault_scope + "wal.append", tear=_tear)
+            for seq, kind, arrays in recs:
                 body = _encode_body(arrays)
                 self._fh.write(_HEADER.pack(_MAGIC, seq, kind, len(body),
                                             zlib.crc32(body)))
@@ -128,6 +148,7 @@ class WriteAheadLog:
         """Seal the active segment; the next append opens a fresh one.  The
         engine rotates at every snapshot so `compact` can delete whole
         segments once a later snapshot covers them."""
+        faults.fire(self._fault_scope + "wal.rotate")
         with self._lock:
             if self._fh is not None:
                 self._fh.close()
@@ -143,6 +164,7 @@ class WriteAheadLog:
         """Delete sealed segments whose every record has seq <= ``upto``
         (i.e. is covered by a durable snapshot).  The active segment is
         never deleted.  Returns the number of segments removed."""
+        faults.fire(self._fault_scope + "wal.compact")
         removed = 0
         with self._lock:
             for p in list(self._segments[:-1]):
@@ -159,39 +181,55 @@ class WriteAheadLog:
     def has_records(self) -> bool:
         return any(p.exists() and p.stat().st_size > 0 for p in self._segments)
 
-    def replay(self, after: int = -1) -> list[WALRecord]:
-        """Decode every intact record with ``seq > after``, in seq order.
+    def iter_replay(self, after: int = -1) -> Iterator[WALRecord]:
+        """Stream every intact record with ``seq > after``, in seq order,
+        decoding one record at a time — replaying a long tail holds one
+        record in host memory, not the whole log (`replay` keeps the
+        list-returning form for small logs and tests).
 
         Stops at the first torn/corrupt record (remembered for
         `truncate_torn_tail`); segments behind a torn one are unreachable
-        by construction (seqs are append-ordered across segments)."""
-        out: list[WALRecord] = []
+        by construction (seqs are append-ordered across segments).
+
+        The WAL lock is held until the generator is exhausted or closed;
+        do not call other WAL methods mid-iteration (the engine's
+        `recover()` drains it in one pass, then truncates any torn tail).
+        """
         with self._lock:
             self._torn = None
             for p in self._segments:
                 if not p.exists():
                     continue
-                data = p.read_bytes()
-                off = 0
-                while True:
-                    if off + _HEADER.size > len(data):
-                        break
-                    magic, seq, kind, blen, crc = _HEADER.unpack_from(data, off)
-                    end = off + _HEADER.size + blen
-                    if magic != _MAGIC or end > len(data):
-                        break
-                    body = data[off + _HEADER.size:end]
-                    if zlib.crc32(body) != crc:
-                        break
-                    off = end
-                    self._seg_max[p] = int(seq)
-                    if seq > after:
-                        out.append(WALRecord(int(seq), int(kind),
-                                             _decode_body(body)))
-                if off < len(data):          # torn or corrupt tail
-                    self._torn = (p, off)
-                    break
-        return out
+                good = 0          # offset just past the last intact record
+                torn = False
+                with open(p, "rb") as f:
+                    while True:
+                        head = f.read(_HEADER.size)
+                        if not head:
+                            break                       # clean segment end
+                        if len(head) < _HEADER.size:
+                            torn = True
+                            break
+                        magic, seq, kind, blen, crc = _HEADER.unpack(head)
+                        if magic != _MAGIC:
+                            torn = True
+                            break
+                        body = f.read(blen)
+                        if len(body) < blen or zlib.crc32(body) != crc:
+                            torn = True
+                            break
+                        good += _HEADER.size + blen
+                        self._seg_max[p] = int(seq)
+                        if seq > after:
+                            yield WALRecord(int(seq), int(kind),
+                                            _decode_body(body))
+                if torn:
+                    self._torn = (p, good)
+                    return
+
+    def replay(self, after: int = -1) -> list[WALRecord]:
+        """Materialized form of `iter_replay` (every record in one list)."""
+        return list(self.iter_replay(after))
 
     def truncate_torn_tail(self) -> None:
         """Drop the garbage bytes found by the last `replay` (and any

@@ -54,14 +54,17 @@ import functools
 import json
 import pathlib
 import threading
+import time
 from typing import Callable, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import persist
 from repro.core import race, sann, swakde
 from repro.parallel import sketch_sharding as ss
+from repro.persist import faults
 from repro.serve.engine import SketchEngine, _BatchedQueryMixin
 from repro.serve.kde_service import KDEService, KDEServiceConfig
 from repro.serve.race_service import RACEService, RACEServiceConfig
@@ -72,18 +75,11 @@ _MIX1 = np.uint64(0xFF51AFD7ED558CCD)
 _MIX2 = np.uint64(0xC4CEB9FE1A85EC53)
 
 
-def hash_partition(xs: np.ndarray, num_workers: int) -> np.ndarray:
-    """Deterministic content-hash worker assignment: ``xs (B, d) float32``
-    → worker ids ``(B,) int64`` in [0, num_workers).
-
-    Hashes the raw float32 bit patterns (splitmix64-style mix over a
-    per-dimension-weighted sum), so the partition is a pure function of the
-    row's bytes — stable across runs, processes and recovery replays, and
-    independent of arrival order (the property the S-ANN "union of samples"
-    merge argument needs: each point's owner is fixed, so substreams are
-    disjoint)."""
-    if num_workers <= 1:
-        return np.zeros(len(xs), np.int64)
+def _mix_u64(xs: np.ndarray) -> np.ndarray:
+    """splitmix64-style content hash of each row's raw float32 bit
+    patterns: ``xs (B, d) float32`` → ``(B,) uint64``.  A pure function of
+    the row's bytes — stable across runs, processes and recovery replays,
+    and independent of arrival order."""
     b = np.ascontiguousarray(np.asarray(xs, np.float32)).view(np.uint32)
     with np.errstate(over="ignore"):
         w = (_MIX0 * (np.arange(b.shape[1], dtype=np.uint64) * np.uint64(2)
@@ -94,7 +90,68 @@ def hash_partition(xs: np.ndarray, num_workers: int) -> np.ndarray:
         h ^= h >> np.uint64(33)
         h *= _MIX2
         h ^= h >> np.uint64(33)
-    return (h % np.uint64(num_workers)).astype(np.int64)
+    return h
+
+
+def hash_partition(xs: np.ndarray, num_workers: int) -> np.ndarray:
+    """Deterministic content-hash worker assignment: ``xs (B, d) float32``
+    → worker ids ``(B,) int64`` in [0, num_workers).
+
+    The partition is a pure function of the row's bytes (`_mix_u64`) —
+    the property the S-ANN "union of samples" merge argument needs: each
+    point's owner is fixed, so substreams are disjoint."""
+    if num_workers <= 1:
+        return np.zeros(len(xs), np.int64)
+    return (_mix_u64(xs) % np.uint64(num_workers)).astype(np.int64)
+
+
+@dataclasses.dataclass(frozen=True)
+class FailoverConfig:
+    """Worker-failover policy for a `ClusterService` (DESIGN.md §14).
+
+    ``on_degraded`` — query behaviour while any worker is DEAD:
+      * ``"fail"``    raise `ClusterDegradedError` (loud, strict);
+      * ``"block"``   wait up to ``block_deadline_s`` for the cluster's
+        data to be whole again (poisoned workers recovered, every dead
+        worker's WAL tail fully re-partitioned), then serve — or raise at
+        the deadline;
+      * ``"partial"`` serve the live subset, with coverage metadata
+        (``worker_coverage < 1``) on every answer.
+
+    ``max_retries``/``backoff_s`` — in-place retries with exponential
+    backoff for *transient* faults (`faults.is_transient`), and the
+    rebuild-and-`recover()` attempt budget for a poisoned worker.
+    ``repartition`` — when a worker is unrecoverable, re-ingest its
+    replayable WAL tail into the surviving workers through the normal
+    content-hash route (exact for every sketch via the merge algebra;
+    §14 has the per-sketch argument).  Passing ``failover=None`` to the
+    cluster keeps the legacy fail-stop semantics: the first worker error
+    propagates and queries keep re-raising until an operator intervenes.
+    """
+    on_degraded: str = "fail"        # "fail" | "block" | "partial"
+    block_deadline_s: float = 10.0
+    max_retries: int = 3
+    backoff_s: float = 0.01
+    repartition: bool = True
+
+    def __post_init__(self):
+        if self.on_degraded not in ("fail", "block", "partial"):
+            raise ValueError(f"on_degraded={self.on_degraded!r}")
+        if self.max_retries < 0 or self.backoff_s < 0:
+            raise ValueError("max_retries/backoff_s must be >= 0")
+
+
+class ClusterDegradedError(RuntimeError):
+    """Raised by queries under the ``fail``/``block`` degraded policies
+    while the cluster cannot answer from complete data.  Carries the dead
+    worker ids (``.dead``) and whether each one's WAL tail was fully
+    re-partitioned (``.salvaged``)."""
+
+    def __init__(self, msg: str, dead: Sequence[int] = (),
+                 salvaged: Sequence[int] = ()):
+        super().__init__(msg)
+        self.dead = sorted(dead)
+        self.salvaged = sorted(salvaged)
 
 
 class ClusterService(_BatchedQueryMixin):
@@ -110,17 +167,21 @@ class ClusterService(_BatchedQueryMixin):
     merged snapshot (and, when stale, one tail merge) serves the whole
     coalesced batch instead of one per client query."""
 
+    _query_fault_site = "cluster.query"
+
     def __init__(self, make_worker: Callable[[int], SketchEngine],
                  num_workers: int, merge_every: int,
                  merge_states: Callable[[Sequence], object],
                  snapshot_dir: Optional[str] = None,
                  batch_queries: bool = False,
                  max_batch: Optional[int] = None,
-                 max_wait_us: float = 200.0):
+                 max_wait_us: float = 200.0,
+                 failover: Optional[FailoverConfig] = None):
         if num_workers < 1:
             raise ValueError(f"num_workers={num_workers}")
         if snapshot_dir is not None:
             self._check_cluster_dir(snapshot_dir, num_workers)
+        self._make_worker = make_worker
         self.workers: List[SketchEngine] = [make_worker(w)
                                             for w in range(num_workers)]
         self._merge_every = max(1, int(merge_every))
@@ -129,7 +190,38 @@ class ClusterService(_BatchedQueryMixin):
         self._merged = None
         self._merged_versions: Optional[tuple] = None
         self._merged_meta: Optional[dict] = None
+        self._merged_epoch = 0
         self._last_merge_total = 0
+        # Failover (DESIGN §14).  _flock orders failure handling; it is
+        # reentrant because salvage re-ingests through ingest_async, which
+        # may itself hit (and handle) another worker's failure.  Lock
+        # order: _flock before _mlock, never the reverse.
+        self._failover = failover
+        self._flock = threading.RLock()
+        self._health: List[str] = ["live"] * num_workers
+        self._dead: set = set()
+        self._salvaged: set = set()      # dead workers whose full WAL tail
+        #                                  was re-partitioned (no data lost)
+        # Per-dead-worker salvage checkpoint: last WAL seq durably handed
+        # to the survivors — a coordinator crash mid-salvage resumes past
+        # this prefix instead of re-ingesting the whole log.
+        self._salvage_progress: dict = {}
+        self._epoch = 0                  # partition epoch: bumps per death
+        self._counters = {"retries": 0, "recoveries": 0,
+                          "repartitions": 0, "salvaged_records": 0,
+                          "salvaged_rows": 0}
+        self._meta_path = (None if snapshot_dir is None
+                           else pathlib.Path(snapshot_dir) / "cluster.json")
+        if self._meta_path is not None and self._meta_path.exists():
+            saved = json.loads(self._meta_path.read_text())
+            self._dead = set(saved.get("dead_workers", []))
+            self._salvaged = set(saved.get("salvage_complete", []))
+            self._salvage_progress = {
+                int(k): int(v)
+                for k, v in saved.get("salvage_progress", {}).items()}
+            self._epoch = int(saved.get("epoch", 0))
+            for w in self._dead:
+                self._health[w] = "dead"
         self._init_query_batching(
             batch_queries, max_batch, max_wait_us,
             default_max_batch=self.workers[0]._query_block)
@@ -195,101 +287,528 @@ class ClusterService(_BatchedQueryMixin):
         xs = np.asarray(data, np.float32)
         if xs.shape[0] == 0:
             return
-        pid = hash_partition(xs, len(self.workers))
-        parts = [xs[pid == w] for w in range(len(self.workers))]
-        offs = [0] * len(self.workers)
+        pid = self._partition(xs)
+        n = len(self.workers)
+        parts = [xs[pid == w] for w in range(n)]
+        offs = [0] * n
         pending = True
         while pending:
             pending = False
-            for w, worker in enumerate(self.workers):
-                if offs[w] < parts[w].shape[0]:
-                    chunk = worker._chunk
-                    worker.ingest_async(parts[w][offs[w]:offs[w] + chunk])
-                    offs[w] += chunk
-                    pending = pending or offs[w] < parts[w].shape[0]
+            for w in range(n):
+                if offs[w] >= parts[w].shape[0]:
+                    continue
+                worker = self.workers[w]
+                chunk = parts[w][offs[w]:offs[w] + worker._chunk]
+                try:
+                    self._with_retries(
+                        w, lambda w=w, c=chunk: self.workers[w]
+                        .ingest_async(c))
+                except BaseException as e:
+                    if self._failover is None:
+                        raise
+                    if self._handle_worker_failure(w, e):
+                        # Recovered bit-identically: the failed chunk was
+                        # rejected (an ingest_async raise never accepts the
+                        # submitted chunk), so resubmitting it — and only
+                        # it — is exact.
+                        pending = True
+                        continue
+                    # Unrecoverable: the worker's accepted tail was
+                    # re-partitioned by _declare_dead; its unsubmitted
+                    # substream (this chunk included) re-routes to the
+                    # survivors through the normal dead-aware hash path.
+                    rest = parts[w][offs[w]:]
+                    offs[w] = parts[w].shape[0]
+                    if rest.shape[0]:
+                        self.ingest_async(rest)
+                    continue
+                offs[w] += chunk.shape[0]
+                pending = pending or offs[w] < parts[w].shape[0]
         self._maybe_merge()
 
     def flush(self) -> None:
         """Wait for every worker's queued chunks to commit (re-raising any
-        worker's background failure), then apply the merge cadence."""
-        for w in self.workers:
-            w.flush()
+        worker's background failure), then apply the merge cadence.
+
+        With failover: a worker whose background commit failed poisoned
+        itself with the failing chunk already WAL-logged (accepted), so
+        the handler recovers it in place — the replay re-commits the
+        chunk, nothing is resubmitted, nothing is lost."""
+        for w in range(len(self.workers)):
+            if w in self._dead:
+                continue
+            try:
+                self.workers[w].flush()
+            except BaseException as e:
+                if self._failover is None:
+                    raise
+                self._handle_worker_failure(w, e)
         self._maybe_merge()
 
     def close(self) -> None:
-        """Drain the coordinator's query batcher, then close every worker;
-        the first failure is re-raised *after* the remaining workers have
-        still been closed (no leaked WAL handles or threads behind an
-        early error)."""
+        """Drain the coordinator's query batcher, then close every worker.
+        Every worker is closed even when some fail (no leaked WAL handles
+        or threads behind an early error); all failures are aggregated
+        into ONE exception naming the failed workers (`__cause__` = the
+        first).  Idempotent: a retry after a partial failure re-closes
+        only what is still open (worker close is itself idempotent)."""
         self._close_batcher()
-        first: Optional[BaseException] = None
-        for w in self.workers:
+        errs: List[tuple] = []
+        for w, worker in enumerate(self.workers):
             try:
-                w.close()
+                worker.close()
             except BaseException as e:
-                first = first or e
-        if first is not None:
-            raise first
+                errs.append((w, e))
+        if errs:
+            names = ", ".join(f"worker_{w}" for w, _ in errs)
+            err = RuntimeError(
+                f"cluster close failed on {len(errs)} worker(s) [{names}]: "
+                + "; ".join(f"worker_{w}: {e!r}" for w, e in errs))
+            raise err from errs[0][1]
 
     def recover(self) -> int:
-        """Recover every worker from its durability directory (snapshot +
-        WAL replay, bit-identical per worker) and rebuild the merged view.
-        Returns the total number of WAL records replayed."""
-        n = sum(w.recover() for w in self.workers)
+        """Recover every live worker from its durability directory
+        (snapshot + WAL replay, bit-identical per worker) and rebuild the
+        merged view.  Workers marked dead in ``cluster.json`` (their WAL
+        tails were re-partitioned to the survivors in a previous run) are
+        skipped — their salvaged data replays from the survivors' logs.
+        A salvage a previous coordinator crash left unfinished is resumed
+        from its checkpointed prefix (`_resume_salvage`).  Returns the
+        total number of WAL records replayed."""
+        n = sum(self.workers[w].recover() for w in range(len(self.workers))
+                if w not in self._dead)
+        self._resume_salvage()
         self._refresh()
         return n
+
+    def _resume_salvage(self) -> None:
+        """Finish any re-partition a previous coordinator crash left
+        incomplete: a worker that is DEAD but not salvage-complete still
+        has replayable WAL records the survivors never received.  The
+        resumed salvage skips everything up to the checkpointed progress
+        seq (already durable in the survivors' logs), so at most one
+        in-flight hand-off batch is re-ingested.  A worker whose log
+        genuinely cannot reach back to seq 0 (compacted prefix) re-checks
+        as incomplete without re-ingesting anything."""
+        fo = self._failover
+        if fo is None or not fo.repartition or self._meta_path is None:
+            return
+        with self._flock:
+            for w in sorted(self._dead - self._salvaged):
+                try:
+                    complete = self._salvage(w)
+                except BaseException:
+                    complete = False     # still partial: DEAD, resumable
+                if complete:
+                    self._salvaged.add(w)
+                    self._salvage_progress.pop(w, None)
+                self._persist_meta()
+
+    # --- failover (DESIGN.md §14) -------------------------------------------
+
+    def _partition(self, xs: np.ndarray) -> np.ndarray:
+        """Dead-aware content-hash routing: owner = hash % N as ever; rows
+        owned by a dead worker re-route to a live worker picked by an
+        independent slice of the same hash — a pure function of (row
+        bytes, dead set), so re-routing is identical across retries,
+        processes and salvage replays.  The dead set is pinned (with its
+        partition epoch) in ``cluster.json``."""
+        n = len(self.workers)
+        if n == 1:
+            if 0 in self._dead:
+                raise ClusterDegradedError("no live workers", dead=[0],
+                                           salvaged=self._salvaged)
+            return np.zeros(len(xs), np.int64)
+        h = _mix_u64(xs)
+        pid = (h % np.uint64(n)).astype(np.int64)
+        if self._dead:
+            live = np.array([w for w in range(n) if w not in self._dead],
+                            np.int64)
+            if live.size == 0:
+                raise ClusterDegradedError(
+                    "no live workers", dead=sorted(self._dead),
+                    salvaged=self._salvaged)
+            mask = np.isin(pid, np.fromiter(self._dead, np.int64))
+            if mask.any():
+                pid[mask] = live[(h[mask] // np.uint64(n))
+                                 % np.uint64(live.size)]
+        return pid
+
+    def _with_retries(self, w: Optional[int], fn: Callable):
+        """Run a worker/coordinator op, retrying *transient* faults
+        (`faults.is_transient`) in place with exponential backoff; the
+        worker is DEGRADED while retrying and LIVE again on success.
+        Non-transient failures (and exhausted budgets) propagate to the
+        caller's failure handling.  Safe only for ops whose failure
+        rejects the attempted work (WAL appends, merges) — never for a
+        failed flush, whose chunk was already accepted."""
+        fo = self._failover
+        if fo is None:
+            return fn()
+        delay = fo.backoff_s
+        for attempt in range(fo.max_retries + 1):
+            try:
+                out = fn()
+                if w is not None and self._health[w] == "degraded":
+                    self._health[w] = "live"
+                return out
+            except BaseException as e:
+                if not faults.is_transient(e) or attempt == fo.max_retries:
+                    raise
+                if w is not None:
+                    self._health[w] = "degraded"
+                self._counters["retries"] += 1
+                time.sleep(delay)
+                delay *= 2
+
+    def _mutate_live(self, w: int, fn: Callable) -> None:
+        """Apply a mutation op to live worker ``w`` under failover:
+        transient faults retry in place; a hard failure recovers (or
+        kills) the worker.  The op is resubmitted after a recovery only
+        when it was *rejected* (never WAL-logged): the engine marks the
+        raised exception with ``wal_accepted=True`` iff THIS op's record
+        hit the log before the failure (`_durable_mutate`) — the worker's
+        poison *reason* is never consulted, because it can describe an
+        earlier op (e.g. a background commit failure) and would then
+        silently drop a rejected mutation.  An *accepted* op already
+        replayed from the log, and resubmitting would double-apply it
+        (RACE decrements are not idempotent)."""
+        try:
+            self._with_retries(w, fn)
+        except BaseException as e:
+            if self._failover is None:
+                raise
+            accepted = bool(getattr(e, "wal_accepted", False))
+            if self._handle_worker_failure(w, e) and not accepted:
+                fn()
+
+    def _handle_worker_failure(self, w: int, exc: BaseException) -> bool:
+        """Fail over worker ``w``: rebuild a fresh engine on its durability
+        directory and `recover()` (bit-identical: snapshot + accepted WAL
+        tail) with retries; if unrecoverable, declare it DEAD — salvaging
+        its replayable WAL tail into the survivors first (`_declare_dead`).
+        Returns True when the worker is LIVE again, False when DEAD."""
+        fo = self._failover
+        with self._flock:
+            if w in self._dead:
+                return False
+            self._health[w] = "degraded"
+            old = self.workers[w]
+            durable = old._dur is not None
+            try:
+                old.close()
+            except BaseException:
+                pass                     # the old engine is being replaced
+            delay = fo.backoff_s
+            if durable:
+                for attempt in range(max(fo.max_retries, 1)):
+                    fresh = None
+                    try:
+                        fresh = self._make_worker(w)
+                        fresh.recover()
+                        self.workers[w] = fresh
+                        self._health[w] = "live"
+                        self._counters["recoveries"] += 1
+                        return True
+                    except BaseException:
+                        if fresh is not None:
+                            try:
+                                fresh.close()
+                            except BaseException:
+                                pass
+                        time.sleep(delay)
+                        delay *= 2
+            self._declare_dead(w, exc)
+            return False
+
+    def _declare_dead(self, w: int, exc: BaseException) -> None:
+        """Mark worker ``w`` DEAD under a new partition epoch, then
+        re-partition its replayable WAL tail to the survivors (the dead
+        set must be in place first so the salvage re-ingest routes around
+        ``w``), and pin the outcome in ``cluster.json``.
+
+        Crash-safety (§14): the dead set + epoch persist *before* salvage
+        starts (routing stays dead-aware across a coordinator restart),
+        and salvage checkpoints its progress — the last seq durably
+        handed to the survivors — into ``cluster.json`` after every
+        hand-off.  A coordinator crash mid-salvage therefore resumes
+        (`recover()` → `_resume_salvage`) from the checkpointed prefix:
+        at-least-once only within the single in-flight hand-off batch,
+        never a full-WAL replay, never silent loss."""
+        self._health[w] = "dead"
+        self._dead.add(w)
+        self._epoch += 1
+        self._persist_meta()
+        complete = False
+        if self._failover.repartition and self._meta_path is not None:
+            try:
+                complete = self._salvage(w)
+            except BaseException:
+                complete = False         # partial salvage: DEAD, lossy
+        if complete:
+            self._salvaged.add(w)
+            self._salvage_progress.pop(w, None)
+        self._persist_meta()
+
+    def _salvage(self, w: int) -> bool:
+        """Stream the dead worker's readable WAL records back through the
+        cluster's own ingest/delete path (content-hash re-route to the
+        survivors).  Exactness per sketch is the merge-algebra argument of
+        DESIGN §14: RACE counters add, SW-AKDE buckets union, S-ANN keep
+        decisions are per-point functions of (bytes, salt) — so replayed
+        rows land exactly as if originally routed there.
+
+        Resumable: records with seq <= the checkpointed salvage progress
+        for ``w`` were already durably handed to the survivors (their own
+        WALs logged them before the hand-off returned) and are skipped;
+        progress re-checkpoints into ``cluster.json`` after every
+        hand-off, so a coordinator crash mid-salvage re-ingests at most
+        one in-flight batch on resume, not the whole log.  Returns True
+        when the *whole* history was replayable (records from seq 0:
+        nothing was compacted behind an unloadable snapshot)."""
+        wdir = pathlib.Path(self._meta_path.parent) / f"worker_{w}"
+        wal = persist.WriteAheadLog(wdir / "wal")
+        done = self._salvage_progress.get(w, -1)
+        first_seq: Optional[int] = None
+        last_seq = done
+        nrec = nrows = 0
+        buf: List[np.ndarray] = []
+
+        def _checkpoint() -> None:
+            # Everything handed off so far is durable on the survivors
+            # (ingest_async WAL-logs at enqueue time; deletes log inside
+            # _durable_mutate before returning), so last_seq is safe to
+            # skip on a post-crash resume.
+            self._salvage_progress[w] = last_seq
+            self._persist_meta()
+            # Coordinator-death stand-in (DESIGN §14): a crash injected
+            # here leaves a checkpointed prefix for recover() to resume.
+            faults.fire("cluster.salvage")
+
+        def _drain():
+            if buf:
+                self.ingest_async(np.concatenate(buf))
+                buf.clear()
+                _checkpoint()
+
+        it = wal.iter_replay()
+        try:
+            for rec in it:
+                if first_seq is None:
+                    first_seq = rec.seq
+                if rec.seq <= done:
+                    continue             # salvaged before a prior crash
+                nrec += 1
+                if rec.kind == persist.KIND_CHUNK:
+                    rows = np.asarray(rec.arrays["xs"], np.float32)
+                    nrows += rows.shape[0]
+                    buf.append(rows)
+                    last_seq = rec.seq
+                    if sum(b.shape[0] for b in buf) >= 4096:
+                        _drain()
+                else:
+                    # Order matters: mutations apply after every chunk
+                    # logged before them, exactly as the worker would
+                    # have replayed.
+                    _drain()
+                    self.flush()
+                    self._salvage_delete(rec.kind, rec.arrays)
+                    last_seq = rec.seq
+                    _checkpoint()
+            _drain()
+        finally:
+            # Close the (possibly suspended) generator *before* closing
+            # the WAL: iter_replay holds the non-reentrant WAL lock across
+            # yields, so on a GC-based interpreter — or whenever the loop
+            # body raises while the generator stays referenced —
+            # wal.close() would otherwise deadlock on that lock while this
+            # thread holds _flock, freezing queries and failure handling.
+            it.close()
+            wal.close()
+        if nrec:
+            self._counters["repartitions"] += 1
+            self._counters["salvaged_records"] += nrec
+            self._counters["salvaged_rows"] += nrows
+        # Complete iff the log still reaches back to the first op (no
+        # snapshot-covered prefix was compacted away — resume skips
+        # records but still *observes* the log's true first seq), or
+        # nothing was ever written.
+        return (first_seq == 0
+                or (first_seq is None and done < 0
+                    and persist.snapshot.latest_seq(str(wdir)) is None))
+
+    def _salvage_delete(self, kind: int, arrays: dict) -> None:
+        """Re-apply a dead worker's logged mutation through the cluster
+        API (subclasses with mutation kinds override)."""
+        raise NotImplementedError(
+            f"cannot re-partition WAL record kind {kind}")
+
+    def _ensure_live(self) -> None:
+        """Query-path health gate (failover mode only): recover any
+        poisoned worker in place, then apply the ``on_degraded`` policy
+        while workers are DEAD.  ``block`` waits for the cluster's data to
+        be *whole* — every dead worker fully re-partitioned — not for the
+        workers themselves (death is permanent within an epoch)."""
+        fo = self._failover
+        if fo is None:
+            return
+        deadline = time.monotonic() + fo.block_deadline_s
+        while True:
+            with self._flock:
+                for w in range(len(self.workers)):
+                    if w not in self._dead and self.workers[w]._poisoned:
+                        self._handle_worker_failure(
+                            w, RuntimeError(self.workers[w]._poison_reason
+                                            or "poisoned"))
+                if not self._dead or fo.on_degraded == "partial":
+                    return
+                whole = self._dead <= self._salvaged
+                if whole and fo.on_degraded == "block":
+                    return
+                if fo.on_degraded == "fail" or time.monotonic() >= deadline:
+                    raise ClusterDegradedError(
+                        f"cluster degraded: workers {sorted(self._dead)} "
+                        f"dead ({'fully' if whole else 'not fully'} "
+                        "re-partitioned); on_degraded="
+                        f"{fo.on_degraded!r}", dead=self._dead,
+                        salvaged=self._salvaged)
+            # Sleep outside _flock: another thread's failure handling (and
+            # its salvage re-ingest) must be able to make progress while a
+            # blocked query waits for the data to be whole.
+            time.sleep(min(0.05, fo.block_deadline_s / 10 or 0.05))
+
+    def _persist_meta(self) -> None:
+        # Atomic replace: salvage checkpoints rewrite this file once per
+        # hand-off, and a crash mid-write must never leave a torn
+        # cluster.json behind (the next open json-parses it).
+        if self._meta_path is None:
+            return
+        tmp = self._meta_path.with_name(self._meta_path.name + ".tmp")
+        tmp.write_text(json.dumps(
+            {"num_workers": len(self.workers),
+             "dead_workers": sorted(self._dead),
+             "salvage_complete": sorted(self._salvaged),
+             "salvage_progress": {str(w): s for w, s in
+                                  sorted(self._salvage_progress.items())},
+             "epoch": self._epoch}))
+        tmp.replace(self._meta_path)
+
+    # --- observability ------------------------------------------------------
+
+    @property
+    def coverage(self) -> float:
+        """Fraction of workers serving queries (< 1 while any is DEAD —
+        even after a complete re-partition, which restores the *data* but
+        not the worker)."""
+        return 1.0 - len(self._dead) / len(self.workers)
+
+    def health(self) -> dict:
+        """Coordinator + per-worker health (DESIGN §14): health states,
+        dead set + partition epoch, failover counters, and each live
+        engine's own `health()` (poison reason, committed seq, queue
+        depth)."""
+        fo = self._failover
+        return {"workers": [
+                    {"worker": w, "health": self._health[w],
+                     **self.workers[w].health()}
+                    for w in range(len(self.workers))],
+                "dead_workers": sorted(self._dead),
+                "salvage_complete": sorted(self._salvaged),
+                "salvage_progress": dict(sorted(
+                    self._salvage_progress.items())),
+                "epoch": self._epoch,
+                "coverage": self.coverage,
+                "counters": dict(self._counters),
+                "on_degraded": None if fo is None else fo.on_degraded}
+
+    def stats(self) -> dict:
+        """`health()` plus the coordinator's query-scheduler counters."""
+        out = self.health()
+        if self._batcher is not None:
+            out["batcher"] = self._batcher.stats()
+        return out
 
     # --- merged view ---------------------------------------------------------
 
     @property
     def versions(self) -> tuple:
-        """Per-worker commit versions (the merge-cadence clock)."""
-        return tuple(w.version for w in self.workers)
+        """Per-worker commit versions (the merge-cadence clock); a DEAD
+        worker holds the sentinel ``-1`` (its commits now live in the
+        survivors' logs via re-partition)."""
+        return tuple(-1 if w in self._dead else self.workers[w].version
+                     for w in range(len(self.workers)))
 
     @property
     def version(self) -> int:
-        """Summed worker commit count."""
-        return sum(self.versions)
+        """Summed live-worker commit count."""
+        return sum(v for v in self.versions if v >= 0)
 
     def _maybe_merge(self) -> None:
         if self.version - self._last_merge_total >= self._merge_every:
             self._refresh()
 
     def _refresh(self):
-        """Fold the workers' current committed snapshots into the merged
-        cache (no-op when the cache already matches the snapshots).
-        Returns the consistent ``(state, meta, versions)`` triple."""
-        snaps = [w.snapshot() for w in self.workers]
-        states = [s for s, _ in snaps]
-        vers = tuple(v for _, v in snaps)
+        """Fold the live workers' current committed snapshots into the
+        merged cache (no-op when the cache already matches).  Returns the
+        consistent ``(state, meta, versions)`` triple.  The cache clock is
+        ``(versions, epoch)``: the partition epoch bumps on every worker
+        death, so a merge that predates a death can never be mistaken for
+        fresh (the live sum *drops* when a worker dies — the old
+        sum-ordered install guard alone would wedge the cache)."""
+        epoch = self._epoch
+        live = [w for w in range(len(self.workers)) if w not in self._dead]
+        if not live:
+            raise ClusterDegradedError("no live workers",
+                                       dead=sorted(self._dead),
+                                       salvaged=self._salvaged)
+        snaps = {w: self.workers[w].snapshot() for w in live}
+        states = [snaps[w][0] for w in live]
+        vers = tuple(-1 if w in self._dead else snaps[w][1]
+                     for w in range(len(self.workers)))
         with self._mlock:
-            if self._merged_versions == vers:
+            if self._merged_versions == vers and self._merged_epoch == epoch:
                 return self._merged, self._merged_meta, vers
+            self._with_retries(None, lambda: faults.fire("cluster.merge"))
             merged = (states[0] if len(states) == 1
                       else jax.block_until_ready(self._merge_fn(states)))
-            meta = self._meta(states)
+            meta = dict(self._meta(states) or {})
+            meta.update(workers_live=len(live),
+                        workers_total=len(self.workers),
+                        worker_coverage=len(live) / len(self.workers))
+            vsum = sum(v for v in vers if v >= 0)
             if (self._merged_versions is None
-                    or sum(self._merged_versions) <= sum(vers)):
+                    or epoch > self._merged_epoch
+                    or (epoch == self._merged_epoch
+                        and sum(v for v in self._merged_versions
+                                if v >= 0) <= vsum)):
                 # Install only if not older than the cache: a racing
                 # _refresh whose snapshots were taken later may already
-                # have installed a newer merge (worker versions are
-                # monotone, so the sum orders snapshots).  Either way this
-                # caller gets its own consistent triple.
+                # have installed a newer merge (live worker versions are
+                # monotone within an epoch, so the live sum orders
+                # snapshots; across epochs the epoch orders them).
                 self._merged = merged
                 self._merged_versions = vers
                 self._merged_meta = meta
-                self._last_merge_total = sum(vers)
+                self._merged_epoch = epoch
+                self._last_merge_total = vsum
             return merged, meta, vers
 
     def merged_snapshot(self):
         """``(state, meta, versions)`` of one consistent merge covering
-        every worker commit: the cached merge when fresh, else a
+        every live worker commit: the cached merge when fresh, else a
         query-time merge of the unmerged tails.  Numerator and any
         normalising scalars of one answer must come from a single call —
-        state and meta are written together under the merge lock."""
+        state and meta are written together under the merge lock.
+
+        With failover configured this is also the degraded-policy gate:
+        poisoned workers are recovered in place first, then the
+        ``on_degraded`` policy decides whether a cluster with DEAD workers
+        fails, blocks, or serves the live subset (`_ensure_live`)."""
+        self._ensure_live()
+        epoch = self._epoch
         vers = self.versions
         with self._mlock:
-            if self._merged_versions == vers:
+            if self._merged_versions == vers and self._merged_epoch == epoch:
                 return self._merged, self._merged_meta, vers
         return self._refresh()
 
@@ -334,10 +853,13 @@ class ClusterService(_BatchedQueryMixin):
 
 def _worker_cfg(cfg, w: int, **extra):
     """Per-worker config: same seed (identical params), per-worker
-    durability subdirectory, plus sketch-specific fields via ``extra``."""
+    durability subdirectory and fault-injection scope (so a `FaultPlan`
+    can target ``worker_<w>/<site>`` deterministically), plus
+    sketch-specific fields via ``extra``."""
     sub = (None if getattr(cfg, "snapshot_dir", None) is None
            else f"{cfg.snapshot_dir}/worker_{w}")
-    return dataclasses.replace(cfg, snapshot_dir=sub, **extra)
+    return dataclasses.replace(cfg, snapshot_dir=sub,
+                               fault_scope=f"worker_{w}/", **extra)
 
 
 class ClusterRetrievalService(ClusterService):
@@ -345,7 +867,8 @@ class ClusterRetrievalService(ClusterService):
     coordinator, single-service query API (`query`, `delete`)."""
 
     def __init__(self, cfg: RetrievalConfig, num_workers: int = 2,
-                 merge_every: int = 8):
+                 merge_every: int = 8,
+                 failover: Optional[FailoverConfig] = None):
         def make(w: int) -> RetrievalService:
             # Same seed → identical LSH params (merge precondition); the
             # salt decorrelates the workers' Bernoulli keep decisions.
@@ -363,7 +886,8 @@ class ClusterRetrievalService(ClusterService):
                 states),
             snapshot_dir=cfg.snapshot_dir,
             batch_queries=cfg.batch_queries,
-            max_batch=cfg.max_batch, max_wait_us=cfg.max_wait_us)
+            max_batch=cfg.max_batch, max_wait_us=cfg.max_wait_us,
+            failover=failover)
 
     _default_query_kind = "cr"
 
@@ -395,10 +919,18 @@ class ClusterRetrievalService(ClusterService):
         value, so a near-copy with different float bits can live on *any*
         worker (hash ownership is per bit pattern) — routing to the exact
         owner alone would miss it.  Broadcasting reproduces single-engine
-        semantics exactly; workers without a match apply a no-op."""
+        semantics exactly; workers without a match apply a no-op.  Under
+        failover the broadcast covers the live workers (a dead worker's
+        surviving points were re-partitioned onto them)."""
         x = np.asarray(embedding, np.float32)
-        for worker in self.workers:
-            worker.delete(x)
+        for w in range(len(self.workers)):
+            if w not in self._dead:
+                self._mutate_live(w, lambda w=w: self.workers[w].delete(x))
+
+    def _salvage_delete(self, kind: int, arrays: dict) -> None:
+        if kind != persist.KIND_DELETE:
+            return super()._salvage_delete(kind, arrays)
+        self.delete(arrays["x"])
 
     @property
     def stored(self) -> int:
@@ -414,7 +946,8 @@ class ClusterKDEService(ClusterService):
     expiry, estimate-level after (DESIGN.md §11.5)."""
 
     def __init__(self, cfg: KDEServiceConfig, num_workers: int = 2,
-                 merge_every: int = 8):
+                 merge_every: int = 8,
+                 failover: Optional[FailoverConfig] = None):
         super().__init__(
             lambda w: KDEService(_worker_cfg(cfg, w, batch_queries=False)),
             num_workers, merge_every,
@@ -424,7 +957,8 @@ class ClusterKDEService(ClusterService):
                 states),
             snapshot_dir=cfg.snapshot_dir,
             batch_queries=cfg.batch_queries,
-            max_batch=cfg.max_batch, max_wait_us=cfg.max_wait_us)
+            max_batch=cfg.max_batch, max_wait_us=cfg.max_wait_us,
+            failover=failover)
         self.cfg = cfg
         # cache_grid over the merged sketch: the (L, W) grid-estimate table
         # is pure given the merged state, so it is cached per merged
@@ -496,8 +1030,10 @@ class ClusterKDEService(ClusterService):
 
     @property
     def steps(self) -> int:
-        """Stream steps consumed across all workers."""
-        return sum(w.steps for w in self.workers)
+        """Stream steps consumed across the live workers (a dead worker's
+        salvaged steps were re-ingested by the survivors)."""
+        return sum(self.workers[w].steps for w in range(len(self.workers))
+                   if w not in self._dead)
 
 
 class ClusterRACEService(ClusterService):
@@ -506,14 +1042,16 @@ class ClusterRACEService(ClusterService):
     over the whole stream (tests/test_cluster.py)."""
 
     def __init__(self, cfg: RACEServiceConfig, num_workers: int = 2,
-                 merge_every: int = 8):
+                 merge_every: int = 8,
+                 failover: Optional[FailoverConfig] = None):
         super().__init__(
             lambda w: RACEService(_worker_cfg(cfg, w, batch_queries=False)),
             num_workers, merge_every,
             lambda states: functools.reduce(race.race_merge, states),
             snapshot_dir=cfg.snapshot_dir,
             batch_queries=cfg.batch_queries,
-            max_batch=cfg.max_batch, max_wait_us=cfg.max_wait_us)
+            max_batch=cfg.max_batch, max_wait_us=cfg.max_wait_us,
+            failover=failover)
         self.cfg = cfg
 
     _default_query_kind = "kde"
@@ -541,15 +1079,26 @@ class ClusterRACEService(ClusterService):
         return self._serve_query("density", queries)
 
     def delete(self, embeddings: np.ndarray) -> None:
-        """Turnstile decrements, routed to each row's hash owner."""
+        """Turnstile decrements, routed to each row's hash owner (dead
+        owners re-route to the survivors exactly like ingest — the
+        decrement must land where the original increment did or will,
+        which the shared dead-aware hash guarantees)."""
         xs = np.atleast_2d(np.asarray(embeddings, np.float32))
-        pid = hash_partition(xs, len(self.workers))
-        for w, worker in enumerate(self.workers):
+        pid = self._partition(xs)
+        for w in range(len(self.workers)):
             rows = xs[pid == w]
             if rows.shape[0]:
-                worker.delete(rows)
+                self._mutate_live(w, lambda w=w, r=rows:
+                                  self.workers[w].delete(r))
+
+    def _salvage_delete(self, kind: int, arrays: dict) -> None:
+        if kind != persist.KIND_DELETE:
+            return super()._salvage_delete(kind, arrays)
+        self.delete(arrays["xs"])
 
     @property
     def count(self) -> int:
-        """Signed stream size across all workers."""
-        return sum(w.count for w in self.workers)
+        """Signed stream size across the live workers (a dead worker's
+        salvaged rows were re-ingested by the survivors)."""
+        return sum(self.workers[w].count for w in range(len(self.workers))
+                   if w not in self._dead)

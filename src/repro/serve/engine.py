@@ -82,6 +82,7 @@ import numpy as np
 
 from repro import persist
 from repro.checkpoint.checkpoint import AsyncCheckpointer
+from repro.persist import faults
 
 # Queue marker telling the ingest worker to exit (see SketchEngine.close).
 _STOP = object()
@@ -93,9 +94,9 @@ def durability_from(cfg) -> Optional[persist.DurabilityConfig]:
     the snapshot + WAL subsystem; ``snapshot_dir=None`` stays volatile."""
     if getattr(cfg, "snapshot_dir", None) is None:
         return None
-    return persist.DurabilityConfig(dir=cfg.snapshot_dir,
-                                    snapshot_every=cfg.snapshot_every,
-                                    fsync=cfg.wal_fsync)
+    return persist.DurabilityConfig(
+        dir=cfg.snapshot_dir, snapshot_every=cfg.snapshot_every,
+        fsync=cfg.wal_fsync, fault_scope=getattr(cfg, "fault_scope", ""))
 
 
 def batch_plan(pending: Sequence, now_us: float, max_batch: int,
@@ -150,6 +151,22 @@ class QueryBatcher:
     the thread exits; ``close(drain=False)`` fails pending futures with
     `RuntimeError` instead.  Either way no future is left hanging and new
     submissions are rejected.
+
+    Lone-client fast path (`try_submit_inline`): in continuous-batching
+    mode (``max_wait_us == 0`` — fire the moment the executor is free) a
+    *sync* caller that finds the queue empty and no tick in flight can
+    run its request as its own tick on the caller thread, skipping both
+    scheduler-thread handoffs (C = 1 previously paid ~2.5× the direct
+    path on wakeup latency alone).  The inline tick claims the same
+    single-executor slot the loop uses (``_busy``), so coalescing under
+    load is unchanged: requests arriving while any tick is in flight
+    queue up and form the next fused batch.  ``submit`` itself never
+    inlines — async callers must get their future back immediately, even
+    when the execute is slow.  With ``max_wait_us > 0`` every request
+    takes the queued path — an idle-start request must *wait* for
+    coalescing partners there, which is exactly what the inline path
+    would skip.  Results are bit-identical either way (same execute,
+    same rows).
     """
 
     def __init__(self, execute: Callable[[list], list],
@@ -167,6 +184,10 @@ class QueryBatcher:
         self._queries = 0
         self._rows = 0
         self._max_tick_rows = 0
+        self._inline_ticks = 0
+        # Ticks in flight (0 or 1): the loop and the inline fast path
+        # both claim this slot under _cv, so at most one execute runs.
+        self._busy = 0
 
     @property
     def closed(self) -> bool:
@@ -189,6 +210,38 @@ class QueryBatcher:
             self._cv.notify_all()
         return fut
 
+    def try_submit_inline(self, kind: str, rows) -> Optional[Future]:
+        """Lone-client fast path (see class docstring): when the executor
+        is idle and nothing is queued in continuous-batching mode, run
+        this request as its own tick on the *caller* thread and return
+        its (completed) future.  Returns None when the fast path is
+        unavailable — the caller falls back to `submit`.  Only for sync
+        callers that would block on the future anyway."""
+        with self._cv:
+            if self._closed:
+                raise RuntimeError("QueryBatcher is closed")
+            if (self._max_wait_us != 0.0 or self._pending
+                    or self._busy != 0):
+                return None
+            self._busy = 1
+            self._ticks += 1
+            self._queries += 1
+            self._inline_ticks += 1
+            n = int(rows.shape[0])
+            self._rows += n
+            self._max_tick_rows = max(self._max_tick_rows, n)
+        fut: Future = Future()
+        try:
+            results = self._execute([(kind, rows)])
+            fut.set_result(results[0])
+        except BaseException as e:
+            fut.set_exception(e)
+        finally:
+            with self._cv:
+                self._busy = 0
+                self._cv.notify_all()
+        return fut
+
     def stats(self) -> dict:
         """Scheduler counters: ticks (fused execute calls), coalesced
         queries/rows, mean coalesced batch size, largest tick."""
@@ -198,7 +251,8 @@ class QueryBatcher:
                     "rows": self._rows,
                     "mean_batch_queries": self._queries / t,
                     "mean_batch_rows": self._rows / t,
-                    "max_tick_rows": self._max_tick_rows}
+                    "max_tick_rows": self._max_tick_rows,
+                    "inline_ticks": self._inline_ticks}
 
     def close(self, drain: bool = True) -> None:
         """Stop accepting work; serve (``drain=True``) or fail the queue,
@@ -215,6 +269,11 @@ class QueryBatcher:
         if thread is not None:
             thread.join()
             self._thread = None
+        with self._cv:
+            # Wait out any inline tick so no execute is still running
+            # when close() returns.
+            while self._busy:
+                self._cv.wait()
 
     def _loop(self) -> None:
         while True:
@@ -223,7 +282,8 @@ class QueryBatcher:
                     self._cv.wait()
                 if not self._pending:
                     return                       # closed and drained
-                while True:
+                take = 0
+                while self._pending:
                     # A closing batcher fires the planned prefix at once
                     # (wait budget 0) — drain without the latency budget.
                     take, wait_us = batch_plan(
@@ -234,7 +294,18 @@ class QueryBatcher:
                     if take:
                         break
                     self._cv.wait(wait_us / 1e6)
+                while take and self._busy:   # an inline tick is in flight
+                    self._cv.wait()
+                # Every wait above releases the lock, so close(drain=False)
+                # may have failed-and-drained the queue meanwhile: re-clamp
+                # the planned prefix to what is still queued before popping
+                # (a stale `take` would underflow the deque and kill this
+                # thread with an unhandled IndexError).
+                take = min(take, len(self._pending))
+                if not take:
+                    continue
                 batch = [self._pending.popleft() for _ in range(take)]
+                self._busy = 1
                 self._ticks += 1
                 self._queries += len(batch)
                 rows = sum(r.shape[0] for _, _, r, _ in batch)
@@ -249,6 +320,10 @@ class QueryBatcher:
                 for *_, fut in batch:
                     if not fut.done():
                         fut.set_exception(e)
+            finally:
+                with self._cv:
+                    self._busy = 0
+                    self._cv.notify_all()
 
 
 class _BatchedQueryMixin:
@@ -265,6 +340,11 @@ class _BatchedQueryMixin:
     """
 
     _default_query_kind = "query"
+    # Fault-injection naming (DESIGN §14): the engine's query path is
+    # ``engine.query``; the cluster coordinator overrides the site (and
+    # scoped engines override the prefix).
+    _fault_scope = ""
+    _query_fault_site = "engine.query"
 
     def _init_query_batching(self, batch_queries: bool,
                              max_batch: Optional[int],
@@ -326,7 +406,20 @@ class _BatchedQueryMixin:
         qs = np.asarray(queries, np.float32)
         if self._batch_queries and not (
                 self._batcher is not None and self._batcher.closed):
-            return self.submit_query(qs, kind=kind).result()
+            self._kind_fn(kind)                  # validate before enqueue
+            with self._batcher_lock:
+                if self._batcher is None:
+                    self._batcher = QueryBatcher(
+                        self._batch_execute, max_batch=self._max_batch,
+                        max_wait_us=self._max_wait_us)
+                batcher = self._batcher
+            # Sync callers block on the result either way, so they may
+            # take the lone-client inline tick when the scheduler is idle.
+            fut = batcher.try_submit_inline(kind, qs)
+            if fut is None:
+                fut = batcher.submit(kind, qs)
+            return fut.result()
+        faults.fire(self._fault_scope + self._query_fault_site)
         return self._kind_fn(kind)(self._query_snapshot_ctx(), qs)
 
     def _close_batcher(self) -> None:
@@ -364,6 +457,7 @@ class _BatchedQueryMixin:
         jnp.concatenate would retrace per distinct request *count*, and
         per-request device slices would pay one dispatch per array —
         both defeat the point of coalescing.)"""
+        faults.fire(self._fault_scope + self._query_fault_site)
         ctx = self._query_snapshot_ctx()
         results: list = [None] * len(reqs)
         groups: dict = {}
@@ -446,8 +540,13 @@ class SketchEngine(_BatchedQueryMixin):
                  durability: Optional[persist.DurabilityConfig] = None,
                  batch_queries: bool = False,
                  max_batch: Optional[int] = None,
-                 max_wait_us: float = 200.0):
+                 max_wait_us: float = 200.0,
+                 fault_scope: str = ""):
         self._chunk = max(1, int(ingest_chunk))
+        # Fault-injection site prefix (repro.persist.faults; DESIGN §14) —
+        # the cluster names each worker's sites ``worker_<w>/...``.
+        self._fault_scope = fault_scope or (
+            durability.fault_scope if durability is not None else "")
         self._query_block = max(1, int(query_block))
         self._init_query_batching(batch_queries, max_batch, max_wait_us,
                                   default_max_batch=self._query_block)
@@ -469,6 +568,7 @@ class SketchEngine(_BatchedQueryMixin):
         self._ingest_error: Optional[str] = None
         self._closed = False
         self._poisoned = False
+        self._poison_reason: Optional[str] = None
         # Durability: global operation sequence (chunks + logged mutations).
         # _seq = next seq to assign, _committed_seq = ops applied to state.
         self._seq = 0
@@ -487,7 +587,8 @@ class SketchEngine(_BatchedQueryMixin):
                     "single engine cannot recover it — reopen with the "
                     "cluster service at the original worker count.")
             self._wal = persist.WriteAheadLog(
-                pathlib.Path(durability.dir) / "wal", fsync=durability.fsync)
+                pathlib.Path(durability.dir) / "wal", fsync=durability.fsync,
+                fault_scope=self._fault_scope)
             self._ckpt = AsyncCheckpointer()
             self._needs_recover = (
                 persist.snapshot.latest_seq(durability.dir) is not None
@@ -500,6 +601,11 @@ class SketchEngine(_BatchedQueryMixin):
         self._prep_pool = (ThreadPoolExecutor(
             max_workers=self._prepare_depth)
             if self._pipelined else None)
+
+    def _poison(self, where: str, exc: BaseException) -> None:
+        """Fail-stop with a recorded reason (surfaced by `health()`)."""
+        self._poisoned = True
+        self._poison_reason = f"{where}: {exc!r}"
 
     # --- subclass hooks ----------------------------------------------------
 
@@ -572,12 +678,16 @@ class SketchEngine(_BatchedQueryMixin):
                     # failure are already accepted — so the engine poisons
                     # itself rather than invite a blind resubmit that
                     # would double-ingest them; recover() replays exactly
-                    # the accepted prefix.
+                    # the accepted prefix.  Exception: a *transient* fault
+                    # (faults.is_transient) on the FIRST chunk of a call
+                    # accepted nothing — the call is cleanly rejected and
+                    # safe to retry in place, so the engine stays live.
                     try:
                         self._wal.append([(seq, persist.KIND_CHUNK,
                                            {"xs": host[i:i + self._chunk]})])
-                    except BaseException:
-                        self._poisoned = True
+                    except BaseException as e:
+                        if not (i == 0 and faults.is_transient(e)):
+                            self._poison("wal append (chunk rejected)", e)
                         raise
                 self._seq = seq + 1
                 with self._cv:
@@ -695,7 +805,7 @@ class SketchEngine(_BatchedQueryMixin):
                             ahead.append((nxt, self._submit_prepare(nxt[0])))
                     prep = fut.result() if hasattr(fut, "result") else fut
                     self._commit_one(prep)
-            except BaseException:
+            except BaseException as e:
                 with self._cv:
                     self._ingest_error = traceback.format_exc()
                     # A durable engine cannot keep accepting work after a
@@ -706,7 +816,7 @@ class SketchEngine(_BatchedQueryMixin):
                     # semantics; durable ones direct the caller to
                     # recover(), which replays every logged chunk.
                     if self._dur is not None:
-                        self._poisoned = True
+                        self._poison("background commit (chunk accepted)", e)
             finally:
                 with self._cv:
                     self._pending -= 1
@@ -724,6 +834,7 @@ class SketchEngine(_BatchedQueryMixin):
         return jax.block_until_ready(self._prepare(*item))
 
     def _commit_one(self, prep) -> None:
+        faults.fire(self._fault_scope + "engine.commit")
         with self._lock:
             self.state = st = self._commit(self.state, prep)
             self._version += 1
@@ -744,6 +855,7 @@ class SketchEngine(_BatchedQueryMixin):
         (commit-worker thread).  The previous snapshot — durable by the
         time the checkpointer accepts a new one — releases its WAL
         segments (compaction) and old snapshot dirs."""
+        faults.fire(self._fault_scope + "snapshot.save")
         root = self._dur.dir
         if self._snap_inflight is not None:
             self._ckpt.wait()
@@ -776,10 +888,13 @@ class SketchEngine(_BatchedQueryMixin):
                 # (like the chunk path) poison rather than invite a retry
                 # that would append after garbage bytes; recovery truncates
                 # the torn tail and the unacknowledged op is simply absent.
+                # A *transient* fault rejected the op before any bytes
+                # landed — cleanly retryable, the engine stays live.
                 try:
                     self._wal.append([(self._seq, kind, arrays)])
-                except BaseException:
-                    self._poisoned = True
+                except BaseException as e:
+                    if not faults.is_transient(e):
+                        self._poison("wal append (mutation rejected)", e)
                     raise
             # Counters advance once the record is durable; if applying
             # `fn` then fails, the op is on disk and recovery will apply
@@ -788,14 +903,19 @@ class SketchEngine(_BatchedQueryMixin):
             self._committed_seq += 1
             try:
                 self._mutate_state(fn)
-            except BaseException:
+            except BaseException as e:
                 # Durable case: the op is on disk but not in memory —
                 # without this the next snapshot would be labelled as if it
                 # applied and compaction could drop the record for good.
                 # Poison like a failed commit; recovery replays the logged
                 # op.  (Volatile engines have no log to drift from.)
+                # The exception carries a structured acceptance marker so
+                # the cluster's failover can decide resubmission from THIS
+                # op's fate — the poison *reason* may describe an earlier
+                # op (e.g. a background commit) and must not be consulted.
                 if self._wal is not None:
-                    self._poisoned = True
+                    self._poison("mutation apply (op accepted)", e)
+                    e.wal_accepted = True
                 raise
             # Mutations count toward the snapshot cadence like chunk
             # commits (a mutation-heavy workload must not grow the WAL and
@@ -817,6 +937,7 @@ class SketchEngine(_BatchedQueryMixin):
         before any ingest; returns the number of WAL records replayed."""
         if self._dur is None:
             raise RuntimeError("recover() requires a DurabilityConfig")
+        faults.fire(self._fault_scope + "engine.recover")
         with self._submit_lock:
             if self._seq or self._version or self._closed:
                 raise RuntimeError("recover() must run on a fresh engine")
@@ -830,7 +951,9 @@ class SketchEngine(_BatchedQueryMixin):
                 self._version = snap
                 self._last_snap_seq = snap
             n = 0
-            for rec in self._wal.replay(after=self._committed_seq - 1):
+            # Streaming replay: one decoded record in memory at a time, so
+            # recovering a long WAL tail doesn't double peak host memory.
+            for rec in self._wal.iter_replay(after=self._committed_seq - 1):
                 if rec.seq != self._committed_seq:
                     raise RuntimeError(
                         f"WAL gap: expected seq {self._committed_seq}, "
@@ -874,6 +997,38 @@ class SketchEngine(_BatchedQueryMixin):
         """Commits applied so far (every commit invalidates `cached`)."""
         with self._lock:
             return self._version
+
+    # --- observability ------------------------------------------------------
+
+    def health(self) -> dict:
+        """One consistent health report (DESIGN §14): lifecycle state
+        (``live`` / ``poisoned`` / ``needs_recover`` / ``closed``), the
+        poison reason if any, durable progress (last committed op seq vs
+        next to assign), and ingest-queue depth.  The cluster coordinator
+        polls this to drive failover."""
+        with self._cv:
+            queue_depth = self._pending
+            queued_rows = self._pending_rows
+        state = ("closed" if self._closed
+                 else "poisoned" if self._poisoned
+                 else "needs_recover" if self._needs_recover
+                 else "live")
+        return {"state": state,
+                "poison_reason": self._poison_reason,
+                "last_committed_seq": self._committed_seq,
+                "next_seq": self._seq,
+                "version": self.version,
+                "queue_depth": queue_depth,
+                "queued_rows": queued_rows,
+                "durable": self._dur is not None}
+
+    def stats(self) -> dict:
+        """`health()` plus the query-scheduler counters (when batching
+        has served anything)."""
+        out = self.health()
+        if self._batcher is not None:
+            out["batcher"] = self._batcher.stats()
+        return out
 
     def cached(self, name: str, version: int, compute: Callable[[], Any]):
         """Memoise a pure function of the snapshot at ``version`` (e.g. the

@@ -101,6 +101,9 @@ class KDEServiceConfig:
     snapshot_dir: Optional[str] = None
     snapshot_every: int = 64
     wal_fsync: bool = False
+    # Fault-injection site-name prefix (repro.persist.faults,
+    # DESIGN.md §14); the cluster sets ``worker_<w>/`` per worker.
+    fault_scope: str = ""
 
 
 class KDEService(SketchEngine):
@@ -130,7 +133,8 @@ class KDEService(SketchEngine):
                          durability=durability_from(cfg),
                          batch_queries=cfg.batch_queries,
                          max_batch=cfg.max_batch,
-                         max_wait_us=cfg.max_wait_us)
+                         max_wait_us=cfg.max_wait_us,
+                         fault_scope=cfg.fault_scope)
         self.state = swakde.swakde_init(self.sketch_cfg)
 
         self._ctx = ss.make_service_ctx(cfg.mesh, cfg.num_shards)

@@ -74,6 +74,9 @@ class RACEServiceConfig:
     snapshot_dir: Optional[str] = None
     snapshot_every: int = 64
     wal_fsync: bool = False
+    # Fault-injection site-name prefix (repro.persist.faults,
+    # DESIGN.md §14); the cluster sets ``worker_<w>/`` per worker.
+    fault_scope: str = ""
 
 
 class RACEService(SketchEngine):
@@ -98,7 +101,8 @@ class RACEService(SketchEngine):
                          durability=durability_from(cfg),
                          batch_queries=cfg.batch_queries,
                          max_batch=cfg.max_batch,
-                         max_wait_us=cfg.max_wait_us)
+                         max_wait_us=cfg.max_wait_us,
+                         fault_scope=cfg.fault_scope)
         self.state = race.race_init(cfg.L, cfg.W)
 
         self._ctx = ss.make_service_ctx(cfg.mesh, cfg.num_shards)

@@ -97,6 +97,9 @@ class RetrievalConfig:
     snapshot_dir: Optional[str] = None
     snapshot_every: int = 64
     wal_fsync: bool = False
+    # Fault-injection site-name prefix (repro.persist.faults,
+    # DESIGN.md §14); the cluster sets ``worker_<w>/`` per worker.
+    fault_scope: str = ""
 
 
 class RetrievalService(SketchEngine):
@@ -118,7 +121,8 @@ class RetrievalService(SketchEngine):
                          durability=durability_from(cfg),
                          batch_queries=cfg.batch_queries,
                          max_batch=cfg.max_batch,
-                         max_wait_us=cfg.max_wait_us)
+                         max_wait_us=cfg.max_wait_us,
+                         fault_scope=cfg.fault_scope)
         self.state = state
         # Per-chunk keys are fold_in(base, chunk seq): a pure function of
         # the chunk's global sequence number, so the schedule is identical

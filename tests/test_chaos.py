@@ -1,0 +1,452 @@
+"""Fault-tolerant cluster runtime (DESIGN.md §14) under deterministic
+fault injection (`repro.persist.faults`):
+
+  * a worker whose durability path dies mid-stream (background commit
+    crash -> fail-stop poison) is rebuilt and `recover()`ed in place by
+    the coordinator, and the cluster's final answers are bit-identical to
+    a never-faulted cluster — for all three sketches;
+  * an *unrecoverable* worker is declared DEAD and its replayable WAL
+    tail is re-partitioned to the survivors through the merge algebra:
+    RACE stays bit-identical to a single engine over the whole stream
+    (counter sums are exact under any routing);
+  * degraded-query policies: ``fail`` raises while any worker is DEAD,
+    ``partial`` serves the live subset with ``worker_coverage < 1`` on
+    every merge, ``block`` serves once the data is whole (every dead
+    worker fully salvaged) and raises at the deadline otherwise;
+  * transient faults (`InjectedIOError(transient=True)`) retry in place
+    with backoff — no recovery, no death, identical state;
+  * seeded chaos soak (the CI ``chaos`` job): a `seeded_plan` kills every
+    worker's durability path at least once mid-stream; ingest + queries
+    must converge with zero bit-identity violations and zero hung
+    threads, and the fault-site coverage report is written as an
+    artifact when ``REPRO_CHAOS_REPORT`` is set.
+"""
+import json
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro import persist
+from repro.persist import faults
+from repro.serve.cluster import (
+    ClusterDegradedError, ClusterKDEService, ClusterRACEService,
+    ClusterRetrievalService, FailoverConfig, hash_partition,
+)
+from repro.serve.kde_service import KDEServiceConfig
+from repro.serve.race_service import RACEService, RACEServiceConfig
+from repro.serve.retrieval import RetrievalConfig
+
+_RACE_KW = dict(dim=8, L=6, W=32, ingest_chunk=64, seed=3)
+_KDE_KW = dict(dim=8, L=6, W=32, window=100_000, eh_eps=0.2, ingest_chunk=50)
+_SANN_KW = dict(dim=8, n_max=100, eta=0.0, r=0.4, c=2.0, w=1.0, L=6, k=3,
+                ingest_chunk=64)
+
+# Fast-failing failover for tests: one rebuild attempt, ~no backoff.
+_FO = dict(max_retries=1, backoff_s=0.001)
+
+
+def _data(n=500, d=8, seed=0):
+    return np.random.default_rng(seed).uniform(0, 1, (n, d)).astype(
+        np.float32)
+
+
+def _states_equal(a, b):
+    import jax
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    return len(la) == len(lb) and all(
+        bool((np.asarray(x) == np.asarray(y)).all())
+        for x, y in zip(la, lb))
+
+
+def _clusters(tmp_path, name, kw_extra=()):
+    """(make, query) factories per sketch for the recovery tests."""
+    if name == "race":
+        def make(sub, failover):
+            return ClusterRACEService(
+                RACEServiceConfig(**_RACE_KW, snapshot_dir=str(tmp_path
+                                                               / sub)),
+                num_workers=2, merge_every=4, failover=failover)
+    elif name == "kde":
+        def make(sub, failover):
+            return ClusterKDEService(
+                KDEServiceConfig(**_KDE_KW, snapshot_dir=str(tmp_path
+                                                             / sub)),
+                num_workers=2, merge_every=4, failover=failover)
+    else:
+        def make(sub, failover):
+            return ClusterRetrievalService(
+                RetrievalConfig(**_SANN_KW, snapshot_dir=str(tmp_path
+                                                             / sub)),
+                num_workers=2, merge_every=4, failover=failover)
+    return make
+
+
+# ---------------------------------------------------------------------------
+# In-place worker recovery: bit-identity per sketch
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ["race", "kde", "sann"])
+def test_worker_commit_crash_auto_recovers_bit_identical(tmp_path, name):
+    """Kill worker 1's commit path mid-stream; the coordinator rebuilds it
+    from snapshot + WAL tail (bit-identical recovery) and the cluster
+    converges to exactly the never-faulted cluster's merged state."""
+    make = _clusters(tmp_path, name)
+    data = _data(seed=21)
+    ref = make("ref", None)
+    ref.ingest(data)
+
+    svc = make("svc", FailoverConfig(**_FO))
+    plan = persist.FaultPlan([persist.FaultSpec(
+        site="worker_1/engine.commit", mode="crash", hit=2)])
+    with faults.installed(plan):
+        for i in range(0, len(data), 100):
+            svc.ingest(data[i:i + 100])
+    assert plan.fired, "the injected commit crash never fired"
+    h = svc.health()
+    assert h["counters"]["recoveries"] >= 1
+    assert h["dead_workers"] == [] and h["coverage"] == 1.0
+    assert [wh["health"] for wh in h["workers"]] == ["live", "live"]
+    assert _states_equal(svc.merged_state(), ref.merged_state())
+    svc.close()
+    ref.close()
+
+
+def test_torn_wal_tail_on_worker_auto_recovers(tmp_path):
+    """A torn WAL append on a worker (process death mid-write) poisons it;
+    failover truncates the torn tail during recover() and the cluster
+    still converges bit-identically (the torn chunk was never accepted,
+    and the coordinator resubmits exactly it)."""
+    data = _data(seed=22)
+    ref = ClusterRACEService(
+        RACEServiceConfig(**_RACE_KW, snapshot_dir=str(tmp_path / "ref")),
+        num_workers=2, merge_every=4)
+    ref.ingest(data)
+
+    svc = ClusterRACEService(
+        RACEServiceConfig(**_RACE_KW, snapshot_dir=str(tmp_path / "svc")),
+        num_workers=2, merge_every=4, failover=FailoverConfig(**_FO))
+    plan = persist.FaultPlan([persist.FaultSpec(
+        site="worker_0/wal.append", mode="torn_tail", hit=2)])
+    with faults.installed(plan):
+        for i in range(0, len(data), 100):
+            svc.ingest(data[i:i + 100])
+    assert plan.fired
+    assert svc.health()["counters"]["recoveries"] >= 1
+    assert _states_equal(svc.merged_state(), ref.merged_state())
+    svc.close()
+    ref.close()
+
+
+# ---------------------------------------------------------------------------
+# Unrecoverable worker: WAL-tail re-partition + degraded-mode queries
+# ---------------------------------------------------------------------------
+
+def _kill_worker_dead(tmp_path, on_degraded="partial", repartition=True,
+                      sub="svc"):
+    """RACE K=3 cluster; worker 1 dies unrecoverably (its recover() is
+    also fault-killed) mid-stream.  Huge snapshot cadence -> nothing
+    compacted -> the whole history is salvageable."""
+    data = _data(n=600, seed=23)
+    svc = ClusterRACEService(
+        RACEServiceConfig(**_RACE_KW, snapshot_dir=str(tmp_path / sub),
+                          snapshot_every=10_000),
+        num_workers=3, merge_every=4,
+        failover=FailoverConfig(on_degraded=on_degraded,
+                                block_deadline_s=0.2,
+                                repartition=repartition, **_FO))
+    plan = persist.FaultPlan([
+        persist.FaultSpec(site="worker_1/engine.commit", mode="crash",
+                          hit=2),
+        persist.FaultSpec(site="worker_1/engine.recover", mode="crash",
+                          hit=1, count=99),
+    ])
+    with faults.installed(plan):
+        for i in range(0, len(data), 100):
+            svc.ingest(data[i:i + 100])
+    assert plan.hits.get("worker_1/engine.recover"), \
+        "worker 1 was never declared unrecoverable"
+    return svc, data
+
+
+def test_dead_worker_wal_tail_repartitions_exactly(tmp_path):
+    svc, data = _kill_worker_dead(tmp_path)
+    h = svc.health()
+    assert h["dead_workers"] == [1]
+    assert h["salvage_complete"] == [1], "full WAL should salvage cleanly"
+    assert h["epoch"] >= 1 and h["counters"]["repartitions"] == 1
+    assert h["counters"]["salvaged_rows"] > 0
+    assert 0 < svc.coverage == pytest.approx(2 / 3)
+
+    # RACE counter sums are exact under ANY routing: the re-partitioned
+    # cluster is bit-identical to one engine fed the whole stream.
+    single = RACEService(RACEServiceConfig(**_RACE_KW))
+    single.ingest(data)
+    assert _states_equal(svc.merged_state(), single.state)
+    assert svc.count == single.count == len(data)
+
+    # partial answers always carry coverage < 1 while a worker is DEAD
+    qs = data[:5] + 0.01
+    np.testing.assert_array_equal(svc.query(qs), single.query(qs))
+    _, meta, _ = svc.merged_snapshot()
+    assert meta["worker_coverage"] == pytest.approx(2 / 3)
+    assert meta["workers_live"] == 2 and meta["workers_total"] == 3
+
+    # post-death ingest routes around the dead worker and stays exact
+    more = _data(n=100, seed=24)
+    svc.ingest(more)
+    single.ingest(more)
+    assert _states_equal(svc.merged_state(), single.state)
+    svc.close()
+    single.close()
+
+
+def test_degraded_policy_fail_raises_while_dead(tmp_path):
+    svc, data = _kill_worker_dead(tmp_path, on_degraded="fail")
+    with pytest.raises(ClusterDegradedError) as ei:
+        svc.query(data[:3])
+    assert ei.value.dead == [1] and ei.value.salvaged == [1]
+    svc.close()
+
+
+def test_degraded_policy_block_serves_when_whole_raises_when_not(tmp_path):
+    # Fully salvaged -> the data is whole -> block serves immediately.
+    svc, data = _kill_worker_dead(tmp_path, on_degraded="block", sub="a")
+    assert svc.query(data[:3]).shape == (3,)
+    svc.close()
+    # repartition off -> the dead worker's tail is lost -> block times out.
+    svc2, data = _kill_worker_dead(tmp_path, on_degraded="block",
+                                   repartition=False, sub="b")
+    with pytest.raises(ClusterDegradedError, match="not fully"):
+        svc2.query(data[:3])
+    svc2.close()
+
+
+def test_dead_worker_pins_in_cluster_meta_across_reopen(tmp_path):
+    svc, data = _kill_worker_dead(tmp_path)
+    state = svc.merged_state()
+    svc.close()
+    meta = json.loads((tmp_path / "svc" / "cluster.json").read_text())
+    assert meta["dead_workers"] == [1] and meta["epoch"] >= 1
+
+    re = ClusterRACEService(
+        RACEServiceConfig(**_RACE_KW, snapshot_dir=str(tmp_path / "svc"),
+                          snapshot_every=10_000),
+        num_workers=3, merge_every=4,
+        failover=FailoverConfig(on_degraded="partial", **_FO))
+    re.recover()                       # dead worker skipped, survivors only
+    assert re.health()["dead_workers"] == [1]
+    assert _states_equal(re.merged_state(), state)
+    re.close()
+
+
+# ---------------------------------------------------------------------------
+# Transient faults: in-place retry, no failover
+# ---------------------------------------------------------------------------
+
+def test_transient_wal_fault_retries_in_place(tmp_path):
+    data = _data(seed=25)
+    ref = ClusterRACEService(RACEServiceConfig(**_RACE_KW), num_workers=2,
+                             merge_every=4)
+    ref.ingest(data)
+    svc = ClusterRACEService(
+        RACEServiceConfig(**_RACE_KW, snapshot_dir=str(tmp_path)),
+        num_workers=2, merge_every=4, failover=FailoverConfig(**_FO))
+    plan = persist.FaultPlan([persist.FaultSpec(
+        site="worker_0/wal.append", mode="io_error", transient=True,
+        hit=2)])
+    with faults.installed(plan):
+        svc.ingest(data)
+    assert plan.fired
+    h = svc.health()
+    assert h["counters"]["retries"] >= 1
+    assert h["counters"]["recoveries"] == 0 and h["dead_workers"] == []
+    assert _states_equal(svc.merged_state(), ref.merged_state())
+    svc.close()
+    ref.close()
+
+
+def test_transient_merge_fault_retries(tmp_path):
+    data = _data(n=200, seed=26)
+    svc = ClusterRACEService(RACEServiceConfig(**_RACE_KW), num_workers=2,
+                             merge_every=4, failover=FailoverConfig(**_FO))
+    plan = persist.FaultPlan([persist.FaultSpec(
+        site="cluster.merge", mode="io_error", transient=True)])
+    with faults.installed(plan):
+        svc.ingest(data)
+        out = svc.query(data[:3])
+    assert plan.fired and out.shape == (3,)
+    assert svc.health()["counters"]["retries"] >= 1
+    svc.close()
+
+
+# ---------------------------------------------------------------------------
+# Seeded chaos soak (the CI `chaos` job)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_seeded_chaos_soak(tmp_path, seed):
+    """One seeded plan per run kills every worker's durability path at
+    least once mid-stream (`faults.seeded_plan` emits one fault per
+    worker scope).  The cluster must absorb all of it — in-place
+    recoveries, or death + full-WAL re-partition — with RACE's final
+    answers bit-identical to a single engine over the whole stream, and
+    no thread leaked.  Writes the fault-site coverage report when
+    ``REPRO_CHAOS_REPORT`` is set (uploaded as a CI artifact)."""
+    K = 3
+    threads_before = threading.active_count()
+    data = _data(n=900, seed=100 + seed)
+    # Kill-sites only (snapshot.save never fires under the huge snapshot
+    # cadence this test uses to keep salvage whole, and `delay` doesn't
+    # kill): every worker draws a crash or a torn WAL tail.
+    plan = faults.seeded_plan(
+        seed, scopes=[f"worker_{w}/" for w in range(K)],
+        sites=("engine.commit", "wal.append"),
+        modes=("crash", "torn_tail"))
+    svc = ClusterRACEService(
+        RACEServiceConfig(**_RACE_KW, snapshot_dir=str(tmp_path),
+                          snapshot_every=10_000),
+        num_workers=K, merge_every=4,
+        failover=FailoverConfig(on_degraded="partial", **_FO))
+    with faults.installed(plan):
+        for i in range(0, len(data), 100):
+            svc.ingest(data[i:i + 100])
+            svc.query(data[i:i + 3])       # queries during the storm
+    assert plan.fired, f"seed {seed}: no fault fired (dead soak)"
+    killed = {f["site"].split("/")[0] for f in plan.fired}
+    assert killed == {f"worker_{w}" for w in range(K)}, (
+        f"seed {seed}: not every worker was killed: {sorted(killed)}")
+
+    single = RACEService(RACEServiceConfig(**_RACE_KW))
+    single.ingest(data)
+    h = svc.health()
+    identical = _states_equal(svc.merged_state(), single.state)
+    # Bit-identity must hold through any mix of recoveries and complete
+    # re-partitions (huge snapshot cadence -> salvage is always whole).
+    assert identical, (
+        f"seed {seed}: bit-identity violated; health={h}")
+    assert sorted(h["dead_workers"]) == sorted(h["salvage_complete"])
+    np.testing.assert_array_equal(svc.query(data[:5]),
+                                  single.query(data[:5]))
+    svc.close()
+    single.close()
+    assert threading.active_count() <= threads_before, (
+        f"seed {seed}: hung threads: "
+        f"{[t.name for t in threading.enumerate()]}")
+
+    report_dir = os.environ.get("REPRO_CHAOS_REPORT")
+    if report_dir:
+        os.makedirs(report_dir, exist_ok=True)
+        with open(os.path.join(report_dir, f"chaos_seed{seed}.json"),
+                  "w") as f:
+            json.dump({"seed": seed, "plan": plan.report(),
+                       "health": {k: v for k, v in h.items()
+                                  if k != "workers"},
+                       "bit_identical": identical}, f, indent=2)
+
+
+# ---------------------------------------------------------------------------
+# Review regressions: op-level acceptance + crash-resumable salvage
+# ---------------------------------------------------------------------------
+
+def test_rejected_delete_after_stale_poison_is_resubmitted(tmp_path):
+    """Regression: a worker poisoned by a *background commit* failure
+    carries an 'accepted'-flavoured poison reason describing that earlier
+    op.  A delete() arriving afterwards is rejected up front (never
+    WAL-logged), so after the in-place recovery the failover layer MUST
+    resubmit it — deciding from the stale poison reason used to drop the
+    delete silently (lost RACE decrements)."""
+    # One engine chunk per worker: submission fully completes before the
+    # background commit crash can poison, so the coordinator first sees
+    # the poison inside delete() (the scenario under test), never during
+    # ingest_async.
+    data = _data(n=100, seed=30)
+    pid = hash_partition(data, 2)
+    # rows owned by each worker, so worker 0's delete path is exercised
+    dels = np.concatenate([data[pid == 0][:3], data[pid == 1][:3]])
+
+    single = RACEService(RACEServiceConfig(**_RACE_KW))
+    single.ingest(data)
+    single.delete(dels)
+
+    svc = ClusterRACEService(
+        RACEServiceConfig(**_RACE_KW, snapshot_dir=str(tmp_path)),
+        num_workers=2, merge_every=4, failover=FailoverConfig(**_FO))
+    plan = persist.FaultPlan([persist.FaultSpec(
+        site="worker_0/engine.commit", mode="crash", hit=1)])
+    with faults.installed(plan):
+        svc.ingest_async(data)
+        deadline = time.monotonic() + 30
+        while (not svc.workers[0]._poisoned
+               and time.monotonic() < deadline):
+            time.sleep(0.005)
+    assert plan.fired and svc.workers[0]._poisoned
+    assert "accepted" in svc.workers[0]._poison_reason
+    # No flush yet: the coordinator sees the poison for the first time
+    # inside delete(), whose own op was rejected by _check_ingestable.
+    svc.delete(dels)
+    svc.flush()
+    h = svc.health()
+    assert h["counters"]["recoveries"] >= 1 and h["dead_workers"] == []
+    assert _states_equal(svc.merged_state(), single.state)
+    assert svc.count == single.count
+    svc.close()
+    single.close()
+
+
+def test_salvage_resumes_from_checkpoint_after_coordinator_crash(tmp_path):
+    """Coordinator crash mid-salvage (injected at the ``cluster.salvage``
+    checkpoint site): the dead set, epoch and salvage progress are
+    already pinned in cluster.json, so a reopened cluster's recover()
+    resumes the re-partition *after* the durable prefix — nothing handed
+    to the survivors before the crash is re-ingested (RACE stays
+    bit-identical to a single engine), and the unfinished tail is
+    salvaged, not lost."""
+    data = _data(n=600, seed=27)
+    pid = hash_partition(data[:300], 3)
+    dels = data[:300][pid == 1][:4]   # a mutation record lands on w1's WAL
+    cfg = RACEServiceConfig(**_RACE_KW, snapshot_dir=str(tmp_path),
+                            snapshot_every=10_000)
+    fo = FailoverConfig(on_degraded="partial", **_FO)
+    svc = ClusterRACEService(cfg, num_workers=3, merge_every=4, failover=fo)
+    svc.ingest(data[:300])
+    svc.delete(dels)
+    plan = persist.FaultPlan([
+        persist.FaultSpec(site="worker_1/engine.commit", mode="crash",
+                          hit=1),
+        persist.FaultSpec(site="worker_1/engine.recover", mode="crash",
+                          hit=1, count=99),
+        # Checkpoint 1 = the chunk prefix drained ahead of the delete;
+        # checkpoint 2 = the re-applied delete — crash right after it.
+        persist.FaultSpec(site="cluster.salvage", mode="crash", hit=2),
+    ])
+    with faults.installed(plan):
+        for i in range(300, 600, 100):
+            svc.ingest(data[i:i + 100])
+    assert plan.hits.get("cluster.salvage") == 2, \
+        "the mid-salvage coordinator crash never fired"
+    h = svc.health()
+    assert h["dead_workers"] == [1]
+    assert h["salvage_complete"] == []           # left unfinished
+    assert h["salvage_progress"].get(1, -1) >= 0
+    svc.close()
+    meta = json.loads((tmp_path / "cluster.json").read_text())
+    assert meta["dead_workers"] == [1]
+    assert int(meta["salvage_progress"]["1"]) >= 0
+
+    re = ClusterRACEService(cfg, num_workers=3, merge_every=4, failover=fo)
+    re.recover()                      # resumes + completes the salvage
+    h = re.health()
+    assert h["dead_workers"] == [1]
+    assert h["salvage_complete"] == [1]
+    assert h["salvage_progress"] == {}
+
+    single = RACEService(RACEServiceConfig(**_RACE_KW))
+    single.ingest(data)
+    single.delete(dels)
+    assert _states_equal(re.merged_state(), single.state)
+    assert re.count == single.count == len(data) - len(dels)
+    re.close()
+    single.close()

@@ -343,3 +343,38 @@ def test_cluster_recovery_bit_identity(tmp_path):
             np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
     np.testing.assert_array_equal(rec.query(qs), before)
     rec.close()
+
+
+def test_cluster_close_aggregates_all_worker_failures():
+    """A failing worker close must not mask the others: every worker is
+    still closed, ALL failures are reported in one exception naming the
+    failed workers, and a retry after the partial failure is clean
+    (idempotent close)."""
+    import pytest
+
+    svc = ClusterRACEService(RACEServiceConfig(**_RACE_KW), num_workers=3,
+                             merge_every=4)
+    svc.ingest(_data(n=100, seed=9))
+
+    failed_once = {}
+
+    def bomb(w):
+        orig = svc.workers[w].close
+
+        def c():
+            if w not in failed_once:
+                failed_once[w] = True
+                raise OSError(f"worker {w} fd leak")
+            orig()
+        svc.workers[w].close = c
+
+    bomb(0)
+    bomb(2)
+    with pytest.raises(RuntimeError) as ei:
+        svc.close()
+    msg = str(ei.value)
+    assert "worker_0" in msg and "worker_2" in msg and "2 worker(s)" in msg
+    assert isinstance(ei.value.__cause__, OSError)
+    assert svc.workers[1]._closed, "healthy worker must still be closed"
+    svc.close()                       # retry closes the stragglers cleanly
+    assert all(w._closed for w in svc.workers)

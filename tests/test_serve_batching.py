@@ -414,6 +414,47 @@ def test_batcher_close_no_drain_fails_futures():
             f.result(timeout=1)
 
 
+def test_close_no_drain_during_inline_tick_never_kills_scheduler():
+    """Regression: close(drain=False) can empty the queue while the
+    scheduler thread is parked (lock released) in its waits — the
+    busy-wait behind an inline tick, or the timed plan wait.  The loop
+    must re-check the queue and clamp its planned ``take`` afterwards;
+    popping the stale prefix used to raise IndexError and kill the
+    scheduler thread."""
+    errors = []
+    old_hook = threading.excepthook
+    threading.excepthook = lambda args: errors.append(args)
+    try:
+        gate = threading.Event()
+        entered = threading.Event()
+
+        def execute(reqs):
+            entered.set()
+            gate.wait(timeout=30)
+            return [r.shape[0] for _, r in reqs]
+
+        b = QueryBatcher(execute, max_batch=8, max_wait_us=0.0)
+        inline = threading.Thread(target=b.try_submit_inline, args=(
+            "q", np.zeros((1, 2), np.float32)))
+        inline.start()
+        entered.wait(timeout=30)         # inline tick holds the _busy slot
+        fut = b.submit("q", np.zeros((1, 2), np.float32))
+        time.sleep(0.05)                 # scheduler parks on the busy-wait
+        closer = threading.Thread(target=b.close, kwargs=dict(drain=False))
+        closer.start()
+        time.sleep(0.05)                 # close drains the queue, fails fut
+        gate.set()                       # release the inline tick
+        closer.join(timeout=30)
+        inline.join(timeout=30)
+        assert not closer.is_alive(), "close(drain=False) hung"
+        with pytest.raises(RuntimeError, match="closed before serving"):
+            fut.result(timeout=1)
+        assert not errors, (
+            f"scheduler thread died: {[e.exc_value for e in errors]}")
+    finally:
+        threading.excepthook = old_hook
+
+
 def test_execute_failure_fails_the_whole_tick_then_recovers():
     boom = {"on": True}
 
@@ -473,3 +514,49 @@ def test_cluster_one_merge_per_tick_not_per_client():
         f"{len(snaps)} merged snapshots for {st['ticks']} ticks / "
         f"{len(qs)} clients")
     svc.close(); ref.close()
+
+
+# ---------------------------------------------------------------------------
+# Inline fast path: lone sync clients skip the scheduler round-trip
+# ---------------------------------------------------------------------------
+
+def test_lone_sync_query_takes_inline_fast_path_bit_identical():
+    """In continuous-batching mode (max_wait_us=0) a sync query arriving
+    at an idle scheduler executes inline on the caller thread — no
+    enqueue/wakeup round-trip — and is bit-identical to both the queued
+    path and a direct (unbatched) service.  Async `submit_query` always
+    takes the queued path (its caller must not block on execute)."""
+    data = _data(seed=31)
+    qs = data[:7] + 0.01
+    direct = RACEService(RACEServiceConfig(**_RACE_KW))
+    svc = RACEService(RACEServiceConfig(**_RACE_KW, batch_queries=True,
+                                        max_wait_us=0.0))
+    direct.ingest(data)
+    svc.ingest(data)
+
+    for i in range(3):
+        np.testing.assert_array_equal(np.asarray(svc.query(qs)),
+                                      np.asarray(direct.query(qs)))
+    st = svc.batcher.stats()
+    assert st["inline_ticks"] == st["ticks"] == st["queries"] == 3, st
+
+    fut = svc.submit_query(qs)       # async: scheduler path, never inline
+    np.testing.assert_array_equal(np.asarray(fut.result()),
+                                  np.asarray(direct.query(qs)))
+    st = svc.batcher.stats()
+    assert st["queries"] == 4 and st["inline_ticks"] == 3, st
+    svc.close()
+    direct.close()
+
+
+def test_inline_fast_path_disabled_while_batch_open():
+    """With a wait budget (max_wait_us > 0) the inline path must stay off
+    — inlining would bypass open-batch coalescing; every sync query goes
+    through the scheduler."""
+    data = _data(n=200, seed=32)
+    svc = RACEService(RACEServiceConfig(**_RACE_KW, **_WAIT))
+    svc.ingest(data)
+    _run_threads([lambda: svc.query(data[:3])] * 3)
+    st = svc.batcher.stats()
+    assert st["inline_ticks"] == 0 and st["queries"] == 3, st
+    svc.close()
