@@ -1,0 +1,140 @@
+"""Multi-tenant fleet benchmarks: ONE vmapped stacked-state dispatch vs a
+per-tenant loop of single-sketch dispatches (repro.core.fleet).
+
+The tentpole claim: serving T small tenants from one stacked ``[T]``-leading
+pytree costs ~one big-sketch dispatch, while the per-tenant loop pays T
+dispatches of tiny kernels — so fleet pps holds roughly flat in T and the
+loop degrades ~linearly.  Measured here for RACE and SW-AKDE ingest (one
+mixed chunk, ``PER_TENANT`` points per tenant) and RACE mixed-batch
+queries (per-request tenant routing vs a per-tenant loop of
+`race_query_batch`).
+
+Both sides time the SAME committed math — the fleet paths are pinned
+bit-identical to the loop in tests/test_tenant_fleet.py — and the loop side
+reuses one jitted per-tenant function (equal-shaped blocks, one trace), so
+the measured gap is pure dispatch/launch amortization plus kernel fusion,
+not a trace-count artifact.
+
+Emits ``name,us_per_call,derived`` CSV rows; mirrored into the ``tenant``
+suite of ``BENCH_ingest.json`` (REPRO_BENCH_INGEST_OUT overrides; CI
+bench-smoke asserts the vmapped fleet beats the loop for T >= 8).
+REPRO_BENCH_TINY=1 shrinks T and the per-tenant chunk for CI.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fleet, lsh, race, swakde
+from .common import syn_ppp, timeit, update_bench_json
+
+TINY = os.environ.get("REPRO_BENCH_TINY") == "1"
+TS = (1, 8, 64) if TINY else (1, 8, 64, 256)
+# Points per tenant per mixed chunk.  Deliberately SMALL: the fleet's
+# target regime is many trickle-rate tenants, where the per-tenant loop is
+# dispatch-bound (T tiny kernel launches) — exactly what one vmapped
+# dispatch amortizes.  Larger per-tenant chunks shift both sides toward
+# compute-bound and the gap closes (see DESIGN.md §15).
+PER_TENANT = 16
+OUT_PATH = os.environ.get("REPRO_BENCH_INGEST_OUT", "BENCH_ingest.json")
+
+_json_rows: list[dict] = []
+
+
+def _emit(rows, name, sketch, variant, T, B, us, us_loop=None):
+    pps = B * 1e6 / us
+    derived = f"pps={pps:.0f};T={T}"
+    speedup = 1.0
+    if us_loop is not None:
+        speedup = us_loop / us
+        derived += f";speedup={speedup:.1f}"
+    rows.append((name, us, derived))
+    _json_rows.append({
+        "name": name, "sketch": sketch, "variant": variant, "tenants": T,
+        "points": B, "us_per_call": us, "pps": pps,
+        "us_per_point": us / B, "speedup": speedup,
+    })
+
+
+def _mixed(T, d, seed):
+    """One mixed chunk: PER_TENANT points per tenant, round-robin tags
+    (the routed sort sees maximal interleaving)."""
+    B = T * PER_TENANT
+    xs = jnp.asarray(syn_ppp(B, d, seed=seed))
+    tids = jnp.asarray(np.arange(B) % T, jnp.int32)
+    return B, xs, tids
+
+
+def bench_race_fleet(rows):
+    d, L, W, k = 32, 8, 64, 4
+    params = lsh.init_srp(jax.random.PRNGKey(0), d, L=L, k=k, n_buckets=W)
+    empty = race.race_init(L, W)
+
+    loop_fn = jax.jit(lambda st, x: race.race_commit_chunk(
+        st, race.race_prepare_chunk(params, x, W)))
+    fleet_fn = jax.jit(lambda st, x, t: fleet.race_fleet_ingest(
+        st, params, x, t))
+    qloop_fn = jax.jit(lambda st, q: race.race_query_batch(st, params, q))
+    qfleet_fn = jax.jit(lambda st, q, t: fleet.race_fleet_query(
+        st, params, q, t))
+
+    for T in TS:
+        B, xs, tids = _mixed(T, d, seed=T)
+        stacked = fleet.fleet_broadcast(empty, T)
+        per = [xs[np.asarray(tids) == t] for t in range(T)]
+
+        us_loop = timeit(lambda: [loop_fn(empty, p) for p in per],
+                         repeats=5)
+        _emit(rows, f"tenant.race.ingest.loop.T{T}", "race", "loop", T, B,
+              us_loop)
+        us = timeit(fleet_fn, stacked, xs, tids, repeats=5)
+        _emit(rows, f"tenant.race.ingest.fleet.T{T}", "race", "fleet", T, B,
+              us, us_loop)
+
+        # mixed-batch queries: per-request tenant rows, one fused call
+        filled = fleet_fn(stacked, xs, tids)
+        rows_t = [fleet.fleet_row(filled, t) for t in range(T)]
+        us_loop = timeit(
+            lambda: [qloop_fn(s, p) for s, p in zip(rows_t, per)],
+            repeats=5)
+        _emit(rows, f"tenant.race.query.loop.T{T}", "race", "query_loop",
+              T, B, us_loop)
+        us = timeit(qfleet_fn, filled, xs, tids, repeats=5)
+        _emit(rows, f"tenant.race.query.fleet.T{T}", "race", "query_fleet",
+              T, B, us, us_loop)
+
+
+def bench_swakde_fleet(rows):
+    d, L, W = 16, 8, 64
+    cfg = swakde.SWAKDEConfig(L=L, W=W, window=64 * PER_TENANT, eh_eps=0.2)
+    params = lsh.init_pstable(jax.random.PRNGKey(1), d, L, 2, 1.0, W)
+    empty = swakde.swakde_init(cfg)
+
+    loop_fn = jax.jit(lambda st, x: swakde.swakde_update_chunk(
+        st, params, x, cfg))
+    fleet_fn = jax.jit(lambda st, x, t: fleet.swakde_fleet_ingest(
+        st, params, x, t, cfg, PER_TENANT))
+
+    for T in TS:
+        B, xs, tids = _mixed(T, d, seed=100 + T)
+        stacked = fleet.fleet_broadcast(empty, T)
+        per = [xs[np.asarray(tids) == t] for t in range(T)]
+
+        us_loop = timeit(lambda: [loop_fn(empty, p) for p in per],
+                         repeats=5)
+        _emit(rows, f"tenant.swakde.ingest.loop.T{T}", "swakde", "loop", T,
+              B, us_loop)
+        us = timeit(fleet_fn, stacked, xs, tids, repeats=5)
+        _emit(rows, f"tenant.swakde.ingest.fleet.T{T}", "swakde", "fleet",
+              T, B, us, us_loop)
+
+
+def run(rows):
+    _json_rows.clear()
+    bench_race_fleet(rows)
+    bench_swakde_fleet(rows)
+    update_bench_json(OUT_PATH, "tenant", _json_rows, tiny=TINY,
+                      tenant_counts=list(TS), per_tenant=PER_TENANT)

@@ -2,11 +2,12 @@
 
 Prints ``name,us_per_call,derived`` CSV (assignment contract).
 Usage: PYTHONPATH=src python -m benchmarks.run
-       [--only ann|kde|kernels|ingest|pipeline|cluster|sharded|query|serve]
+       [--only ann|kde|kernels|ingest|pipeline|cluster|sharded|query|serve|tenant]
 (``query`` additionally writes BENCH_query.json — see bench_query.py;
-``ingest``, ``pipeline`` and ``cluster`` share BENCH_ingest.json — see
-bench_ingest.py, bench_pipeline.py and bench_cluster.py; ``serve`` writes
-BENCH_serve.json — the micro-batching load test, see bench_serve.py.)
+``ingest``, ``pipeline``, ``cluster`` and ``tenant`` share
+BENCH_ingest.json — see bench_ingest.py, bench_pipeline.py,
+bench_cluster.py and bench_tenant.py; ``serve`` writes BENCH_serve.json —
+the micro-batching load test, see bench_serve.py.)
 """
 from __future__ import annotations
 
@@ -19,18 +20,18 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     choices=[None, "ann", "kde", "kernels", "ingest",
                              "pipeline", "cluster", "sharded", "query",
-                             "serve"])
+                             "serve", "tenant"])
     args = ap.parse_args()
 
     from . import (bench_ann, bench_cluster, bench_ingest, bench_kde,
                    bench_kernels, bench_pipeline, bench_query, bench_serve,
-                   bench_sharded)
+                   bench_sharded, bench_tenant)
     rows: list[tuple] = []
     suites = {"ann": bench_ann.run, "kde": bench_kde.run,
               "kernels": bench_kernels.run, "ingest": bench_ingest.run,
               "pipeline": bench_pipeline.run, "cluster": bench_cluster.run,
               "sharded": bench_sharded.run, "query": bench_query.run,
-              "serve": bench_serve.run}
+              "serve": bench_serve.run, "tenant": bench_tenant.run}
     for name, fn in suites.items():
         if args.only and args.only != name:
             continue

@@ -1,2 +1,2 @@
 """Core paper algorithms: LSH families, EH, RACE, SW-AKDE, S-ANN, JL."""
-from . import eh, jl, lsh, race, sann, swakde, theory  # noqa: F401
+from . import eh, fleet, jl, lsh, race, sann, swakde, theory  # noqa: F401

@@ -188,13 +188,26 @@ def sann_insert(state: SANNState, params, x: jax.Array, key: jax.Array,
     )
 
 
+def sann_row_keys(key: jax.Array, n: int) -> jax.Array:
+    """Per-point key schedule for a chunk: ``fold_in(key, i)`` for i < n.
+
+    Unlike ``jax.random.split(key, n)`` (whose threefry counters pair
+    ``(i, i + n)``, so every key depends on the total ``n``), this schedule
+    is **prefix-stable**: ``sann_row_keys(key, m)[:b] == sann_row_keys(key,
+    b)`` for b <= m.  That is what lets the tenant-fleet path
+    (`core.fleet`) draw keep decisions for a cap-padded tenant block and
+    land bit-identical to the unpadded single-sketch chunk."""
+    return jax.vmap(lambda i: jax.random.fold_in(key, i))(
+        jnp.arange(n, dtype=jnp.int32))
+
+
 def sann_insert_stream(state: SANNState, params, xs: jax.Array, key: jax.Array,
                        cfg: SANNConfig) -> SANNState:
     """Per-point reference ingest of ``xs (T, d) float32``: one `lax.scan`
-    step per element under the per-point key schedule
-    ``jax.random.split(key, T)``.  `sann_insert_batch` is the production
-    path and is bit-identical to this one under the same key."""
-    keys = jax.random.split(key, xs.shape[0])
+    step per element under the per-point key schedule `sann_row_keys`.
+    `sann_insert_batch` is the production path and is bit-identical to this
+    one under the same key."""
+    keys = sann_row_keys(key, xs.shape[0])
 
     def step(s, xk):
         x, k = xk
@@ -230,23 +243,25 @@ def sann_prepare_chunk(params, xs: jax.Array, key: jax.Array,
     """Prepare phase for ``xs (B, d)``: the state-independent half of
     `sann_insert_batch` —
 
-      1. one Bernoulli draw per point from the split keys → ``keep`` mask,
-         exclusive prefix ranks, and the last-writer-wins mask for chunks
-         that lap the ring (``winner``: the kept points within one full lap
-         of the chunk's end — a pure function of ranks and capacity);
+      1. one Bernoulli draw per point from the `sann_row_keys` schedule →
+         ``keep`` mask, exclusive prefix ranks, and the last-writer-wins
+         mask for chunks that lap the ring (``winner``: the kept points
+         within one full lap of the chunk's end — a pure function of ranks
+         and capacity);
       2. one hash matmul for the whole chunk;
       3. the ring-buffer append structure: flatten (point, row) pairs, sort
          by (row, code) so each bucket's appends are a contiguous run in
          stream order, with per-bucket append counts and the cap-survivor
          mask (``rank >= seg_total - bucket_cap``).
     """
-    keys = jax.random.split(key, xs.shape[0])
+    keys = sann_row_keys(key, xs.shape[0])
     keep = jax.vmap(lambda k: jax.random.bernoulli(k, cfg.keep_prob))(keys)
     return sann_prepare_given_keep(params, xs, keep, cfg)
 
 
 def sann_prepare_given_keep(params, xs: jax.Array, keep: jax.Array,
-                            cfg: SANNConfig) -> SANNPrep:
+                            cfg: SANNConfig,
+                            codes: Optional[jax.Array] = None) -> SANNPrep:
     """`sann_prepare_chunk` with the keep mask supplied by the caller
     (everything after the Bernoulli draws: prefix ranks, last-writer mask,
     one hash matmul, the sort-by-(row, code) append structure).
@@ -255,6 +270,10 @@ def sann_prepare_given_keep(params, xs: jax.Array, keep: jax.Array,
     happened — `sann_merge` feeds it the stamp-interleaved union of two
     sketches' stored points (all pre-sampled, so ``keep`` = their validity
     mask), reusing the exact append/eviction machinery of the ingest path.
+
+    ``codes`` (optional, (B, L) int32) skips the hash matmul — the
+    tenant-fleet ingest (`core.fleet`) hashes one mixed multi-tenant chunk
+    once and routes per-tenant code blocks here.
     """
     B = xs.shape[0]
     cap = cfg.capacity
@@ -268,7 +287,8 @@ def sann_prepare_given_keep(params, xs: jax.Array, keep: jax.Array,
     winner = keep & (kept_rank >= n_kept - cap)
 
     # --- ring-buffer appends: sort-by-(row, code) segment structure --------
-    codes = lsh.hash_points(params, xs)                      # (B, L)
+    if codes is None:
+        codes = lsh.hash_points(params, xs)                  # (B, L)
     l_idx = jnp.broadcast_to(jnp.arange(cfg.L, dtype=jnp.int32), (B, cfg.L))
     bucket_key = l_idx * cfg.n_buckets + codes               # (B, L)
     n_flat = B * cfg.L
@@ -310,8 +330,8 @@ def sann_prepare_given_keep(params, xs: jax.Array, keep: jax.Array,
                     entry_win=entry_win, counts=counts)
 
 
-def sann_commit_chunk(state: SANNState, prep: SANNPrep,
-                      cfg: SANNConfig) -> SANNState:
+def sann_commit_chunk(state: SANNState, prep: SANNPrep, cfg: SANNConfig,
+                      count: Optional[jax.Array] = None) -> SANNState:
     """Commit phase: rebase a prepared chunk on the state's pointers and
     apply the dense updates — the state-sequential half of
     `sann_insert_batch`:
@@ -322,6 +342,14 @@ def sann_commit_chunk(state: SANNState, prep: SANNPrep,
          tombstoned in one masked pass (the batched per-insert eviction);
       3. ring-buffer appends land at (table_ptr + prepared rank) % cap via
          one segment scatter; table_ptr advances by the prepared counts.
+
+    ``count`` (optional, traced) overrides the stream-clock advance: the
+    chunk counts as ``count`` arrivals instead of its static row count B.
+    Used by the tenant-fleet path, whose per-tenant blocks are padded to a
+    fixed cap with never-kept rows *after* the real prefix — the pad rows
+    write nothing (keep = False ⇒ winner = False) and must not advance
+    ``n_seen``, while the real prefix keeps the exact per-row arrival
+    stamps of the unpadded chunk.
     """
     B = prep.xs.shape[0]
     cap = cfg.capacity
@@ -361,7 +389,7 @@ def sann_commit_chunk(state: SANNState, prep: SANNPrep,
     return SANNState(
         points=points, valid=valid,
         write_ptr=(state.write_ptr + prep.n_kept) % cap,
-        n_seen=saturating_add(state.n_seen, B),
+        n_seen=saturating_add(state.n_seen, B if count is None else count),
         n_stored=state.n_stored + newly.sum(),
         tables=tables, table_ptr=table_ptr, stamps=stamps,
     )
@@ -372,7 +400,7 @@ def sann_insert_batch(state: SANNState, params, xs: jax.Array, key: jax.Array,
     """Batched ingest of a whole chunk ``xs (B, d)`` in O(1) XLA steps.
 
     Bit-identical to ``sann_insert_stream`` under the same key (the chunk
-    shares the per-point ``jax.random.split`` schedule).  Composition of
+    shares the per-point `sann_row_keys` schedule).  Composition of
     `sann_prepare_chunk` (keep decisions + hashing + sort-by-(row, code)
     append structure, pure) and `sann_commit_chunk` (pointer rebase + dense
     scatters, sequential) — the same ops, fused under one jit when called

@@ -35,7 +35,7 @@ Ingest paths:
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -129,15 +129,35 @@ class SWAKDEPrep(NamedTuple):
     seg_first: jax.Array  # (L, SW) int32 — first sorted position of segment
 
 
-def swakde_prepare_chunk(params, xs: jax.Array,
-                         cfg: SWAKDEConfig) -> SWAKDEPrep:
+def swakde_prepare_chunk(params, xs: jax.Array, cfg: SWAKDEConfig,
+                         mask: Optional[jax.Array] = None) -> SWAKDEPrep:
     """Prepare phase for ``xs (C, d)``: one hash matmul, then per row a
     stable sort of the chunk's codes into ≤ min(C, W) cell segments (each
     hit cell's points form a contiguous run in stream order).  All of it is
-    state-independent — the embarrassingly parallel half of an update."""
-    C = xs.shape[0]
+    state-independent — the embarrassingly parallel half of an update.
+
+    ``mask`` (optional, (C,) bool) drops rows from the chunk: masked-out
+    rows are hashed to the sentinel code ``W`` — they sort last, land in a
+    zero-length sentinel segment, and never touch the grid.  For the result
+    to be bit-identical to preparing the compacted chunk, the live rows
+    must form a **prefix** (``mask = arange(C) < count``): the stable sort
+    then assigns live rows exactly the offsets the unpadded chunk would
+    get.  This is the tenant-fleet padding contract (`core.fleet`); pair it
+    with ``swakde_commit_chunk(..., count=count)``."""
+    return swakde_prepare_from_codes(lsh.hash_points(params, xs), cfg, mask)
+
+
+def swakde_prepare_from_codes(codes: jax.Array, cfg: SWAKDEConfig,
+                              mask: Optional[jax.Array] = None) -> SWAKDEPrep:
+    """`swakde_prepare_chunk` with the hash codes ``(C, L)`` supplied by the
+    caller — the sort-into-segments half alone.  The tenant-routed fleet
+    ingest (`core.fleet`) hashes one mixed multi-tenant chunk with the
+    shared params in a single matmul and feeds each tenant's routed code
+    block through this entry point."""
+    C = codes.shape[0]
     SW = min(C, cfg.W)                       # max distinct cells hit per row
-    codes = lsh.hash_points(params, xs)      # (C, L)
+    if mask is not None:
+        codes = jnp.where(mask[:, None], codes, jnp.int32(cfg.W))
     pos = jnp.arange(C, dtype=jnp.int32)
 
     def row_prep(codes_l):
@@ -150,6 +170,10 @@ def swakde_prepare_chunk(params, xs: jax.Array,
             sc, mode="drop")
         seg_first = jnp.full((SW,), C, jnp.int32).at[seg_id].min(
             pos, mode="drop")
+        # Sentinel segments (unused slots *and* the masked-row segment)
+        # carry code W and must stay empty so the commit never drains them;
+        # real codes are < W, so this is a no-op without a mask.
+        seg_len = jnp.where(seg_code == cfg.W, 0, seg_len)
         return order.astype(jnp.int32), seg_code, seg_len, seg_first
 
     order, seg_code, seg_len, seg_first = jax.vmap(row_prep)(codes.T)
@@ -158,7 +182,8 @@ def swakde_prepare_chunk(params, xs: jax.Array,
 
 
 def swakde_commit_chunk(state: SWAKDEState, prep: SWAKDEPrep,
-                        cfg: SWAKDEConfig) -> SWAKDEState:
+                        cfg: SWAKDEConfig,
+                        count: Optional[jax.Array] = None) -> SWAKDEState:
     """Commit phase: fold a prepared chunk into the EH grid — the
     state-sequential half, as closed-form segment-reduce passes
     (`kernels.ops.swakde_segment_pass`, DESIGN.md §12) instead of a
@@ -169,7 +194,13 @@ def swakde_commit_chunk(state: SWAKDEState, prep: SWAKDEPrep,
     not O(max per-cell hit count).  Bit-identical to the per-point path
     (tests/test_batched_ingest.py, tests/test_two_phase.py), including
     dead ring slots.  The (L, W, levels, slots) grid is still read and
-    written once per chunk."""
+    written once per chunk.
+
+    ``count`` (optional, traced) overrides the clock advance: the chunk
+    counts as ``count`` stream steps instead of its static row count C.
+    Pair it with a prefix ``mask`` on `swakde_prepare_chunk` — masked
+    chunks fold only their live prefix, and the clock must advance by the
+    live count (the tenant-fleet padding contract, `core.fleet`)."""
     eh = cfg.eh_config()
     C = prep.order.shape[1]
 
@@ -196,7 +227,8 @@ def swakde_commit_chunk(state: SWAKDEState, prep: SWAKDEPrep,
         cond, body, (cell_ts, cell_num, done))
     ts = state.ts.at[rows, prep.seg_code].set(cell_ts, mode="drop")
     num = state.num.at[rows, prep.seg_code].set(cell_num, mode="drop")
-    return SWAKDEState(ts=ts, num=num, t=saturating_add(state.t, C))
+    return SWAKDEState(ts=ts, num=num,
+                       t=saturating_add(state.t, C if count is None else count))
 
 
 def swakde_update_chunk(state: SWAKDEState, params, xs: jax.Array,

@@ -39,6 +39,9 @@ DEFAULT_RULES = {
     # without that axis (the training meshes above) they stay replicated.
     "sketch_rows": "shard",
     "sketch_tables": "shard",
+    # stacked tenant-fleet states (repro.core.fleet): the leading [T]
+    # tenant axis splits across the same 1-D "shard" mesh.
+    "tenants": "shard",
 }
 
 

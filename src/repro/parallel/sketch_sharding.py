@@ -57,7 +57,7 @@ import numpy as np
 from jax import lax
 from jax.sharding import Mesh, NamedSharding
 
-from repro.core import lsh, race, sann, swakde
+from repro.core import fleet, lsh, race, sann, swakde
 from repro.core.race import race_merge  # noqa: F401  (re-export: merge API)
 from repro.core.sann import sann_merge  # noqa: F401  (re-export)
 from repro.core.swakde import swakde_merge  # noqa: F401  (re-export)
@@ -653,3 +653,157 @@ def sharded_sann_query_topk_batch(state: sann.SANNState, params,
         in_specs=(_sann_state_specs(ctx), _param_specs(params, ctx),
                   ctx.spec()),
         out_specs=(ctx.spec(), ctx.spec()))(state, params, qs)
+
+
+# ---------------------------------------------------------------------------
+# Tenant fleets (repro.core.fleet): shard the leading [T] tenant axis
+# ---------------------------------------------------------------------------
+#
+# Orthogonal to the row/table sharding above: a stacked fleet state keeps
+# every sketch's (L, ...) block whole and splits the *tenant* axis across
+# the mesh instead — each shard owns T/num_shards complete sketches and the
+# fleet's single set of LSH params is replicated (hash the whole mixed
+# chunk once per shard).  Routing is local: each shard remaps global tenant
+# slots to its own block (slots owned elsewhere become -1, which the fleet
+# ingest drops), so a mixed chunk commits with one vmapped dispatch per
+# shard and NO cross-device traffic on the ingest path.  Queries read each
+# request's row block locally, zero the rows the shard does not own, and
+# psum — exactly one shard contributes each request's values, so adding the
+# other shards' zeros is bit-exact.
+
+def _fleet_state_specs(ctx: ShardingCtx, state_like):
+    """Spec pytree for a stacked fleet: every leaf splits its leading
+    tenant axis."""
+    return jax.tree.map(
+        lambda x: ctx.spec("tenants", *([None] * (jnp.ndim(x) - 1))),
+        state_like)
+
+
+def _param_replicated_specs(params, ctx: ShardingCtx):
+    r = ctx.spec()
+    if isinstance(params, lsh.SRPParams):
+        return dataclasses.replace(params, proj=r, mix=r)
+    return dataclasses.replace(params, proj=r, bias=r, mix=r)
+
+
+def _check_tenants(T: int, n: int) -> int:
+    if T % n:
+        raise ValueError(f"fleet: T={T} not divisible by num_shards={n}")
+    return T // n
+
+
+def shard_fleet(stacked, params, ctx: ShardingCtx):
+    """Place a stacked fleet onto the mesh (tenant axis split, params
+    replicated)."""
+    if ctx.mesh is None:
+        return stacked, params
+    return (_put(stacked, _fleet_state_specs(ctx, stacked), ctx.mesh),
+            _put(params, _param_replicated_specs(params, ctx), ctx.mesh))
+
+
+def _local_tids(tids: jax.Array, T_local: int) -> tuple[jax.Array, jax.Array]:
+    """Remap global tenant slots to this shard's block: slots outside
+    ``[shard*T_local, (shard+1)*T_local)`` become -1 (dropped/zeroed)."""
+    sh = lax.axis_index(SHARD_AXIS)
+    local = tids - sh * T_local
+    owned = (local >= 0) & (local < T_local)
+    return jnp.where(owned, local, -1), owned
+
+
+def sharded_race_fleet_ingest(stacked: race.RACEState, params, xs: jax.Array,
+                              tids: jax.Array,
+                              ctx: ShardingCtx) -> race.RACEState:
+    """Tenant-sharded fleet ingest: the mixed chunk is replicated, each
+    shard scatters only the points of tenants it owns.  Bit-identical to
+    `fleet.race_fleet_ingest` block-for-block."""
+    if ctx.mesh is None:
+        return fleet.race_fleet_ingest(stacked, params, xs, tids)
+    Tl = _check_tenants(stacked.counts.shape[0], _num_shards(ctx))
+
+    def body(st, p, xs, tids):
+        local, _ = _local_tids(tids, Tl)
+        return fleet.race_fleet_ingest(st, p, xs, local)
+
+    return _smap(
+        body, ctx.mesh,
+        in_specs=(_fleet_state_specs(ctx, stacked),
+                  _param_replicated_specs(params, ctx), ctx.spec(),
+                  ctx.spec()),
+        out_specs=_fleet_state_specs(ctx, stacked))(stacked, params, xs,
+                                                    tids)
+
+
+def sharded_race_fleet_query(stacked: race.RACEState, params, qs: jax.Array,
+                             tids: jax.Array, ctx: ShardingCtx,
+                             median_of_means: int = 0) -> jax.Array:
+    """Tenant-sharded fleet query: each request's (L,) counter reads come
+    from the one shard owning its tenant; the psum over zeroed non-owner
+    rows is bit-exact, then the single-device estimator runs replicated."""
+    if ctx.mesh is None:
+        return fleet.race_fleet_query(stacked, params, qs, tids,
+                                      median_of_means)
+    Tl = _check_tenants(stacked.counts.shape[0], _num_shards(ctx))
+
+    def body(st, p, qs, tids):
+        local, owned = _local_tids(tids, Tl)
+        vals = fleet.race_fleet_row_reads(st, p, qs,
+                                          jnp.clip(local, 0, Tl - 1))
+        vals = lax.psum(jnp.where(owned[:, None], vals, 0.0), SHARD_AXIS)
+        return race.estimate_from_vals(vals, median_of_means)
+
+    return _smap(
+        body, ctx.mesh,
+        in_specs=(_fleet_state_specs(ctx, stacked),
+                  _param_replicated_specs(params, ctx), ctx.spec(),
+                  ctx.spec()),
+        out_specs=ctx.spec())(stacked, params, qs, tids)
+
+
+def sharded_swakde_fleet_ingest(stacked: swakde.SWAKDEState, params,
+                                xs: jax.Array, tids: jax.Array,
+                                cfg: swakde.SWAKDEConfig, cap: int,
+                                ctx: ShardingCtx) -> swakde.SWAKDEState:
+    """Tenant-sharded SW-AKDE fleet ingest: each shard routes the mixed
+    chunk against its own tenant block (foreign tenants drop to the
+    sentinel) and runs the vmapped two-phase commit locally."""
+    if ctx.mesh is None:
+        return fleet.swakde_fleet_ingest(stacked, params, xs, tids, cfg, cap)
+    Tl = _check_tenants(stacked.t.shape[0], _num_shards(ctx))
+
+    def body(st, p, xs, tids):
+        local, _ = _local_tids(tids, Tl)
+        return fleet.swakde_fleet_ingest(st, p, xs, local, cfg, cap)
+
+    return _smap(
+        body, ctx.mesh,
+        in_specs=(_fleet_state_specs(ctx, stacked),
+                  _param_replicated_specs(params, ctx), ctx.spec(),
+                  ctx.spec()),
+        out_specs=_fleet_state_specs(ctx, stacked))(stacked, params, xs,
+                                                    tids)
+
+
+def sharded_swakde_fleet_query(stacked: swakde.SWAKDEState, params,
+                               qs: jax.Array, tids: jax.Array,
+                               cfg: swakde.SWAKDEConfig,
+                               ctx: ShardingCtx) -> jax.Array:
+    """Tenant-sharded SW-AKDE fleet query: per-request EH row estimates
+    from the owning shard, zero elsewhere, psum, mean — bit-identical to
+    `fleet.swakde_fleet_query`."""
+    if ctx.mesh is None:
+        return fleet.swakde_fleet_query(stacked, params, qs, tids, cfg)
+    Tl = _check_tenants(stacked.t.shape[0], _num_shards(ctx))
+
+    def body(st, p, qs, tids):
+        local, owned = _local_tids(tids, Tl)
+        est = fleet.swakde_fleet_row_estimates(
+            st, p, qs, jnp.clip(local, 0, Tl - 1), cfg)
+        est = lax.psum(jnp.where(owned[:, None], est, 0.0), SHARD_AXIS)
+        return est.mean(-1)
+
+    return _smap(
+        body, ctx.mesh,
+        in_specs=(_fleet_state_specs(ctx, stacked),
+                  _param_replicated_specs(params, ctx), ctx.spec(),
+                  ctx.spec()),
+        out_specs=ctx.spec())(stacked, params, qs, tids)

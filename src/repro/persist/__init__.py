@@ -20,7 +20,8 @@ import dataclasses
 
 from . import faults, snapshot, wal  # noqa: F401
 from .faults import FaultError, FaultPlan, FaultSpec, InjectedIOError  # noqa: F401
-from .wal import KIND_CHUNK, KIND_DELETE, WALRecord, WriteAheadLog  # noqa: F401
+from .wal import (KIND_CHUNK, KIND_CLOCK, KIND_DELETE,  # noqa: F401
+                  KIND_TENANT_CHUNK, WALRecord, WriteAheadLog)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -49,6 +49,12 @@ _HEADER = struct.Struct("<IQBII")
 # mutation kinds (e.g. RetrievalService's delete-by-value).
 KIND_CHUNK = 1
 KIND_DELETE = 2
+# Tenant-tagged mixed chunk (serve.tenant_fleet.TenantFleet): body carries
+# the chunk plus its per-point tenant ids — same framing, one extra array.
+KIND_TENANT_CHUNK = 3
+# Coordinator-assigned logical clock advance (serve.kde_service /
+# serve.cluster global-clock option): body carries the target clock.
+KIND_CLOCK = 4
 
 
 class WALRecord(NamedTuple):

@@ -769,8 +769,7 @@ class ClusterService(_BatchedQueryMixin):
             if self._merged_versions == vers and self._merged_epoch == epoch:
                 return self._merged, self._merged_meta, vers
             self._with_retries(None, lambda: faults.fire("cluster.merge"))
-            merged = (states[0] if len(states) == 1
-                      else jax.block_until_ready(self._merge_fn(states)))
+            merged = self._combine(states, live)
             meta = dict(self._meta(states) or {})
             meta.update(workers_live=len(live),
                         workers_total=len(self.workers),
@@ -815,6 +814,17 @@ class ClusterService(_BatchedQueryMixin):
     def merged_state(self):
         """The merged sketch alone (see `merged_snapshot`)."""
         return self.merged_snapshot()[0]
+
+    def _combine(self, states, live):
+        """Subclass hook: fold the live workers' snapshot states into one
+        merged state (called under ``_mlock`` from `_refresh`).  Default:
+        the full ``merge_states`` fold, with the single-worker
+        short-circuit.  Overrides must return a result bit-identical to
+        the full fold (`ClusterRACEService._combine` folds only counter
+        deltas)."""
+        if len(states) == 1:
+            return states[0]
+        return jax.block_until_ready(self._merge_fn(states))
 
     def _meta(self, states) -> Optional[dict]:
         """Subclass hook: scalars to capture alongside a merge (same
@@ -943,11 +953,21 @@ class ClusterKDEService(ClusterService):
     coordinator.  Worker windows tick per local point — configure
     ``window`` as the per-worker span (≈ global window / K for a balanced
     partition); estimates are bit-identical to one engine until window
-    expiry, estimate-level after (DESIGN.md §11.5)."""
+    expiry, estimate-level after (DESIGN.md §11.5).
+
+    ``global_clock=True`` switches the windows to *stream* time: the
+    coordinator keeps a logical clock of total points submitted and, after
+    every ingest call, folds it into each live worker
+    (`KDEService.advance_clock` — max-monotone, WAL-logged).  Configure
+    ``window`` as the full global span; expiry then happens at the
+    coordinator's ingest-call granularity (points inside one call still
+    tick worker-locally), so per-call streams match a single global-window
+    engine exactly (tests/test_cluster.py)."""
 
     def __init__(self, cfg: KDEServiceConfig, num_workers: int = 2,
                  merge_every: int = 8,
-                 failover: Optional[FailoverConfig] = None):
+                 failover: Optional[FailoverConfig] = None,
+                 global_clock: bool = False):
         super().__init__(
             lambda w: KDEService(_worker_cfg(cfg, w, batch_queries=False)),
             num_workers, merge_every,
@@ -960,6 +980,9 @@ class ClusterKDEService(ClusterService):
             max_batch=cfg.max_batch, max_wait_us=cfg.max_wait_us,
             failover=failover)
         self.cfg = cfg
+        self.global_clock = bool(global_clock)
+        self._global_steps = 0
+        self._clock_local = threading.local()   # re-entrancy guard
         # cache_grid over the merged sketch: the (L, W) grid-estimate table
         # is pure given the merged state, so it is cached per merged
         # versions tuple (same invalidation clock as the merge cache).
@@ -967,6 +990,13 @@ class ClusterKDEService(ClusterService):
         self._grid_versions: Optional[tuple] = None
 
     def _meta(self, states):
+        if self.global_clock:
+            # All live clocks were folded to the coordinator's logical
+            # clock after the last ingest, so the workers share ONE stream
+            # clock (= the max over this snapshot set) and their window
+            # coverages overlap instead of summing.
+            t = max((int(s.t) for s in states), default=0)
+            return {"coverage": min(t, self.cfg.window)}
         # Captured from the *same* snapshots the merged state came from:
         # the density denominator is the number of points the merged grid
         # can still see — each worker contributes its last
@@ -975,6 +1005,79 @@ class ClusterKDEService(ClusterService):
         # by up to K once the windows saturate.
         return {"coverage": int(sum(min(int(s.t), self.cfg.window)
                                     for s in states))}
+
+    # --- global-clock plumbing ---------------------------------------------
+
+    def ingest_async(self, data) -> None:
+        if not self.global_clock:
+            return super().ingest_async(data)
+        xs = np.asarray(data, np.float32)
+        # Failover hand-offs re-enter ingest_async with rows that were
+        # already counted (a dead worker's unsubmitted tail, a salvage
+        # batch replayed mid-call): only the outermost call advances the
+        # logical clock, and only by its own row count.
+        outer = not getattr(self._clock_local, "active", False)
+        if outer:
+            self._clock_local.active = True
+            self._global_steps += int(xs.shape[0])
+        try:
+            super().ingest_async(xs)
+        finally:
+            if outer:
+                self._clock_local.active = False
+        if outer:
+            self._advance_clocks(self._global_steps)
+
+    def _advance_clocks(self, target: int) -> None:
+        """Fold the coordinator clock into every live worker.  The advance
+        is max-monotone and WAL-logged per worker (``KIND_CLOCK``), so
+        retries, failover recoveries and salvage replays are idempotent."""
+        for w in range(len(self.workers)):
+            if w in self._dead:
+                continue
+            try:
+                self._with_retries(
+                    w, lambda w=w: self.workers[w].advance_clock(target))
+            except BaseException as e:
+                if self._failover is None:
+                    raise
+                self._handle_worker_failure(w, e)
+        self._maybe_merge()
+
+    def recover(self) -> int:
+        n = super().recover()
+        if self.global_clock:
+            # Every live worker replayed its clock advances; the newest
+            # one IS the coordinator clock at the last durable ingest.
+            self._global_steps = max(
+                (self.workers[w].steps for w in range(len(self.workers))
+                 if w not in self._dead), default=0)
+        return n
+
+    def _salvage(self, w: int) -> bool:
+        if not self.global_clock:
+            return super()._salvage(w)
+        # Salvaged rows replay a dead worker's log — the coordinator clock
+        # counted them when they were first submitted, so the re-ingest
+        # must not advance it again.
+        outer = not getattr(self._clock_local, "active", False)
+        if outer:
+            self._clock_local.active = True
+        try:
+            return super()._salvage(w)
+        finally:
+            if outer:
+                self._clock_local.active = False
+
+    def _salvage_delete(self, kind: int, arrays: dict) -> None:
+        if kind != persist.KIND_CLOCK:
+            return super()._salvage_delete(kind, arrays)
+        # A dead worker's logged clock advance: every survivor received
+        # the same coordinator advance already, so re-folding it is a
+        # max-monotone no-op — applied anyway for the resume case where a
+        # survivor recovered from an older snapshot.
+        t = int(np.asarray(arrays["t"]))
+        self._advance_clocks(t)
 
     def _merged_grid(self, st, vers):
         """The (L, W) grid-estimate table of merged state ``st`` (computed
@@ -1031,9 +1134,14 @@ class ClusterKDEService(ClusterService):
     @property
     def steps(self) -> int:
         """Stream steps consumed across the live workers (a dead worker's
-        salvaged steps were re-ingested by the survivors)."""
-        return sum(self.workers[w].steps for w in range(len(self.workers))
-                   if w not in self._dead)
+        salvaged steps were re-ingested by the survivors).  Under
+        ``global_clock`` every live clock equals the coordinator's, so the
+        stream length is their max, not their sum."""
+        live = [self.workers[w].steps for w in range(len(self.workers))
+                if w not in self._dead]
+        if self.global_clock:
+            return max(live, default=0)
+        return sum(live)
 
 
 class ClusterRACEService(ClusterService):
@@ -1053,6 +1161,52 @@ class ClusterRACEService(ClusterService):
             max_batch=cfg.max_batch, max_wait_us=cfg.max_wait_us,
             failover=failover)
         self.cfg = cfg
+        # Delta-merge base (under _mlock): the previous merged counters
+        # plus each live worker's counters at that merge, keyed by
+        # (live set, partition epoch) so any death/re-partition falls
+        # back to a full fold.
+        self._delta_base = None
+        self._delta_fn = jax.jit(self._delta_merge)
+        self._counters["delta_merges"] = 0
+        self._counters["full_merges"] = 0
+
+    @staticmethod
+    def _delta_merge(prev_merged_counts, prev_counts, states):
+        """``prev_merged + Σ_w (counts_now_w - counts_then_w)``.
+
+        int32 addition is associative/commutative (wrapping included), so
+        this equals the full ``reduce(race_merge, states)`` counter fold
+        bit-exactly while moving only the *delta* arithmetic; ``n``
+        saturates, so it is re-folded from the current scalars directly
+        (O(workers) scalar work)."""
+        counts = prev_merged_counts
+        for prev, st in zip(prev_counts, states):
+            counts = counts + (st.counts - prev)
+        n = functools.reduce(race.saturating_add, [st.n for st in states])
+        return race.RACEState(counts=counts, n=n)
+
+    def _combine(self, states, live):
+        """Incremental coordinator fold (carried-forward PR 5 item): after
+        the first full merge, each refresh folds only the counter delta
+        each worker accumulated since the last merge.  Falls back to the
+        full fold on the first merge, a live-set change, or a partition-
+        epoch bump (death/re-partition invalidates the base).  Pinned
+        bit-exact against the full fold in tests/test_cluster.py."""
+        if len(states) == 1:
+            self._delta_base = None
+            return states[0]
+        key = (tuple(live), self._epoch)
+        base = self._delta_base
+        if base is not None and base[0] == key:
+            merged = jax.block_until_ready(
+                self._delta_fn(base[1], base[2], states))
+            self._counters["delta_merges"] += 1
+        else:
+            merged = jax.block_until_ready(self._merge_fn(states))
+            self._counters["full_merges"] += 1
+        self._delta_base = (key, merged.counts,
+                            [st.counts for st in states])
+        return merged
 
     _default_query_kind = "kde"
 

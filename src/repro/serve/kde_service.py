@@ -39,6 +39,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import persist
 from repro.core import lsh, swakde
 from repro.parallel import sketch_sharding as ss
 from repro.serve.engine import SketchEngine, durability_from
@@ -170,7 +171,33 @@ class KDEService(SketchEngine):
             return state
         return ss.shard_swakde(state, self.params, self._ctx)[0]
 
+    def _apply_wal_record(self, kind: int, arrays: dict) -> None:
+        if kind == persist.KIND_CLOCK:
+            t = int(np.asarray(arrays["t"]))
+            self._mutate_state(
+                lambda st: st._replace(t=jnp.maximum(st.t, jnp.int32(t))))
+            return
+        super()._apply_wal_record(kind, arrays)
+
     # --- serving API -------------------------------------------------------
+
+    def advance_clock(self, target: int) -> None:
+        """Advance the sliding-window clock to ``max(t, target)`` without
+        ingesting points — expiring EH buckets exactly as if ``target - t``
+        empty stream steps had passed.
+
+        This is the coordinator-assigned *global clock* option for cluster
+        SW-AKDE (`repro.serve.cluster.ClusterKDEService(global_clock=True)`,
+        DESIGN.md §10): each worker's local clock counts only its own
+        partition's arrivals, so windows expire in partition-local time;
+        folding in the coordinator's logical clock after every ingest makes
+        every worker expire in *stream* time instead.  Pending async chunks
+        flush first; when durable the advance is WAL-logged
+        (``KIND_CLOCK``) and replays bit-identically on ``recover()``."""
+        t = int(target)
+        self._durable_mutate(
+            persist.KIND_CLOCK, {"t": np.asarray(t, np.int32)},
+            lambda st: st._replace(t=jnp.maximum(st.t, jnp.int32(t))))
 
     @property
     def num_shards(self) -> int:

@@ -1,0 +1,535 @@
+"""TenantFleet: many small sketches behind one stacked device state.
+
+The core tenant-axis machinery (`repro.core.fleet`) turns T independent
+sketches into ONE stacked pytree with vmapped ingest/query — this module
+adds the operational layer that makes "T" elastic:
+
+  * **LRU hot-set** — at most ``hot_slots`` tenants live in the stacked
+    device pytree at once (slot map tenant_id → row).  Touching a tenant
+    (ingest or query) activates it: a free slot if any, else the
+    least-recently-used *unpinned* tenant is evicted — its row is pulled
+    to host and spilled through the existing `repro.persist.snapshot`
+    layer (``<dir>/tenants/t_<id>/step_<seq>``) — and the activated
+    tenant's state is recovered on demand (newest spill, else empty).
+  * **Mixed-chunk ingest** — ``ingest(xs, tids)`` takes one chunk tagged
+    with per-point tenant ids.  Chunks whose *distinct* tenant set exceeds
+    ``hot_slots`` are split (in stream order) into sub-chunks that fit;
+    each sub-chunk is one operation: one WAL record, one routed vmapped
+    commit (`core.fleet`), one device dispatch.
+  * **Durability** — with ``snapshot_dir`` set, every operation appends a
+    `persist.KIND_TENANT_CHUNK` WAL record (the engine's chunk framing
+    plus one extra ``tids`` array) before committing, and the hot stacked
+    state + slot/LRU maps are snapshotted every ``snapshot_every``
+    operations.  ``recover()`` = newest fleet snapshot + WAL-tail replay
+    through this same ingest path.
+
+Determinism contract (what makes recovery bit-identical): every
+state-changing decision in the ingest path — chunk splitting, slot
+assignment, LRU victims, spill contents, S-ANN per-tenant chunk keys
+(``fold_in(fold_in(base, seq), tenant_id)``) — is a pure function of the
+WAL op sequence.  Queries may *also* activate/evict tenants (they are not
+WAL-logged), which can leave the hot-set membership and spill files ahead
+of what a replay reproduces; that is safe because a spill written at
+global seq ``s`` always holds exactly the tenant's state after its
+WAL-recorded ingests with seq <= ``s`` (per-tenant history is
+WAL-determined), and activation always loads the newest spill with seq <=
+the current op seq — so replayed activations can never observe a
+"future" or torn tenant state (DESIGN.md §15.3).
+"""
+from __future__ import annotations
+
+import dataclasses
+import pathlib
+import threading
+from collections import OrderedDict
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import persist
+from repro.core import fleet, lsh, race, sann, swakde
+
+_KINDS = ("race", "swakde", "sann")
+
+
+@dataclasses.dataclass(frozen=True)
+class TenantFleetConfig:
+    """Knobs for a `TenantFleet`.
+
+    ``kind`` selects the sketch family; the LSH family, empty row and
+    ingest/query paths follow.  ``hot_slots`` is the stacked-state tenant
+    capacity T (device memory = T x one sketch); every sketch in the fleet
+    shares one set of LSH params derived from ``seed``.  The sketch
+    hyper-parameters mirror the single-sketch service configs: ``L / W /
+    k`` for RACE and SW-AKDE (+ ``window`` / ``eh_eps`` / ``w`` /
+    ``heavy_cell_cap`` for SW-AKDE), and the `core.sann.SANNConfig`
+    fields for S-ANN.  ``snapshot_dir`` opts into WAL + snapshot
+    durability exactly like the engine services."""
+    kind: str
+    dim: int
+    hot_slots: int = 8
+    seed: int = 0
+    # RACE / SW-AKDE
+    L: Optional[int] = None
+    W: int = 64
+    k: Optional[int] = None
+    w: float = 1.0
+    window: int = 1024
+    eh_eps: float = 0.2
+    heavy_cell_cap: int = 0
+    # S-ANN
+    n_max: int = 1024
+    eta: float = 0.0
+    r: float = 0.5
+    c: float = 2.0
+    # durability
+    snapshot_dir: Optional[str] = None
+    snapshot_every: int = 64
+    wal_fsync: bool = False
+
+    def __post_init__(self):
+        if self.kind not in _KINDS:
+            raise ValueError(f"kind={self.kind!r}: expected one of {_KINDS}")
+        if self.hot_slots < 1:
+            raise ValueError(f"hot_slots={self.hot_slots} (< 1)")
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(0, int(n) - 1).bit_length() if n > 1 else 1
+
+
+class TenantFleet:
+    """Elastic multi-tenant sketch service over one stacked device state.
+
+    Synchronous by design: the perf win of the fleet is *dispatch
+    amortization* (one vmapped commit instead of T), not pipelining —
+    layering the engine's two-phase prepare thread per tenant back on top
+    would reintroduce exactly the per-tenant overhead this removes.  All
+    public methods are thread-safe under one lock."""
+
+    def __init__(self, cfg: TenantFleetConfig):
+        self.cfg = cfg
+        self._lock = threading.RLock()
+        key = jax.random.PRNGKey(cfg.seed)
+        self._base_key = jax.random.fold_in(key, 1)  # per-op S-ANN keys
+        T = cfg.hot_slots
+        if cfg.kind == "race":
+            L = cfg.L or 8
+            k = cfg.k or 4
+            self._params = lsh.init_srp(
+                jax.random.fold_in(key, 0), cfg.dim, L, k, cfg.W)
+            self._empty = race.race_init(L, cfg.W)
+        elif cfg.kind == "swakde":
+            L = cfg.L or 8
+            k = cfg.k or 2
+            self._scfg = swakde.SWAKDEConfig(
+                L=L, W=cfg.W, window=cfg.window, eh_eps=cfg.eh_eps,
+                heavy_cell_cap=cfg.heavy_cell_cap)
+            self._params = lsh.init_pstable(
+                jax.random.fold_in(key, 0), cfg.dim, L, k, cfg.w, cfg.W)
+            self._empty = swakde.swakde_init(self._scfg)
+        else:
+            base = sann.SANNConfig(
+                dim=cfg.dim, n_max=cfg.n_max, eta=cfg.eta, r=cfg.r,
+                c=cfg.c, w=cfg.w, L=cfg.L, k=cfg.k)
+            self._sann_cfg, self._params, self._empty = sann.sann_init(
+                base, jax.random.fold_in(key, 0))
+        self._stacked = fleet.fleet_broadcast(self._empty, T)
+        # slot bookkeeping: tenant_id -> row, LRU order (oldest first),
+        # and the per-slot external ids (-1 = free) mirrored as an array
+        # for the S-ANN key schedule.
+        self._slots: dict[int, int] = {}
+        self._lru: OrderedDict[int, None] = OrderedDict()
+        self._free = list(range(T - 1, -1, -1))       # pop() -> slot 0 first
+        self._ext = np.full((T,), -1, np.int64)
+        self._cold: dict[int, object] = {}            # host-state cache
+        self._seq = 0                                 # applied ingest ops
+        self._ingest_jit: dict = {}
+        self._query_jit: dict = {}
+        # stats
+        self.activations = 0
+        self.spills = 0
+        self.splits = 0
+        # durability
+        self._wal = None
+        self._root: Optional[pathlib.Path] = None
+        self._needs_recover = False
+        self._last_snap = 0
+        if cfg.snapshot_dir is not None:
+            self._root = pathlib.Path(cfg.snapshot_dir)
+            self._wal = persist.WriteAheadLog(
+                self._root / "wal", fsync=cfg.wal_fsync)
+            self._needs_recover = (
+                persist.snapshot.latest_seq(self._root) is not None
+                or self._wal.has_records())
+
+    # --- properties --------------------------------------------------------
+
+    @property
+    def seq(self) -> int:
+        return self._seq
+
+    @property
+    def hot_tenants(self) -> list[int]:
+        with self._lock:
+            return list(self._lru)
+
+    @property
+    def known_tenants(self) -> set[int]:
+        with self._lock:
+            known = set(self._slots) | set(self._cold)
+            if self._root is not None and (self._root / "tenants").exists():
+                for d in (self._root / "tenants").glob("t_*"):
+                    known.add(int(d.name[2:]))
+            return known
+
+    # --- slot management ---------------------------------------------------
+
+    def _tenant_dir(self, tid: int) -> pathlib.Path:
+        return self._root / "tenants" / f"t_{tid}"
+
+    def _spill_seqs(self, tid: int) -> list[int]:
+        if self._root is None:
+            return []
+        d = self._tenant_dir(tid)
+        if not d.exists():
+            return []
+        out = []
+        for p in d.glob("step_*"):
+            try:
+                out.append(int(p.name.split("_")[1]))
+            except ValueError:
+                continue
+        return sorted(out)
+
+    def _spill(self, tid: int) -> None:
+        """Evict ``tid``: pull its row to host, cache it, and (durable
+        mode) write a per-tenant snapshot labelled with the current op
+        seq.  Deterministic content ⇒ an existing spill at this exact seq
+        (a replay re-eviction) is simply kept."""
+        slot = self._slots.pop(tid)
+        self._lru.pop(tid)
+        row = jax.device_get(fleet.fleet_row(self._stacked, slot))
+        self._cold[tid] = row
+        self._free.append(slot)
+        self._ext[slot] = -1
+        self.spills += 1
+        if self._root is not None:
+            d = self._tenant_dir(tid)
+            if not persist.snapshot.snapshot_path(d, self._seq).exists():
+                persist.snapshot.save(d, self._seq, row,
+                                      fsync=self.cfg.wal_fsync)
+
+    def _load_row(self, tid: int):
+        """Tenant state on activation: warm host cache, else newest spill
+        with seq <= the current op seq (the replay-safe bound — see module
+        docstring), else a fresh empty sketch."""
+        if tid in self._cold:
+            return self._cold.pop(tid)
+        best = None
+        for s in self._spill_seqs(tid):
+            if s <= self._seq:
+                best = s
+        if best is not None:
+            return persist.snapshot.load(self._tenant_dir(tid), best,
+                                         self._empty)
+        return self._empty
+
+    def _activate(self, tids: list[int]) -> None:
+        """Make every tenant in ``tids`` hot (len(tids) <= hot_slots),
+        evicting LRU victims outside ``tids`` as needed."""
+        pinned = set(tids)
+        for tid in tids:
+            if tid in self._slots:
+                self._lru.move_to_end(tid)
+                continue
+            if not self._free:
+                victim = next(t for t in self._lru if t not in pinned)
+                self._spill(victim)
+            slot = self._free.pop()
+            row = self._load_row(tid)
+            self._stacked = fleet.fleet_set_row(self._stacked, slot, row)
+            self._slots[tid] = slot
+            self._lru[tid] = None
+            self._ext[slot] = tid
+            self.activations += 1
+
+    def _plan_ops(self, tids: np.ndarray) -> list[np.ndarray]:
+        """Split a mixed batch (stream order) into index blocks whose
+        distinct tenant sets fit in ``hot_slots`` — a pure function of the
+        id sequence, so replay re-splits identically."""
+        T = self.cfg.hot_slots
+        blocks, start, seen = [], 0, set()
+        for i, t in enumerate(tids.tolist()):
+            if t not in seen:
+                if len(seen) == T:
+                    blocks.append(np.arange(start, i))
+                    start, seen = i, set()
+                seen.add(t)
+        blocks.append(np.arange(start, len(tids)))
+        if len(blocks) > 1:
+            self.splits += len(blocks) - 1
+        return blocks
+
+    # --- ingest ------------------------------------------------------------
+
+    def _get_ingest(self, cap: int):
+        kind = self.cfg.kind
+        key = None if kind == "race" else cap
+        fn = self._ingest_jit.get(key)
+        if fn is not None:
+            return fn
+        if kind == "race":
+            fn = jax.jit(lambda st, xs, tids: fleet.race_fleet_ingest(
+                st, self._params, xs, tids))
+        elif kind == "swakde":
+            fn = jax.jit(lambda st, xs, tids: fleet.swakde_fleet_ingest(
+                st, self._params, xs, tids, self._scfg, cap))
+        else:
+            def _sann(st, xs, tids, seq, exts):
+                ck = jax.random.fold_in(self._base_key, seq)
+                keys = jax.vmap(
+                    lambda e: jax.random.fold_in(ck, e))(exts)
+                return fleet.sann_fleet_ingest(
+                    st, self._params, xs, tids, keys, self._sann_cfg, cap)
+            fn = jax.jit(_sann)
+        self._ingest_jit[key] = fn
+        return fn
+
+    def _apply_chunk(self, xs: np.ndarray, tids: np.ndarray) -> None:
+        """One WAL-recorded operation: activate the chunk's tenants and
+        run one routed vmapped commit.  ``self._seq`` is the op's seq for
+        spill labels and the S-ANN key schedule."""
+        uniq = list(dict.fromkeys(tids.tolist()))     # stream order
+        self._activate(uniq)
+        slot_ids = np.asarray([self._slots[t] for t in tids.tolist()],
+                              np.int32)
+        counts = np.bincount(slot_ids, minlength=self.cfg.hot_slots)
+        cap = _next_pow2(int(counts.max()))
+        fn = self._get_ingest(cap)
+        xs_j = jnp.asarray(xs, jnp.float32)
+        t_j = jnp.asarray(slot_ids)
+        if self.cfg.kind == "sann":
+            exts = jnp.asarray(np.maximum(self._ext, 0), jnp.int32)
+            self._stacked = fn(self._stacked, xs_j, t_j,
+                               jnp.int32(self._seq), exts)
+        else:
+            self._stacked = fn(self._stacked, xs_j, t_j)
+        self._seq += 1
+
+    def ingest(self, xs, tids) -> None:
+        """Ingest one mixed chunk: ``xs (B, dim)`` float32, ``tids (B,)``
+        int tenant ids (arbitrary non-negative ints).  Splits into
+        hot-set-sized operations, WAL-logs each (durable mode), and
+        commits each with one vmapped dispatch."""
+        xs = np.asarray(xs, np.float32)
+        tids = np.asarray(tids, np.int64)
+        if xs.ndim != 2 or xs.shape[0] != tids.shape[0]:
+            raise ValueError(f"xs {xs.shape} vs tids {tids.shape}")
+        if tids.size and tids.min() < 0:
+            raise ValueError("tenant ids must be non-negative")
+        if xs.shape[0] == 0:
+            return
+        with self._lock:
+            if self._needs_recover:
+                raise RuntimeError(
+                    f"{self._root!r} holds recoverable fleet state; call "
+                    "recover() before ingesting")
+            for idx in self._plan_ops(tids):
+                cx, ct = xs[idx], tids[idx]
+                if self._wal is not None:
+                    self._wal.append(
+                        [(self._seq, persist.KIND_TENANT_CHUNK,
+                          {"xs": cx, "tids": ct})])
+                self._apply_chunk(cx, ct)
+            self._maybe_snapshot()
+
+    # --- queries -----------------------------------------------------------
+
+    def _get_query(self, name: str, fn):
+        """Jit ``fn(stacked, qs, slot_ids)`` once per query kind.  The
+        stacked state is an explicit argument — a closure would freeze the
+        state captured at first trace into the compiled executable."""
+        jfn = self._query_jit.get(name)
+        if jfn is None:
+            jfn = self._query_jit[name] = jax.jit(fn)
+        return jfn
+
+    def _query_blocks(self, qs, tids, run):
+        """Shared query driver: activate each block's tenants, run the
+        fused fleet query on slot ids, scatter results back to request
+        order.  ``run(qs_block, slot_ids)`` returns one result (or a tuple
+        of results) with leading axis B."""
+        qs = np.asarray(qs, np.float32)
+        tids = np.asarray(tids, np.int64)
+        if qs.shape[0] != tids.shape[0]:
+            raise ValueError(f"qs {qs.shape} vs tids {tids.shape}")
+        with self._lock:
+            outs = []
+            for idx in self._plan_ops(tids):
+                block = tids[idx]
+                self._activate(list(dict.fromkeys(block.tolist())))
+                slot_ids = jnp.asarray(
+                    [self._slots[t] for t in block.tolist()], jnp.int32)
+                outs.append((idx, run(jnp.asarray(qs[idx]), slot_ids)))
+        if len(outs) == 1:
+            return outs[0][1]
+        parts = [np.asarray(o) if not isinstance(o, tuple)
+                 else tuple(np.asarray(x) for x in o) for _, o in outs]
+        if isinstance(parts[0], tuple):
+            merged = []
+            for j in range(len(parts[0])):
+                buf = np.empty((len(tids),) + parts[0][j].shape[1:],
+                               parts[0][j].dtype)
+                for (idx, _), p in zip(outs, parts):
+                    buf[idx] = p[j]
+                merged.append(buf)
+            return tuple(merged)
+        buf = np.empty((len(tids),) + parts[0].shape[1:], parts[0].dtype)
+        for (idx, _), p in zip(outs, parts):
+            buf[idx] = p
+        return buf
+
+    def query(self, qs, tids):
+        """Per-request sketch estimates: RACE collision estimates,
+        SW-AKDE window Ŷ, or S-ANN (c, r)-NN `SANNResult` fields — each
+        request served from its own tenant's sketch, all in one fused
+        vmapped read."""
+        kind = self.cfg.kind
+        if kind == "race":
+            jfn = self._get_query("query", lambda st, q, t:
+                                  fleet.race_fleet_query(st, self._params,
+                                                         q, t))
+        elif kind == "swakde":
+            jfn = self._get_query("query", lambda st, q, t:
+                                  fleet.swakde_fleet_query(
+                                      st, self._params, q, t, self._scfg))
+        else:
+            jfn = self._get_query("query", lambda st, q, t: tuple(
+                fleet.sann_fleet_query(st, self._params, q, t,
+                                       self._sann_cfg)))
+            out = self._query_blocks(
+                qs, tids, lambda q, t: jfn(self._stacked, q, t))
+            return sann.SANNResult(*out)
+        return self._query_blocks(
+            qs, tids, lambda q, t: jfn(self._stacked, q, t))
+
+    def density(self, qs, tids):
+        """Normalised per-tenant KDE reads (RACE / SW-AKDE)."""
+        kind = self.cfg.kind
+        if kind == "race":
+            jfn = self._get_query("density", lambda st, q, t:
+                                  fleet.race_fleet_kde(st, self._params,
+                                                       q, t))
+        elif kind == "swakde":
+            jfn = self._get_query("density", lambda st, q, t:
+                                  fleet.swakde_fleet_kde(
+                                      st, self._params, q, t, self._scfg))
+        else:
+            raise ValueError("density() is for race/swakde fleets")
+        return self._query_blocks(
+            qs, tids, lambda q, t: jfn(self._stacked, q, t))
+
+    def query_topk(self, qs, tids, topk: int = 50):
+        """Per-tenant top-k retrieval (S-ANN fleets): ``(ids (B, k),
+        dists (B, k))`` in request order."""
+        if self.cfg.kind != "sann":
+            raise ValueError("query_topk() is for sann fleets")
+        jfn = self._get_query(f"topk{topk}", lambda st, q, t: tuple(
+            fleet.sann_fleet_query_topk(st, self._params, q, t,
+                                        self._sann_cfg, topk)))
+        return self._query_blocks(
+            qs, tids, lambda q, t: jfn(self._stacked, q, t))
+
+    # --- durability --------------------------------------------------------
+
+    def _snapshot_like(self):
+        T = self.cfg.hot_slots
+        return {"stacked": fleet.fleet_broadcast(self._empty, T),
+                "ext": np.zeros((T,), np.int32),
+                "lru": np.zeros((T,), np.int32)}
+
+    def _maybe_snapshot(self) -> None:
+        if (self._root is None
+                or self._seq - self._last_snap < self.cfg.snapshot_every):
+            return
+        self.snapshot()
+
+    def snapshot(self) -> None:
+        """Synchronous fleet snapshot (hot stacked state + slot/LRU maps)
+        at the current op seq; compacts the WAL behind it and prunes
+        per-tenant spills it supersedes."""
+        if self._root is None:
+            return
+        with self._lock:
+            lru = np.full((self.cfg.hot_slots,), -1, np.int32)
+            order = list(self._lru)
+            lru[:len(order)] = order
+            persist.snapshot.save(
+                self._root, self._seq,
+                {"stacked": self._stacked,
+                 "ext": self._ext.astype(np.int32), "lru": lru},
+                fsync=self.cfg.wal_fsync)
+            self._last_snap = self._seq
+            self._wal.compact(self._seq - 1)
+            persist.snapshot.prune(self._root, keep=2)
+            self._prune_spills(self._seq)
+
+    def _prune_spills(self, snap_seq: int) -> None:
+        """Per tenant, spills older than the newest spill with seq <=
+        ``snap_seq`` can never be loaded again (every future activation
+        bound is >= ``snap_seq``) — delete them."""
+        tdir = self._root / "tenants"
+        if not tdir.exists():
+            return
+        for d in tdir.glob("t_*"):
+            seqs = sorted(s for s in (
+                int(p.name.split("_")[1]) for p in d.glob("step_*")))
+            covered = [s for s in seqs if s <= snap_seq]
+            if len(covered) > 1:
+                import shutil
+                for s in covered[:-1]:
+                    shutil.rmtree(d / f"step_{s}", ignore_errors=True)
+
+    def recover(self) -> int:
+        """Load the newest fleet snapshot and replay the WAL tail through
+        the normal ingest path; returns the number of replayed ops.
+        Bit-identical to the uninterrupted run (see module docstring)."""
+        if self._root is None:
+            return 0
+        with self._lock:
+            if self._seq:
+                raise RuntimeError("recover() must run on a fresh fleet")
+            snap = persist.snapshot.latest_seq(self._root)
+            if snap is not None:
+                tree = persist.snapshot.load(self._root, snap,
+                                             self._snapshot_like())
+                self._stacked = jax.device_put(tree["stacked"])
+                self._ext = np.asarray(tree["ext"]).astype(np.int64)
+                self._seq = self._last_snap = snap
+                self._slots = {int(t): s for s, t in enumerate(self._ext)
+                               if t >= 0}
+                self._lru = OrderedDict(
+                    (int(t), None) for t in tree["lru"] if t >= 0)
+                self._free = [s for s in range(self.cfg.hot_slots - 1, -1, -1)
+                              if self._ext[s] < 0]
+            n = 0
+            for rec in self._wal.iter_replay(after=self._seq - 1):
+                if rec.seq != self._seq:
+                    raise RuntimeError(
+                        f"WAL gap: expected seq {self._seq}, got {rec.seq}")
+                if rec.kind != persist.KIND_TENANT_CHUNK:
+                    raise RuntimeError(f"unexpected WAL kind {rec.kind}")
+                self._apply_chunk(np.asarray(rec.arrays["xs"], np.float32),
+                                  np.asarray(rec.arrays["tids"], np.int64))
+                n += 1
+            self._wal.truncate_torn_tail()
+            self._needs_recover = False
+            jax.block_until_ready(self._stacked)
+            return n
+
+    def close(self) -> None:
+        if self._wal is not None:
+            self._wal.close()

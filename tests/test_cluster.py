@@ -378,3 +378,130 @@ def test_cluster_close_aggregates_all_worker_failures():
     assert svc.workers[1]._closed, "healthy worker must still be closed"
     svc.close()                       # retry closes the stragglers cleanly
     assert all(w._closed for w in svc.workers)
+
+
+def test_cluster_race_delta_merge_bitexact():
+    """Incremental coordinator merges: after the first full fold, each
+    refresh folds only the per-worker counter DELTAS since the last merge
+    — int32 addition is associative/commutative (wrap included), so the
+    result must equal the full `race_merge` fold bitwise, every round."""
+    import functools
+
+    from repro.core import race
+
+    svc = ClusterRACEService(RACEServiceConfig(**_RACE_KW), num_workers=3,
+                             merge_every=1)
+    data = _data(n=500, seed=4)
+    for i in range(5):
+        svc.ingest(data[i * 100:(i + 1) * 100])
+        merged = svc.merged_state()
+        full = functools.reduce(
+            race.race_merge, [w.snapshot()[0] for w in svc.workers])
+        np.testing.assert_array_equal(np.asarray(merged.counts),
+                                      np.asarray(full.counts))
+        assert int(merged.n) == int(full.n)
+    counters = svc.stats()["counters"]
+    assert counters["delta_merges"] >= 3, counters
+    assert counters["full_merges"] >= 1, counters
+
+    # base invalidation (live-set / epoch change stands in): the next
+    # refresh falls back to a FULL fold and still matches
+    svc._delta_base = None
+    full_before = counters["full_merges"]
+    svc.ingest(data[:100])
+    merged = svc.merged_state()
+    full = functools.reduce(
+        race.race_merge, [w.snapshot()[0] for w in svc.workers])
+    np.testing.assert_array_equal(np.asarray(merged.counts),
+                                  np.asarray(full.counts))
+    assert svc.stats()["counters"]["full_merges"] == full_before + 1
+    svc.close()
+
+
+# Exact-EH regime: eh_eps=0.01 keeps every (row, cell) EH exact as long as
+# no cell holds more than ~k/2 same-size buckets — normal data + k=4 SRP
+# spreads the 100-point window to ~6 points/cell, far inside the bound, so
+# cluster-vs-single comparisons below can demand bitwise equality.
+_GC_KW = dict(dim=8, L=6, W=32, window=100, eh_eps=0.01, k=4,
+              ingest_chunk=50, seed=5)
+
+
+def _gauss(n, d=8, seed=0):
+    return np.random.default_rng(seed).normal(size=(n, d)).astype(np.float32)
+
+
+def test_cluster_kde_global_clock_expiry_exact():
+    """Global-clock cluster windows expire in STREAM time: fed per-point
+    (timestamps == global positions), densities equal a single
+    global-window engine bitwise both before AND after expiry; the
+    local-clock cluster over-retains once the window saturates
+    (eh_eps=0.01 keeps every EH bucket exact, so equality is exact)."""
+    data = _gauss(150, seed=6)
+    qs = _gauss(16, seed=7)
+    single = KDEService(KDEServiceConfig(**_GC_KW))
+    gc = ClusterKDEService(KDEServiceConfig(**_GC_KW), num_workers=3,
+                           merge_every=1, global_clock=True)
+    lc = ClusterKDEService(KDEServiceConfig(**_GC_KW), num_workers=3,
+                           merge_every=1)
+    for i in range(80):                   # pre-expiry (t <= window)
+        for s in (single, gc, lc):
+            s.ingest(data[i:i + 1])
+    np.testing.assert_array_equal(gc.density(qs), single.density(qs))
+    np.testing.assert_array_equal(lc.density(qs), single.density(qs))
+    for i in range(80, 150):              # 50 points expire
+        for s in (single, gc, lc):
+            s.ingest(data[i:i + 1])
+    np.testing.assert_array_equal(gc.density(qs), single.density(qs))
+    assert not np.array_equal(lc.density(qs), single.density(qs)), \
+        "local clocks (max t ~ 50 < window) must over-retain"
+    assert gc.steps == single.steps == 150
+    assert all(w.steps == 150 for w in gc.workers)
+    single.close(); gc.close(); lc.close()
+
+
+def test_kde_advance_clock_wal_recovery(tmp_path):
+    """`advance_clock` is WAL-logged (KIND_CLOCK) between chunk records
+    and replays in order: recovery reproduces the advanced clock and the
+    post-advance densities bitwise."""
+    kw = dict(_GC_KW, snapshot_dir=str(tmp_path), snapshot_every=1000)
+    data = _gauss(90, seed=8)
+    qs = _gauss(12, seed=9)
+    svc = KDEService(KDEServiceConfig(**kw))
+    svc.ingest(data[:60])
+    svc.advance_clock(130)                # expires most of the first 60
+    svc.ingest(data[60:])
+    ref, steps = svc.density(qs), svc.steps
+    assert steps == 160                   # max-monotone: 130 + 30
+    svc.close()
+
+    rec = KDEService(KDEServiceConfig(**kw))
+    assert rec.recover() > 0
+    assert rec.steps == steps
+    np.testing.assert_array_equal(rec.density(qs), ref)
+    # monotone: advancing backwards is a no-op
+    rec.advance_clock(10)
+    assert rec.steps == steps
+    rec.close()
+
+
+def test_cluster_kde_global_clock_durable_recovery(tmp_path):
+    """A durable global-clock cluster recovers bit-identically: per-worker
+    WALs interleave chunk and KIND_CLOCK records, and the coordinator's
+    logical clock is restored from the replayed worker clocks."""
+    cfg = KDEServiceConfig(**dict(_GC_KW, snapshot_dir=str(tmp_path),
+                                  snapshot_every=1000))
+    data = _gauss(120, seed=10)
+    qs = _gauss(10, seed=11)
+    svc = ClusterKDEService(cfg, num_workers=2, merge_every=1,
+                            global_clock=True)
+    for i in range(0, 120, 10):
+        svc.ingest(data[i:i + 10])
+    before, steps = svc.density(qs), svc.steps
+    svc.close()
+
+    rec = ClusterKDEService(cfg, num_workers=2, merge_every=1,
+                            global_clock=True)
+    assert rec.recover() > 0
+    assert rec.steps == steps and rec._global_steps == steps
+    np.testing.assert_array_equal(rec.density(qs), before)
+    rec.close()

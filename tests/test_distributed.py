@@ -726,3 +726,58 @@ def test_sharded_sann_recovery_matches_single_run():
         print("SHARDED_RECOVERY_OK")
     """)
     assert "SHARDED_RECOVERY_OK" in out
+
+
+def test_sharded_fleet_matches_single_device():
+    """Tenant-axis fleet sharding: a stacked [T] fleet split over 8 shards
+    (T/8 whole sketches per device, params replicated, routing local)
+    ingests a mixed chunk and answers mixed-tenant queries bit-identically
+    to the unsharded vmapped fleet."""
+    out = _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core import fleet, lsh, race, swakde
+        from repro.parallel import sketch_sharding as ss
+
+        T, d = 16, 10
+        ctx = ss.make_sketch_ctx(ss.make_sketch_mesh(8))
+        rng = np.random.default_rng(0)
+        xs = jnp.asarray(rng.normal(size=(200, d)).astype(np.float32))
+        tids = jnp.asarray(rng.integers(0, T, size=200), jnp.int32)
+        qs = jnp.asarray(rng.normal(size=(30, d)).astype(np.float32))
+        qt = jnp.asarray(rng.integers(0, T, size=30), jnp.int32)
+
+        # RACE fleet
+        params = lsh.init_srp(jax.random.PRNGKey(0), d, L=6, k=3,
+                              n_buckets=32)
+        ref = fleet.race_fleet_ingest(
+            fleet.fleet_broadcast(race.race_init(6, 32), T), params, xs,
+            tids)
+        st, p = ss.shard_fleet(
+            fleet.fleet_broadcast(race.race_init(6, 32), T), params, ctx)
+        st = ss.sharded_race_fleet_ingest(st, p, xs, tids, ctx)
+        assert (np.asarray(st.counts) == np.asarray(ref.counts)).all()
+        assert (np.asarray(st.n) == np.asarray(ref.n)).all()
+        np.testing.assert_array_equal(
+            np.asarray(ss.sharded_race_fleet_query(st, p, qs, qt, ctx)),
+            np.asarray(fleet.race_fleet_query(ref, params, qs, qt)))
+
+        # SW-AKDE fleet (window < per-tenant stream: expiry crosses shards)
+        cfg = swakde.SWAKDEConfig(L=4, W=32, window=8, eh_eps=0.2)
+        sp = lsh.init_pstable(jax.random.PRNGKey(1), d, 4, 2, 1.0, 32)
+        cap = int(np.bincount(np.asarray(tids), minlength=T).max())
+        sref = fleet.swakde_fleet_ingest(
+            fleet.fleet_broadcast(swakde.swakde_init(cfg), T), sp, xs,
+            tids, cfg, cap)
+        sst, spp = ss.shard_fleet(
+            fleet.fleet_broadcast(swakde.swakde_init(cfg), T), sp, ctx)
+        sst = ss.sharded_swakde_fleet_ingest(sst, spp, xs, tids, cfg, cap,
+                                             ctx)
+        for a, b in zip(jax.tree.leaves(sst), jax.tree.leaves(sref)):
+            assert (np.asarray(a) == np.asarray(b)).all()
+        np.testing.assert_array_equal(
+            np.asarray(ss.sharded_swakde_fleet_query(sst, spp, qs, qt, cfg,
+                                                     ctx)),
+            np.asarray(fleet.swakde_fleet_query(sref, sp, qs, qt, cfg)))
+        print("FLEET_SHARDED_OK")
+    """)
+    assert "FLEET_SHARDED_OK" in out

@@ -1,0 +1,443 @@
+"""Multi-tenant sketch fleets (repro.core.fleet + repro.serve.tenant_fleet):
+
+  * tenant-routed vmapped ingest and fused queries are BIT-IDENTICAL to a
+    per-tenant loop of the existing single-sketch paths, for all three
+    sketches — including RACE counter saturation territory, S-ANN
+    ring-wrap/eviction and EH expiry at tenant boundaries;
+  * the `sann_row_keys` schedule is prefix-stable (the property the padded
+    fleet Bernoulli draws rely on);
+  * the `TenantFleet` LRU hot set: spill → reactivate round-trips are
+    bit-identical, durable fleets recover bit-identically from
+    snapshot + tenant-tagged WAL + per-tenant spills;
+  * hypothesis fuzz over mixed-tenant chunk compositions, skewed
+    (single-hot-tenant) included.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fleet, race, sann, swakde
+from repro.core.lsh import hash_points, init_pstable, init_srp
+from repro.serve.tenant_fleet import TenantFleet, TenantFleetConfig
+
+
+def _mixed(T, n, d, seed=0, probs=None):
+    """One mixed chunk: xs (n, d) and per-point tenant ids drawn from
+    ``probs`` (uniform by default)."""
+    rng = np.random.default_rng(seed)
+    xs = rng.normal(size=(n, d)).astype(np.float32)
+    tids = rng.choice(T, size=n, p=probs).astype(np.int64)
+    return xs, tids
+
+
+def _leaves_equal(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# --------------------------------------------------------------------------
+# core.fleet vs per-tenant oracle loops
+# --------------------------------------------------------------------------
+
+
+def test_race_fleet_bitexact_vs_per_tenant_loop():
+    T, d, L, W = 4, 6, 5, 32
+    params = init_srp(jax.random.PRNGKey(0), d, L, 3, W)
+    stacked = fleet.fleet_broadcast(race.race_init(L, W), T)
+    oracle = [race.race_init(L, W) for _ in range(T)]
+    for chunk in range(3):
+        xs, tids = _mixed(T, 70, d, seed=chunk)
+        stacked = fleet.race_fleet_ingest(stacked, params,
+                                          jnp.asarray(xs),
+                                          jnp.asarray(tids, jnp.int32))
+        for t in range(T):
+            sub = jnp.asarray(xs[tids == t])
+            if sub.shape[0]:
+                oracle[t] = race.race_commit_chunk(
+                    oracle[t], race.race_prepare_chunk(params, sub, W))
+    _leaves_equal(stacked, fleet.fleet_stack(oracle))
+
+    qs, qt = _mixed(T, 25, d, seed=99)
+    got = fleet.race_fleet_query(stacked, params, jnp.asarray(qs),
+                                 jnp.asarray(qt, jnp.int32))
+    want = np.empty(25, np.float32)
+    for t in range(T):
+        m = qt == t
+        if m.any():
+            want[m] = np.asarray(
+                race.race_query_batch(oracle[t], params, jnp.asarray(qs[m])))
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+    kde = fleet.race_fleet_kde(stacked, params, jnp.asarray(qs),
+                               jnp.asarray(qt, jnp.int32))
+    for t in range(T):
+        m = qt == t
+        if m.any():
+            want[m] = np.asarray(got)[m] / max(int(oracle[t].n), 1)
+    np.testing.assert_array_equal(np.asarray(kde), want)
+
+
+def test_swakde_fleet_bitexact_with_expiry_at_tenant_boundaries():
+    """window < per-tenant stream: EH buckets expire at different clocks
+    per tenant row; the vmapped commit must still match the per-tenant
+    `swakde_update_chunk` loop bitwise."""
+    T, d = 3, 5
+    cfg = swakde.SWAKDEConfig(L=4, W=32, window=16, eh_eps=0.2)
+    params = init_pstable(jax.random.PRNGKey(1), d, cfg.L, 2, 1.0, cfg.W)
+    stacked = fleet.fleet_broadcast(swakde.swakde_init(cfg), T)
+    oracle = [swakde.swakde_init(cfg) for _ in range(T)]
+    # skew: tenant 0 hot — its window saturates and expires, tenant 2 cold
+    for chunk in range(4):
+        xs, tids = _mixed(T, 60, d, seed=10 + chunk,
+                          probs=[0.7, 0.2, 0.1])
+        cap = int(np.bincount(tids, minlength=T).max())
+        stacked = fleet.swakde_fleet_ingest(
+            stacked, params, jnp.asarray(xs), jnp.asarray(tids, jnp.int32),
+            cfg, cap)
+        for t in range(T):
+            sub = jnp.asarray(xs[tids == t])
+            if sub.shape[0]:
+                oracle[t] = swakde.swakde_update_chunk(
+                    oracle[t], params, sub, cfg)
+    _leaves_equal(stacked, fleet.fleet_stack(oracle))
+    assert int(oracle[0].t) > cfg.window, "tenant 0 must actually expire"
+
+    qs, qt = _mixed(T, 20, d, seed=77)
+    got = fleet.swakde_fleet_query(stacked, params, jnp.asarray(qs),
+                                   jnp.asarray(qt, jnp.int32), cfg)
+    kde = fleet.swakde_fleet_kde(stacked, params, jnp.asarray(qs),
+                                 jnp.asarray(qt, jnp.int32), cfg)
+    for t in range(T):
+        m = qt == t
+        if m.any():
+            np.testing.assert_array_equal(
+                np.asarray(got)[m],
+                np.asarray(swakde.swakde_query_batch(
+                    oracle[t], params, jnp.asarray(qs[m]), cfg)))
+            denom = max(min(int(oracle[t].t), cfg.window), 1)
+            np.testing.assert_array_equal(np.asarray(kde)[m],
+                                          np.asarray(got)[m] / denom)
+
+
+def test_sann_fleet_bitexact_with_ring_wrap():
+    """eta > 0 (keys matter) and capacity 64 with ~90 kept points per
+    tenant: the ring wraps and evicts.  The padded fleet draws must equal
+    the unpadded per-tenant `sann_prepare_chunk` draws (prefix-stable
+    `sann_row_keys`), so whole states — stamps, ring pointers, tables —
+    match bitwise."""
+    T, d = 3, 4
+    base = sann.SANNConfig(dim=d, n_max=16, eta=0.3, r=0.5, c=2.0, w=1.0,
+                           L=4, k=2)
+    cfg, params, empty = sann.sann_init(base, jax.random.PRNGKey(2))
+    stacked = fleet.fleet_broadcast(empty, T)
+    oracle = [empty for _ in range(T)]
+    key = jax.random.PRNGKey(3)
+    for chunk in range(5):
+        xs, tids = _mixed(T, 120, d, seed=20 + chunk)
+        cap = int(np.bincount(tids, minlength=T).max())
+        ck = jax.random.fold_in(key, chunk)
+        keys = jnp.stack([jax.random.fold_in(ck, t) for t in range(T)])
+        stacked = fleet.sann_fleet_ingest(
+            stacked, params, jnp.asarray(xs), jnp.asarray(tids, jnp.int32),
+            keys, cfg, cap)
+        for t in range(T):
+            sub = jnp.asarray(xs[tids == t])
+            if sub.shape[0]:
+                oracle[t] = sann.sann_commit_chunk(
+                    oracle[t],
+                    sann.sann_prepare_chunk(params, sub, keys[t], cfg), cfg)
+    _leaves_equal(stacked, fleet.fleet_stack(oracle))
+    assert any(int(s.n_seen) > cfg.capacity for s in oracle), \
+        "stream must lap the ring"
+
+    qs, qt = _mixed(T, 15, d, seed=55)
+    res = fleet.sann_fleet_query(stacked, params, jnp.asarray(qs),
+                                 jnp.asarray(qt, jnp.int32), cfg)
+    ids, dists = fleet.sann_fleet_query_topk(
+        stacked, params, jnp.asarray(qs), jnp.asarray(qt, jnp.int32), cfg,
+        topk=8)
+    for t in range(T):
+        m = qt == t
+        if not m.any():
+            continue
+        want = sann.sann_query_batch(oracle[t], params, jnp.asarray(qs[m]),
+                                     cfg)
+        for a, b in zip(res, want):
+            np.testing.assert_array_equal(np.asarray(a)[m], np.asarray(b))
+        wi, wd = sann.sann_query_topk_batch(oracle[t], params,
+                                            jnp.asarray(qs[m]), cfg, topk=8)
+        np.testing.assert_array_equal(np.asarray(ids)[m], np.asarray(wi))
+        np.testing.assert_array_equal(np.asarray(dists)[m], np.asarray(wd))
+
+
+def test_sann_row_keys_prefix_stable():
+    """The property the cap-padded fleet draws rest on: the first b keys
+    of an n-key schedule equal the b-key schedule (NOT true of
+    `jax.random.split`, whose threefry counters depend on n)."""
+    key = jax.random.PRNGKey(7)
+    full = sann.sann_row_keys(key, 64)
+    for b in (1, 5, 17, 64):
+        np.testing.assert_array_equal(np.asarray(full[:b]),
+                                      np.asarray(sann.sann_row_keys(key, b)))
+
+
+def test_route_chunk_groups_in_stream_order():
+    tids = jnp.asarray([2, 0, 2, 1, 0, 2, 5, -1], jnp.int32)  # 5/-1 dropped
+    r = fleet.route_chunk(tids, 3, 4)
+    np.testing.assert_array_equal(np.asarray(r.counts), [2, 1, 3])
+    assert np.asarray(r.take)[0, :2].tolist() == [1, 4]     # tenant 0 rows
+    assert np.asarray(r.take)[1, :1].tolist() == [3]
+    assert np.asarray(r.take)[2, :3].tolist() == [0, 2, 5]  # stream order
+    np.testing.assert_array_equal(
+        np.asarray(r.valid),
+        np.arange(4)[None, :] < np.asarray(r.counts)[:, None])
+
+
+# --------------------------------------------------------------------------
+# serve.tenant_fleet: LRU hot set, spill/recover
+# --------------------------------------------------------------------------
+
+
+def _race_oracle(tf, streams):
+    """Per-tenant single sketches built with the fleet's own params."""
+    W = tf.cfg.W
+    out = {}
+    for t, chunks in streams.items():
+        st = tf._empty
+        for xs in chunks:
+            st = race.race_commit_chunk(
+                st, race.race_prepare_chunk(tf._params, jnp.asarray(xs), W))
+        out[t] = st
+    return out
+
+
+def test_tenant_fleet_lru_spill_reactivate_bitexact():
+    """6 tenants through 3 hot slots: every chunk evicts somebody; the
+    reactivated rows must equal never-spilled single sketches bitwise."""
+    d, T = 6, 6
+    tf = TenantFleet(TenantFleetConfig(kind="race", dim=d, hot_slots=3,
+                                       L=4, k=3, W=32, seed=11))
+    streams = {t: [] for t in range(T)}
+    rng = np.random.default_rng(42)
+    for chunk in range(8):
+        # rotate a window of 3 tenants so the hot set churns
+        active = [(chunk + j) % T for j in range(3)]
+        xs = rng.normal(size=(45, d)).astype(np.float32)
+        tids = rng.choice(active, size=45)
+        tf.ingest(xs, tids)
+        for t in active:
+            sub = xs[tids == t]
+            if sub.shape[0]:
+                streams[t].append(sub)
+    assert tf.spills > 0, "LRU must actually spill"
+    oracle = _race_oracle(tf, streams)
+    qs = rng.normal(size=(30, d)).astype(np.float32)
+    qt = rng.integers(0, T, size=30)
+    got = np.asarray(tf.query(qs, qt))
+    for t in range(T):
+        m = qt == t
+        if m.any():
+            np.testing.assert_array_equal(
+                got[m], np.asarray(race.race_query_batch(
+                    oracle[t], tf._params, jnp.asarray(qs[m]))))
+        # reactivate and compare the full row state
+        tf._activate([t])
+        _leaves_equal(fleet.fleet_row(tf._stacked, tf._slots[t]), oracle[t])
+    tf.close()
+
+
+def test_tenant_fleet_swakde_expiry_and_density():
+    d, T = 5, 4
+    tf = TenantFleet(TenantFleetConfig(kind="swakde", dim=d, hot_slots=2,
+                                       L=4, k=2, W=32, window=16,
+                                       eh_eps=0.2, seed=13))
+    streams = {t: [] for t in range(T)}
+    rng = np.random.default_rng(7)
+    for chunk in range(6):
+        active = [(chunk + j) % T for j in range(2)]
+        xs = rng.normal(size=(40, d)).astype(np.float32)
+        tids = rng.choice(active, size=40)
+        tf.ingest(xs, tids)
+        for t in active:
+            sub = xs[tids == t]
+            if sub.shape[0]:
+                streams[t].append(sub)
+    oracle = {}
+    for t, chunks in streams.items():
+        st = tf._empty
+        for xs in chunks:
+            st = swakde.swakde_update_chunk(st, tf._params,
+                                            jnp.asarray(xs), tf._scfg)
+        oracle[t] = st
+    assert max(int(s.t) for s in oracle.values()) > tf._scfg.window
+    qs = rng.normal(size=(20, d)).astype(np.float32)
+    qt = rng.integers(0, T, size=20)
+    got = np.asarray(tf.query(qs, qt))
+    dens = np.asarray(tf.density(qs, qt))
+    for t in range(T):
+        m = qt == t
+        if m.any():
+            want = np.asarray(swakde.swakde_query_batch(
+                oracle[t], tf._params, jnp.asarray(qs[m]), tf._scfg))
+            np.testing.assert_array_equal(got[m], want)
+            denom = max(min(int(oracle[t].t), tf._scfg.window), 1)
+            np.testing.assert_array_equal(dens[m], want / denom)
+    tf.close()
+
+
+def test_tenant_fleet_sann_queries_and_split_ops():
+    """A single ingest call touching more tenants than hot slots splits
+    into multiple ops (stream-order) and still matches the oracle that
+    replays the same op split with the fleet's key schedule."""
+    d = 4
+    tf = TenantFleet(TenantFleetConfig(kind="sann", dim=d, hot_slots=2,
+                                       n_max=16, eta=0.3, r=0.5, c=2.0,
+                                       w=1.0, L=4, k=2, seed=17))
+    cfg = tf._sann_cfg
+    rng = np.random.default_rng(3)
+    oracle = {t: tf._empty for t in range(4)}
+    for call in range(3):
+        xs = rng.normal(size=(90, d)).astype(np.float32)
+        tids = rng.integers(0, 4, size=90)
+        # oracle replays the fleet's own op plan + key schedule
+        seq0 = tf.seq
+        plan = tf._plan_ops(tids)
+        tf.ingest(xs, tids)
+        for op, idx in enumerate(plan):
+            ck = jax.random.fold_in(tf._base_key, seq0 + op)
+            for t in np.unique(tids[idx]):
+                sub = xs[idx][tids[idx] == t]
+                key_t = jax.random.fold_in(ck, int(t))
+                oracle[t] = sann.sann_commit_chunk(
+                    oracle[t], sann.sann_prepare_chunk(
+                        tf._params, jnp.asarray(sub), key_t, cfg), cfg)
+    assert tf.splits > 0, "ops must actually split (4 tenants, 2 slots)"
+    qs = rng.normal(size=(12, d)).astype(np.float32)
+    qt = rng.integers(0, 4, size=12)
+    res = tf.query(qs, qt)
+    ids, dists = tf.query_topk(qs, qt, topk=6)
+    for t in range(4):
+        m = qt == t
+        if not m.any():
+            continue
+        want = sann.sann_query_batch(oracle[t], tf._params,
+                                     jnp.asarray(qs[m]), cfg)
+        for a, b in zip(res, want):
+            np.testing.assert_array_equal(np.asarray(a)[m], np.asarray(b))
+        wi, wd = sann.sann_query_topk_batch(oracle[t], tf._params,
+                                            jnp.asarray(qs[m]), cfg, topk=6)
+        np.testing.assert_array_equal(np.asarray(ids)[m], np.asarray(wi))
+        np.testing.assert_array_equal(np.asarray(dists)[m], np.asarray(wd))
+    tf.close()
+
+
+def test_tenant_fleet_durable_recover_bitexact(tmp_path):
+    """Crash-recover a durable fleet: snapshot + tenant-tagged WAL tail +
+    per-tenant spills rebuild every tenant's state bit-identically —
+    including tenants that were cold (spilled) at snapshot time."""
+    d, T = 6, 6
+    kw = dict(kind="race", dim=d, hot_slots=3, L=4, k=3, W=32, seed=19,
+              snapshot_dir=str(tmp_path), snapshot_every=5)
+    tf = TenantFleet(TenantFleetConfig(**kw))
+    rng = np.random.default_rng(23)
+    streams = {t: [] for t in range(T)}
+    for chunk in range(11):
+        active = [(chunk + j) % T for j in range(3)]
+        xs = rng.normal(size=(30, d)).astype(np.float32)
+        tids = rng.choice(active, size=30)
+        tf.ingest(xs, tids)
+        for t in active:
+            sub = xs[tids == t]
+            if sub.shape[0]:
+                streams[t].append(sub)
+    qs = rng.normal(size=(18, d)).astype(np.float32)
+    qt = rng.integers(0, T, size=18)
+    before = np.asarray(tf.query(qs, qt))
+    seq = tf.seq
+    tf.close()                                   # "crash" after close
+
+    tf2 = TenantFleet(TenantFleetConfig(**kw))
+    with pytest.raises(RuntimeError):
+        tf2.ingest(qs, qt)                       # must recover first
+    tf2.recover()
+    assert tf2.seq == seq
+    np.testing.assert_array_equal(np.asarray(tf2.query(qs, qt)), before)
+    oracle = _race_oracle(tf2, streams)
+    for t in range(T):
+        tf2._activate([t])
+        _leaves_equal(fleet.fleet_row(tf2._stacked, tf2._slots[t]),
+                      oracle[t])
+    assert tf2.known_tenants == set(range(T))
+    tf2.close()
+
+
+# --------------------------------------------------------------------------
+# hypothesis fuzz over mixed-tenant compositions
+# --------------------------------------------------------------------------
+
+# Guarded import (NOT importorskip: that would skip the whole module,
+# exactness tests above included) — the fuzz tests alone skip without it.
+try:
+    from hypothesis import given, strategies as st
+except ImportError:                      # pragma: no cover
+    given = None
+
+_D, _T = 4, 3
+_PARAMS = init_srp(jax.random.PRNGKey(29), _D, 4, 2, 16)
+_SCFG = swakde.SWAKDEConfig(L=4, W=16, window=8, eh_eps=0.5)
+_SPARAMS = init_pstable(jax.random.PRNGKey(31), _D, _SCFG.L, 2, 1.0,
+                        _SCFG.W)
+
+if given is not None:
+    _comp = st.one_of(
+        st.lists(st.integers(0, _T - 1), min_size=1, max_size=40),
+        # skewed: one hot tenant + a trickle of others
+        st.lists(st.sampled_from([0] * 8 + [1, 2]), min_size=1,
+                 max_size=40),
+        st.lists(st.just(1), min_size=1, max_size=40),  # single hot tenant
+    )
+else:                                    # pragma: no cover
+    def test_fuzz_requires_hypothesis():
+        pytest.skip("property tests need hypothesis")
+
+    _comp = None
+
+
+@pytest.mark.skipif(given is None, reason="needs hypothesis")
+@(given(comp=_comp, seed=st.integers(0, 5)) if given else (lambda f: f))
+def test_fuzz_race_fleet_matches_oracle(comp, seed):
+    tids = np.asarray(comp, np.int64)
+    rng = np.random.default_rng(seed)
+    xs = rng.normal(size=(len(comp), _D)).astype(np.float32)
+    stacked = fleet.fleet_broadcast(race.race_init(4, 16), _T)
+    stacked = fleet.race_fleet_ingest(stacked, _PARAMS, jnp.asarray(xs),
+                                      jnp.asarray(tids, jnp.int32))
+    for t in range(_T):
+        sub = xs[tids == t]
+        st_o = race.race_init(4, 16)
+        if sub.shape[0]:
+            st_o = race.race_commit_chunk(
+                st_o, race.race_prepare_chunk(_PARAMS, jnp.asarray(sub), 16))
+        _leaves_equal(fleet.fleet_row(stacked, t), st_o)
+
+
+@pytest.mark.skipif(given is None, reason="needs hypothesis")
+@(given(comp=_comp, seed=st.integers(0, 5)) if given else (lambda f: f))
+def test_fuzz_swakde_fleet_matches_oracle(comp, seed):
+    tids = np.asarray(comp, np.int64)
+    rng = np.random.default_rng(seed)
+    xs = rng.normal(size=(len(comp), _D)).astype(np.float32)
+    stacked = fleet.fleet_broadcast(swakde.swakde_init(_SCFG), _T)
+    cap = int(np.bincount(tids, minlength=_T).max())
+    stacked = fleet.swakde_fleet_ingest(
+        stacked, _SPARAMS, jnp.asarray(xs), jnp.asarray(tids, jnp.int32),
+        _SCFG, cap)
+    for t in range(_T):
+        sub = xs[tids == t]
+        st_o = swakde.swakde_init(_SCFG)
+        if sub.shape[0]:
+            st_o = swakde.swakde_update_chunk(st_o, _SPARAMS,
+                                              jnp.asarray(sub), _SCFG)
+        _leaves_equal(fleet.fleet_row(stacked, t), st_o)
