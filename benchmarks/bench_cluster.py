@@ -17,6 +17,10 @@ Each row also reports ``merge_us`` — the cost of one coordinator merge of
 the final worker states (what a query pays when the merged cache is stale,
 i.e. at most every ``merge_every`` worker commits).
 
+The ``rpc`` suite (``run_rpc``, ``--only rpc``) repeats the same series
+with multi-PROCESS workers behind the network front door (repro.net):
+``rpc.{sann,race}.w{N}`` rows, variant="rpc", same artifact.
+
 On the 2-core CI shape expect w2 ≈ 1.1-1.4x for S-ANN and w4 ≈ w2 (no
 spare cores); the point of the suite is the *scaling shape* and honest
 merge costs, not absolute numbers.  Steady-state methodology as in
@@ -66,7 +70,8 @@ def _merge_time(cluster, repeats: int) -> float:
     return float(np.median(ts))
 
 
-def _series(rows, name, data, make_cluster):
+def _series(rows, name, data, make_cluster, prefix="cluster",
+            variant="cluster"):
     n_points = data.shape[0]
     base_us = None
     for workers in WORKER_COUNTS:
@@ -79,10 +84,10 @@ def _series(rows, name, data, make_cluster):
         pps = n_points * 1e6 / us
         speedup = base_us / us
         derived = f"pps={pps:.0f};speedup={speedup:.2f};merge_us={merge_us:.0f}"
-        rows.append((f"cluster.{name}.w{workers}", us, derived))
+        rows.append((f"{prefix}.{name}.w{workers}", us, derived))
         _json_rows.append({
-            "name": f"cluster.{name}.w{workers}", "sketch": name,
-            "variant": "cluster", "workers": workers, "n_points": n_points,
+            "name": f"{prefix}.{name}.w{workers}", "sketch": name,
+            "variant": variant, "workers": workers, "n_points": n_points,
             "us_per_call": us, "pps": pps, "speedup": speedup,
             "merge_us": merge_us,
         })
@@ -118,3 +123,49 @@ def run(rows):
     bench_sann(rows)
     bench_race(rows)
     update_bench_json(OUT_PATH, "cluster", _json_rows, tiny=TINY)
+
+
+# --- network (multi-process) cluster: the `rpc` suite ------------------------
+#
+# Same shapes and methodology as the in-process series, but every worker
+# is a separate spawned PROCESS behind the RPC front door (repro.net) —
+# so the per-worker prepare/commit work runs on genuinely independent
+# interpreters (no GIL sharing with the coordinator), at the price of one
+# socket round trip per engine chunk.  rpc.{sann,race}.w{N} rows land in
+# the same BENCH_ingest.json with variant="rpc".  On a core-starved dev
+# shape the processes time-slice one core and absolute numbers are flat —
+# the honest comparison is rpc.wN vs cluster.wN, not wN vs w1.
+
+def bench_rpc_sann(rows):
+    from repro.net import RPCClusterRetrievalService
+    from repro.serve.retrieval import RetrievalConfig
+    N = 4096 if TINY else 32768
+    d, L, k, eta, chunk, cap = ((16, 8, 3, 0.5, 512, 8) if TINY
+                                else (32, 32, 4, 0.6, 4096, 8))
+    data = np.random.default_rng(0).uniform(0, 1, (N, d)).astype(np.float32)
+    cfg = RetrievalConfig(dim=d, n_max=N, eta=eta, r=0.5, c=2.0, w=1.0, L=L,
+                          k=k, bucket_cap=cap, ingest_chunk=chunk)
+    _series(rows, "sann", data,
+            lambda w: RPCClusterRetrievalService(cfg, num_workers=w,
+                                                 merge_every=8),
+            prefix="rpc", variant="rpc")
+
+
+def bench_rpc_race(rows):
+    from repro.net import RPCClusterRACEService
+    from repro.serve.race_service import RACEServiceConfig
+    N = 4096 if TINY else 65536
+    d, L, W, chunk = (16, 8, 32, 512) if TINY else (32, 32, 128, 4096)
+    data = np.random.default_rng(1).normal(0, 1, (N, d)).astype(np.float32)
+    cfg = RACEServiceConfig(dim=d, L=L, W=W, ingest_chunk=chunk)
+    _series(rows, "race", data,
+            lambda w: RPCClusterRACEService(cfg, num_workers=w,
+                                            merge_every=8),
+            prefix="rpc", variant="rpc")
+
+
+def run_rpc(rows):
+    _json_rows.clear()
+    bench_rpc_sann(rows)
+    bench_rpc_race(rows)
+    update_bench_json(OUT_PATH, "rpc", _json_rows, tiny=TINY)

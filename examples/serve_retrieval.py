@@ -25,11 +25,33 @@ chunk is WAL-logged at enqueue time and the engine snapshots its state in
 the background; re-running with the same DIR recovers the previous run's
 index bit-identically (snapshot + WAL-tail replay) before ingesting more.
 
+``--rpc`` demos the network cluster (`repro.net`, DESIGN.md §16) — the
+workers as separate PROCESSES behind the RPC front door:
+
+  * ``--rpc spawn`` — the coordinator spawns ``--num-workers`` worker
+    processes itself (the common one-box case);
+  * ``--rpc worker [--port P] [--worker-index W]`` — run THIS process as
+    worker W: it builds worker W's engine config (per-worker salt +
+    durability subdir, exactly what the coordinator would build) and
+    serves RPC until shutdown — e.g. in a second terminal;
+  * ``--rpc connect --peers host:port[,host:port...]`` — the coordinator
+    connects to externally-started workers.  List peers in worker-index
+    order and start every worker with the same flags as the coordinator:
+    the cluster's exactness rests on worker W running the config the
+    coordinator assumes.
+
 Run: PYTHONPATH=src python examples/serve_retrieval.py [--steps 24]
      PYTHONPATH=src python examples/serve_retrieval.py --num-shards 4
      PYTHONPATH=src python examples/serve_retrieval.py --num-workers 2
      PYTHONPATH=src python examples/serve_retrieval.py \
          --snapshot-dir /tmp/retr_snap   # run twice: 2nd run recovers
+     PYTHONPATH=src python examples/serve_retrieval.py --rpc spawn \
+         --num-workers 2                 # multi-process cluster
+     # two-terminal form:
+     PYTHONPATH=src python examples/serve_retrieval.py --rpc worker \
+         --port 7461                     # terminal 1: worker 0
+     PYTHONPATH=src python examples/serve_retrieval.py --rpc connect \
+         --peers 127.0.0.1:7461          # terminal 2: coordinator
 """
 import argparse
 import os
@@ -56,6 +78,20 @@ def parse_args():
     ap.add_argument("--max-pending", type=int, default=0,
                     help="admission control: bound queued-but-uncommitted "
                          "rows (0 = unbounded)")
+    ap.add_argument("--rpc", default=None,
+                    choices=["spawn", "worker", "connect"],
+                    help="network cluster mode: 'spawn' worker processes, "
+                         "run as a 'worker', or 'connect' to --peers")
+    ap.add_argument("--port", type=int, default=0,
+                    help="--rpc worker: listen port (0 = ephemeral, "
+                         "announced on stdout)")
+    ap.add_argument("--host", default="127.0.0.1",
+                    help="--rpc worker: listen address")
+    ap.add_argument("--worker-index", type=int, default=0,
+                    help="--rpc worker: which cluster slot this worker is")
+    ap.add_argument("--peers", default=None,
+                    help="--rpc connect: comma-separated host:port list, "
+                         "in worker-index order")
     return ap.parse_args()
 
 
@@ -81,17 +117,52 @@ def main():
     from repro.serve.retrieval import RetrievalConfig, RetrievalService
 
     cfg = registry.get_smoke_config("qwen3-4b")
-    params = model_lib.init_model(cfg, jax.random.PRNGKey(0))
-    B, S_max = args.batch, args.steps + 8
-    cache = kv_cache.init_cache(cfg, B=B, s_max=S_max)
-    step = jax.jit(serve_lib.make_serve_step(cfg))
-
     retr_cfg = RetrievalConfig(
         dim=cfg.d_model, n_max=10_000, eta=0.3, r=0.35, c=2.0,
         ingest_chunk=args.ingest_chunk, num_shards=args.num_shards,
         max_pending=args.max_pending or None,
         snapshot_dir=args.snapshot_dir)
-    if args.num_workers > 1:
+
+    if args.rpc == "worker":
+        # This process IS worker --worker-index: build that slot's engine
+        # config (per-worker salt + durability subdir — exactly what the
+        # coordinator's in-process cluster would build) and serve RPC
+        # until a coordinator sends shutdown.
+        import dataclasses
+
+        from repro.net import run_worker
+        from repro.serve.cluster import _worker_cfg
+        wcfg = _worker_cfg(retr_cfg, args.worker_index,
+                           ingest_salt=args.worker_index,
+                           batch_queries=False)
+        run_worker("retrieval", dataclasses.asdict(wcfg), host=args.host,
+                   port=args.port)
+        return
+
+    params = model_lib.init_model(cfg, jax.random.PRNGKey(0))
+    B, S_max = args.batch, args.steps + 8
+    cache = kv_cache.init_cache(cfg, B=B, s_max=S_max)
+    step = jax.jit(serve_lib.make_serve_step(cfg))
+
+    if args.rpc in ("spawn", "connect"):
+        from repro.net import RPCClusterRetrievalService, RPCConfig
+        peers = None
+        if args.rpc == "connect":
+            if not args.peers:
+                raise SystemExit("--rpc connect requires --peers")
+            peers = tuple(
+                (h, int(p)) for h, p in
+                (s.rsplit(":", 1) for s in args.peers.split(",")))
+            nw = len(peers)
+        else:
+            nw = max(args.num_workers, 2)
+        retr = RPCClusterRetrievalService(retr_cfg, num_workers=nw,
+                                          rpc=RPCConfig(peers=peers))
+        mode = (f"connected to {args.peers}" if peers
+                else f"spawned {nw} worker processes")
+        print(f"network cluster retrieval service: {mode} "
+              f"(RPC scatter-gather, merge-based coordinator)")
+    elif args.num_workers > 1:
         retr = ClusterRetrievalService(retr_cfg,
                                        num_workers=args.num_workers)
         print(f"cluster retrieval service: {args.num_workers} workers "
@@ -144,6 +215,7 @@ def main():
     mean_d = (np.asarray(res.distance)[found].mean()
               if found.any() else float("nan"))
     print(f"batched query: found={found.mean():.2f} mean_dist={mean_d:.3f}")
+    retr.close()     # --rpc: shuts workers down (incl. external --peers)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,22 @@
+"""Network-native cluster (DESIGN.md §16): sketch workers as separate
+processes behind a small length-prefixed binary RPC protocol over TCP —
+stdlib sockets only, CRC-framed messages reusing the WAL framing idiom.
+
+  * `protocol` — wire format, `Channel` (client side, versioned
+    handshake, per-call timeouts, fail-loud framing);
+  * `worker` — `WorkerServer` wrapping one engine, plus the
+    spawn/run/reap process entry points;
+  * `cluster` — `RemoteEngine` proxy + the three RPC coordinators, which
+    subclass the in-process cluster services and stay bit-exact against
+    them (tests/test_rpc_cluster.py).
+"""
+from __future__ import annotations
+
+from . import cluster, protocol, worker  # noqa: F401
+from .cluster import (RemoteEngine, RPCClusterKDEService,  # noqa: F401
+                      RPCClusterRACEService, RPCClusterRetrievalService,
+                      RPCConfig, rpc_cluster)
+from .protocol import (PROTOCOL_VERSION, Channel, ProtocolError,  # noqa: F401
+                       RemoteError)
+from .worker import (WorkerServer, build_service, reap_process,  # noqa: F401
+                     run_worker, spawn_worker)

@@ -807,3 +807,98 @@ def sharded_swakde_fleet_query(stacked: swakde.SWAKDEState, params,
                   _param_replicated_specs(params, ctx), ctx.spec(),
                   ctx.spec()),
         out_specs=ctx.spec())(stacked, params, qs, tids)
+
+
+def sharded_sann_fleet_ingest(stacked: sann.SANNState, params, xs: jax.Array,
+                              tids: jax.Array, keys: jax.Array,
+                              cfg: sann.SANNConfig, cap: int,
+                              ctx: ShardingCtx) -> sann.SANNState:
+    """Tenant-sharded S-ANN fleet ingest: the mixed chunk is replicated,
+    the per-tenant chunk keys ``keys (T, 2)`` split with the tenant axis
+    (each shard draws only its own tenants' Bernoulli keeps), and foreign
+    tenants drop to the -1 sentinel.  Bit-identical to
+    `fleet.sann_fleet_ingest` block-for-block: each shard's vmapped
+    prepare/commit sees exactly the rows, codes, and keys the unsharded
+    fleet hands that tenant block."""
+    if ctx.mesh is None:
+        return fleet.sann_fleet_ingest(stacked, params, xs, tids, keys, cfg,
+                                       cap)
+    Tl = _check_tenants(stacked.n_seen.shape[0], _num_shards(ctx))
+
+    def body(st, p, xs, tids, keys):
+        local, _ = _local_tids(tids, Tl)
+        return fleet.sann_fleet_ingest(st, p, xs, local, keys, cfg, cap)
+
+    return _smap(
+        body, ctx.mesh,
+        in_specs=(_fleet_state_specs(ctx, stacked),
+                  _param_replicated_specs(params, ctx), ctx.spec(),
+                  ctx.spec(), ctx.spec("tenants", None)),
+        out_specs=_fleet_state_specs(ctx, stacked))(stacked, params, xs,
+                                                    tids, keys)
+
+
+def sharded_sann_fleet_query_topk(stacked: sann.SANNState, params,
+                                  qs: jax.Array, tids: jax.Array,
+                                  cfg: sann.SANNConfig, ctx: ShardingCtx,
+                                  topk: int = 50):
+    """Tenant-sharded per-tenant top-k: each request's candidates come
+    from the one shard owning its tenant row; non-owners are masked to
+    exact zeros before the psum, so the combine is bit-exact for every
+    output — including the inf distance and -1 id padding (``inf + 0 =
+    inf``, ``-1 + 0 = -1``; `jnp.where` masking, never a multiply, so no
+    ``inf * 0`` NaN).  Slot ids index the request's own tenant row, so no
+    cross-shard offset is needed."""
+    if ctx.mesh is None:
+        return fleet.sann_fleet_query_topk(stacked, params, qs, tids, cfg,
+                                           topk)
+    Tl = _check_tenants(stacked.n_seen.shape[0], _num_shards(ctx))
+
+    def body(st, p, qs, tids):
+        local, owned = _local_tids(tids, Tl)
+        ids, dists = fleet.sann_fleet_query_topk(
+            st, p, qs, jnp.clip(local, 0, Tl - 1), cfg, topk)
+        ids = lax.psum(jnp.where(owned[:, None], ids, 0), SHARD_AXIS)
+        dists = lax.psum(jnp.where(owned[:, None], dists, 0.0), SHARD_AXIS)
+        return ids, dists
+
+    return _smap(
+        body, ctx.mesh,
+        in_specs=(_fleet_state_specs(ctx, stacked),
+                  _param_replicated_specs(params, ctx), ctx.spec(),
+                  ctx.spec()),
+        out_specs=(ctx.spec(), ctx.spec()))(stacked, params, qs, tids)
+
+
+def sharded_sann_fleet_query(stacked: sann.SANNState, params, qs: jax.Array,
+                             tids: jax.Array, cfg: sann.SANNConfig,
+                             ctx: ShardingCtx):
+    """Tenant-sharded per-tenant (c, r)-NN queries → `SANNResult` with (B,)
+    fields.  Same owner-masked psum as the top-k path; the boolean
+    ``found`` field rides as int32 through the psum and casts back."""
+    if ctx.mesh is None:
+        return fleet.sann_fleet_query(stacked, params, qs, tids, cfg)
+    Tl = _check_tenants(stacked.n_seen.shape[0], _num_shards(ctx))
+
+    def body(st, p, qs, tids):
+        local, owned = _local_tids(tids, Tl)
+        res = fleet.sann_fleet_query(st, p, qs, jnp.clip(local, 0, Tl - 1),
+                                     cfg)
+        return sann.SANNResult(
+            index=lax.psum(jnp.where(owned, res.index, 0), SHARD_AXIS),
+            distance=lax.psum(jnp.where(owned, res.distance, 0.0),
+                              SHARD_AXIS),
+            found=lax.psum(
+                jnp.where(owned, res.found.astype(jnp.int32), 0),
+                SHARD_AXIS).astype(bool),
+            n_candidates=lax.psum(jnp.where(owned, res.n_candidates, 0),
+                                  SHARD_AXIS),
+        )
+
+    return _smap(
+        body, ctx.mesh,
+        in_specs=(_fleet_state_specs(ctx, stacked),
+                  _param_replicated_specs(params, ctx), ctx.spec(),
+                  ctx.spec()),
+        out_specs=sann.SANNResult(*(ctx.spec(),) * 4))(stacked, params, qs,
+                                                       tids)

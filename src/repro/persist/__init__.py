@@ -19,7 +19,8 @@ from __future__ import annotations
 import dataclasses
 
 from . import faults, snapshot, wal  # noqa: F401
-from .faults import FaultError, FaultPlan, FaultSpec, InjectedIOError  # noqa: F401
+from .faults import (FaultError, FaultPlan, FaultSpec,  # noqa: F401
+                     InjectedDisconnect, InjectedIOError)
 from .wal import (KIND_CHUNK, KIND_CLOCK, KIND_DELETE,  # noqa: F401
                   KIND_TENANT_CHUNK, WALRecord, WriteAheadLog)
 

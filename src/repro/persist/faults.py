@@ -37,6 +37,24 @@ single service / the coordinator):
                       models coordinator death mid-salvage; recover()
                       resumes from the checkpointed prefix)
 
+Network sites (repro.net; fired on the *coordinator* side of each RPC —
+worker processes have no plan installed, so injection stays deterministic
+in one process — scoped ``worker_<w>/`` per remote worker):
+
+  ``net.connect``     TCP connect + protocol handshake to a worker
+  ``net.send``        one framed request, fired before any bytes go out
+                      (``drop`` here models a lost request: nothing was
+                      sent, the call is cleanly retryable)
+  ``net.recv``        one framed reply, fired after the request went out
+                      (a fault here breaks the channel — the reply may
+                      still arrive later and would desync the framing)
+
+The two network modes: ``drop`` raises a *transient* `InjectedIOError`
+(the retry-with-backoff model of a lost datagram); ``disconnect`` raises
+`InjectedDisconnect` (a `ConnectionError`: the channel is torn down and
+the failover layer rebuilds the worker).  ``delay`` at a net site models
+latency; combined with the client's RPC timeout it models a hung peer.
+
 Install with the context manager so plans never leak between tests::
 
     plan = FaultPlan([FaultSpec("worker_0/engine.commit", "crash", hit=3)])
@@ -69,6 +87,13 @@ class InjectedIOError(OSError):
         self.transient = transient
 
 
+class InjectedDisconnect(ConnectionError):
+    """An injected network disconnect (`mode="disconnect"` at a ``net.*``
+    site).  A `ConnectionError`, so the RPC channel layer treats it like a
+    real peer reset: the channel breaks and the failover layer rebuilds
+    the worker.  Never transient."""
+
+
 @dataclasses.dataclass(frozen=True)
 class FaultSpec:
     """One planned fault: at ``site`` (fnmatch glob over concrete site
@@ -80,16 +105,20 @@ class FaultSpec:
     leave partial bytes behind (WAL append only; elsewhere = crash) then
     raises; ``io_error`` raises `InjectedIOError` (``transient`` says
     whether retry is allowed to succeed later); ``delay`` sleeps
-    ``delay_s`` and lets the operation proceed."""
+    ``delay_s`` and lets the operation proceed; ``drop`` raises a
+    transient `InjectedIOError` (lost-message model, safe to retry);
+    ``disconnect`` raises `InjectedDisconnect` (peer-reset model, the
+    channel is torn down)."""
     site: str
-    mode: str                  # "crash" | "torn_tail" | "io_error" | "delay"
+    mode: str          # crash | torn_tail | io_error | delay | drop | disconnect
     hit: int = 1
     count: int = 1
     transient: bool = False
     delay_s: float = 0.0
 
     def __post_init__(self):
-        if self.mode not in ("crash", "torn_tail", "io_error", "delay"):
+        if self.mode not in ("crash", "torn_tail", "io_error", "delay",
+                             "drop", "disconnect"):
             raise ValueError(f"unknown fault mode {self.mode!r}")
         if self.hit < 1 or self.count < 1:
             raise ValueError(f"hit={self.hit}, count={self.count} (< 1)")
@@ -129,6 +158,12 @@ class FaultPlan:
         if spec.mode == "delay":
             time.sleep(spec.delay_s)
             return
+        if spec.mode == "drop":
+            raise InjectedIOError(
+                f"injected drop at {site} (hit {n})", transient=True)
+        if spec.mode == "disconnect":
+            raise InjectedDisconnect(
+                f"injected disconnect at {site} (hit {n})")
         if spec.mode == "io_error":
             raise InjectedIOError(
                 f"injected io_error at {site} (hit {n})",

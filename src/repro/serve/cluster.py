@@ -224,7 +224,17 @@ class ClusterService(_BatchedQueryMixin):
                 self._health[w] = "dead"
         self._init_query_batching(
             batch_queries, max_batch, max_wait_us,
-            default_max_batch=self.workers[0]._query_block)
+            default_max_batch=self._ref._query_block)
+
+    @property
+    def _ref(self):
+        """The *reference engine* supplying jitted query/merge functions,
+        sketch params and shape knobs for the coordinator's read path.
+        Workers share identical params (same seed), so any worker serves;
+        the in-process cluster uses worker 0.  The RPC cluster overrides
+        this with a local never-ingested template engine — remote proxies
+        have no jitted functions to borrow."""
+        return self.workers[0]
 
     @staticmethod
     def _check_cluster_dir(snapshot_dir: str, num_workers: int) -> None:
@@ -837,7 +847,7 @@ class ClusterService(_BatchedQueryMixin):
         query API (worker params are identical, so any worker's query fn
         serves the merged sketch)."""
         qs = jnp.asarray(queries, jnp.float32)
-        w0 = self.workers[0]
+        w0 = self._ref
         return w0._query_blocks(lambda b: w0._query_fn(st, b), qs)
 
     def _query_snapshot_ctx(self):
@@ -848,7 +858,7 @@ class ClusterService(_BatchedQueryMixin):
         return self.merged_snapshot()
 
     def _batch_query_block(self) -> int:
-        return self.workers[0]._query_block
+        return self._ref._query_block
 
     @property
     def sketch_bytes(self) -> int:
@@ -878,7 +888,8 @@ class ClusterRetrievalService(ClusterService):
 
     def __init__(self, cfg: RetrievalConfig, num_workers: int = 2,
                  merge_every: int = 8,
-                 failover: Optional[FailoverConfig] = None):
+                 failover: Optional[FailoverConfig] = None,
+                 make_worker: Optional[Callable] = None):
         def make(w: int) -> RetrievalService:
             # Same seed → identical LSH params (merge precondition); the
             # salt decorrelates the workers' Bernoulli keep decisions.
@@ -888,11 +899,11 @@ class ClusterRetrievalService(ClusterService):
                 _worker_cfg(cfg, w, ingest_salt=w, batch_queries=False))
 
         super().__init__(
-            make, num_workers, merge_every,
+            make_worker or make, num_workers, merge_every,
             lambda states: functools.reduce(
                 lambda a, b: ss.sharded_sann_merge(
-                    a, b, self.workers[0].params, self.workers[0].cfg,
-                    self.workers[0]._ctx),
+                    a, b, self._ref.params, self._ref.cfg,
+                    self._ref._ctx),
                 states),
             snapshot_dir=cfg.snapshot_dir,
             batch_queries=cfg.batch_queries,
@@ -906,7 +917,7 @@ class ClusterRetrievalService(ClusterService):
             return self._query_state(ctx[0], qs)
 
         def topk(ctx, qs):
-            w0 = self.workers[0]
+            w0 = self._ref
             return w0._query_blocks(lambda b: w0._topk_fn(ctx[0], b), qs)
 
         return {"cr": cr, "topk": topk}
@@ -967,13 +978,15 @@ class ClusterKDEService(ClusterService):
     def __init__(self, cfg: KDEServiceConfig, num_workers: int = 2,
                  merge_every: int = 8,
                  failover: Optional[FailoverConfig] = None,
-                 global_clock: bool = False):
+                 global_clock: bool = False,
+                 make_worker: Optional[Callable] = None):
         super().__init__(
-            lambda w: KDEService(_worker_cfg(cfg, w, batch_queries=False)),
+            make_worker or (lambda w: KDEService(
+                _worker_cfg(cfg, w, batch_queries=False))),
             num_workers, merge_every,
             lambda states: functools.reduce(
                 lambda a, b: swakde.swakde_merge(
-                    a, b, self.workers[0].sketch_cfg),
+                    a, b, self._ref.sketch_cfg),
                 states),
             snapshot_dir=cfg.snapshot_dir,
             batch_queries=cfg.batch_queries,
@@ -1086,7 +1099,7 @@ class ClusterKDEService(ClusterService):
         with self._mlock:
             if self._grid_versions == vers:
                 return self._grid
-        grid = jax.block_until_ready(self.workers[0]._grid_fn(st))
+        grid = jax.block_until_ready(self._ref._grid_fn(st))
         with self._mlock:
             self._grid, self._grid_versions = grid, vers
         return grid
@@ -1098,7 +1111,7 @@ class ClusterKDEService(ClusterService):
         qs = jnp.asarray(queries, jnp.float32)
         if self.cfg.cache_grid:
             grid = self._merged_grid(st, vers)
-            w0 = self.workers[0]
+            w0 = self._ref
             return np.asarray(w0._query_blocks(
                 lambda b: w0._grid_query_fn(grid, b), qs))
         return np.asarray(self._query_state(st, qs))
@@ -1151,9 +1164,11 @@ class ClusterRACEService(ClusterService):
 
     def __init__(self, cfg: RACEServiceConfig, num_workers: int = 2,
                  merge_every: int = 8,
-                 failover: Optional[FailoverConfig] = None):
+                 failover: Optional[FailoverConfig] = None,
+                 make_worker: Optional[Callable] = None):
         super().__init__(
-            lambda w: RACEService(_worker_cfg(cfg, w, batch_queries=False)),
+            make_worker or (lambda w: RACEService(
+                _worker_cfg(cfg, w, batch_queries=False))),
             num_workers, merge_every,
             lambda states: functools.reduce(race.race_merge, states),
             snapshot_dir=cfg.snapshot_dir,

@@ -735,7 +735,7 @@ def test_sharded_fleet_matches_single_device():
     to the unsharded vmapped fleet."""
     out = _run("""
         import jax, jax.numpy as jnp, numpy as np
-        from repro.core import fleet, lsh, race, swakde
+        from repro.core import fleet, lsh, race, sann, swakde
         from repro.parallel import sketch_sharding as ss
 
         T, d = 16, 10
@@ -778,6 +778,33 @@ def test_sharded_fleet_matches_single_device():
             np.asarray(ss.sharded_swakde_fleet_query(sst, spp, qs, qt, cfg,
                                                      ctx)),
             np.asarray(fleet.swakde_fleet_query(sref, sp, qs, qt, cfg)))
+
+        # S-ANN fleet (eta > 0: the per-tenant chunk keys shard with the
+        # tenant axis; inf/-1 top-k padding must survive the psum combine)
+        scfg = sann.SANNConfig(dim=d, n_max=16, eta=0.3, r=0.5, c=2.0,
+                               w=1.0, L=4, k=2)
+        scfg, spar, sempty = sann.sann_init(scfg, jax.random.PRNGKey(2))
+        keys = jnp.stack([jax.random.fold_in(jax.random.PRNGKey(5), t)
+                          for t in range(T)])
+        aref = fleet.sann_fleet_ingest(
+            fleet.fleet_broadcast(sempty, T), spar, xs, tids, keys, scfg,
+            cap)
+        ast, app = ss.shard_fleet(fleet.fleet_broadcast(sempty, T), spar,
+                                  ctx)
+        ast = ss.sharded_sann_fleet_ingest(ast, app, xs, tids, keys, scfg,
+                                           cap, ctx)
+        for a, b in zip(jax.tree.leaves(ast), jax.tree.leaves(aref)):
+            assert (np.asarray(a) == np.asarray(b)).all()
+        ids, dists = ss.sharded_sann_fleet_query_topk(ast, app, qs, qt,
+                                                      scfg, ctx, topk=8)
+        wi, wd = fleet.sann_fleet_query_topk(aref, spar, qs, qt, scfg,
+                                             topk=8)
+        np.testing.assert_array_equal(np.asarray(ids), np.asarray(wi))
+        np.testing.assert_array_equal(np.asarray(dists), np.asarray(wd))
+        res = ss.sharded_sann_fleet_query(ast, app, qs, qt, scfg, ctx)
+        want = fleet.sann_fleet_query(aref, spar, qs, qt, scfg)
+        for a, b in zip(res, want):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
         print("FLEET_SHARDED_OK")
     """)
     assert "FLEET_SHARDED_OK" in out

@@ -1,0 +1,228 @@
+"""RPC wire-framing failure modes (DESIGN.md §16): torn/truncated frames,
+CRC corruption, oversized payloads, and protocol-version mismatches must
+all fail LOUDLY with `ProtocolError` — never hang, never desync.
+
+Mirrors the torn-tail style of tests/test_persist.py: craft the corrupt
+bytes directly and assert the decoder refuses them.  Everything here is
+in-process (socketpairs + scripted server threads) — no worker processes,
+so the file stays in the tier-1 run.
+"""
+from __future__ import annotations
+
+import socket
+import struct
+import threading
+import time
+import zlib
+
+import numpy as np
+import pytest
+
+from repro.net import protocol as P
+
+
+def _pair():
+    a, b = socket.socketpair()
+    a.settimeout(5.0)
+    b.settimeout(5.0)
+    return a, b
+
+
+def _scripted_server(script):
+    """Listener running ``script(conn)`` on the first connection in a
+    daemon thread; returns the port."""
+    lsock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+    lsock.bind(("127.0.0.1", 0))
+    lsock.listen(1)
+    port = lsock.getsockname()[1]
+
+    def run():
+        conn, _ = lsock.accept()
+        conn.settimeout(10.0)
+        try:
+            script(conn)
+        except Exception:
+            pass
+        finally:
+            try:
+                conn.close()
+            finally:
+                lsock.close()
+
+    threading.Thread(target=run, daemon=True).start()
+    return port
+
+
+def _reply_hello(conn, version=P.PROTOCOL_VERSION):
+    mid, kind, _ = P.recv_msg(conn)
+    assert kind == P.K_HELLO
+    P.send_msg(conn, mid, P.K_OK,
+               P.encode_body({"version": version, "session": "test"}))
+
+
+# --- frame encode/decode -----------------------------------------------------
+
+def test_roundtrip_meta_and_arrays():
+    a, b = _pair()
+    xs = np.arange(12, dtype=np.float32).reshape(3, 4)
+    ids = np.array([-1, 7], dtype=np.int64)
+    P.send_msg(a, 42, P.K_INGEST,
+               P.encode_body({"kind": "topk", "n": 3},
+                             {"xs": xs, "ids": ids}))
+    mid, kind, body = P.recv_msg(b)
+    assert (mid, kind) == (42, P.K_INGEST)
+    meta, arrays = P.decode_body(body)
+    assert meta == {"kind": "topk", "n": 3}
+    assert arrays["xs"].dtype == np.float32
+    np.testing.assert_array_equal(arrays["xs"], xs)
+    np.testing.assert_array_equal(arrays["ids"], ids)
+    a.close(), b.close()
+
+
+def test_truncated_header_fails_loudly():
+    a, b = _pair()
+    a.sendall(b"\x31\x43")          # two bytes of magic, then peer dies
+    a.close()
+    with pytest.raises(P.ProtocolError, match="mid-header"):
+        P.recv_msg(b)
+    b.close()
+
+
+def test_truncated_body_fails_loudly():
+    a, b = _pair()
+    body = P.encode_body({"x": 1})
+    hdr = P._HEADER.pack(P._MAGIC, 1, P.K_OK, len(body) + 50,
+                         zlib.crc32(body))
+    a.sendall(hdr + body)           # 50 bytes short of the promise
+    a.close()
+    with pytest.raises(P.ProtocolError, match="mid-body"):
+        P.recv_msg(b)
+    b.close()
+
+
+def test_bad_magic_fails_loudly():
+    a, b = _pair()
+    body = P.encode_body({})
+    a.sendall(P._HEADER.pack(0xDEADBEEF, 1, P.K_OK, len(body),
+                             zlib.crc32(body)) + body)
+    with pytest.raises(P.ProtocolError, match="bad magic"):
+        P.recv_msg(b)
+    a.close(), b.close()
+
+
+def test_crc_corruption_fails_loudly():
+    a, b = _pair()
+    body = bytearray(P.encode_body({"v": 123}))
+    hdr = P._HEADER.pack(P._MAGIC, 9, P.K_OK, len(body), zlib.crc32(body))
+    body[-2] ^= 0x40                # flip one bit after the CRC was taken
+    a.sendall(hdr + bytes(body))
+    with pytest.raises(P.ProtocolError, match="crc mismatch"):
+        P.recv_msg(b)
+    a.close(), b.close()
+
+
+def test_oversized_body_len_rejected_before_read():
+    # A corrupt/hostile length field is refused from the header alone —
+    # no allocation, no attempt to read the (absent) payload.  A buggy
+    # decoder would block here; the socket timeout turns that into a
+    # visible failure instead of a hang.
+    a, b = _pair()
+    a.sendall(P._HEADER.pack(P._MAGIC, 1, P.K_OK, 1 << 30, 0))
+    with pytest.raises(P.ProtocolError, match="oversized frame"):
+        P.recv_msg(b, max_body=1 << 20)
+    a.close(), b.close()
+
+
+def test_send_oversized_body_rejected(monkeypatch):
+    a, b = _pair()
+    monkeypatch.setattr(P, "MAX_BODY", 64)
+    with pytest.raises(P.ProtocolError, match="exceeds MAX_BODY"):
+        P.send_msg(a, 1, P.K_OK, b"x" * 65)
+    a.close(), b.close()
+
+
+def test_decode_body_truncated_and_garbage():
+    with pytest.raises(P.ProtocolError, match="truncated"):
+        P.decode_body(b"\x01")                       # shorter than jlen
+    with pytest.raises(P.ProtocolError, match="truncated"):
+        P.decode_body(struct.pack("<I", 99) + b"{}")  # meta longer than body
+    bad_json = struct.pack("<I", 3) + b"{{{"
+    with pytest.raises(P.ProtocolError, match="not JSON"):
+        P.decode_body(bad_json)
+    good_meta = struct.pack("<I", 2) + b"{}"
+    with pytest.raises(P.ProtocolError, match="not npz"):
+        P.decode_body(good_meta + b"this is not a zip archive")
+
+
+# --- channel handshake / lockstep -------------------------------------------
+
+def test_version_mismatch_fails_loudly():
+    port = _scripted_server(lambda c: _reply_hello(c, version=999))
+    with pytest.raises(P.ProtocolError, match="version mismatch"):
+        P.Channel("127.0.0.1", port, timeout_s=5.0)
+
+
+def test_server_side_hello_check():
+    with pytest.raises(P.ProtocolError, match="version mismatch"):
+        P.check_hello({"version": 0})
+    P.check_hello({"version": P.PROTOCOL_VERSION})   # no raise
+
+
+def test_timeout_breaks_channel_and_fails_fast():
+    stall = threading.Event()
+
+    def script(conn):
+        _reply_hello(conn)
+        P.recv_msg(conn)            # swallow the next request ...
+        stall.wait(10.0)            # ... and never reply
+
+    port = _scripted_server(script)
+    ch = P.Channel("127.0.0.1", port, timeout_s=5.0)
+    t0 = time.monotonic()
+    with pytest.raises(OSError):    # socket.timeout
+        ch.call(P.K_FLUSH, timeout_s=0.3)
+    assert time.monotonic() - t0 < 4.0
+    assert ch.broken is not None
+    # The late reply could still arrive; a broken channel must refuse to
+    # pair it with the next request.
+    with pytest.raises(P.ProtocolError, match="broken"):
+        ch.call(P.K_FLUSH)
+    stall.set()
+    ch.close()
+
+
+def test_desynced_reply_breaks_channel():
+    def script(conn):
+        _reply_hello(conn)
+        mid, kind, _ = P.recv_msg(conn)
+        P.send_msg(conn, mid + 7, P.K_OK, P.encode_body({}))
+
+    port = _scripted_server(script)
+    ch = P.Channel("127.0.0.1", port, timeout_s=5.0)
+    with pytest.raises(P.ProtocolError, match="desynced reply"):
+        ch.call(P.K_FLUSH)
+    assert ch.broken is not None
+    ch.close()
+
+
+def test_remote_error_carries_failover_markers():
+    def script(conn):
+        _reply_hello(conn)
+        mid, kind, _ = P.recv_msg(conn)
+        P.send_msg(conn, mid, P.K_ERR, P.encode_body(
+            {"error": "boom", "type": "ValueError", "transient": True,
+             "wal_accepted": True}))
+        try:
+            P.recv_msg(conn)        # channel must still be usable
+        except P.ProtocolError:
+            pass
+
+    port = _scripted_server(script)
+    ch = P.Channel("127.0.0.1", port, timeout_s=5.0)
+    with pytest.raises(P.RemoteError, match="boom") as ei:
+        ch.call(P.K_FLUSH)
+    assert ei.value.remote_type == "ValueError"
+    assert ei.value.transient and ei.value.wal_accepted
+    # a clean K_ERR reply is an application failure, not a wire failure
+    assert ch.broken is None
+    ch.close()
